@@ -1,0 +1,35 @@
+"""Server-side aggregation throughput (the FedTest hot-spot the
+weighted_aggregate Pallas kernel targets on TPU; CPU numbers use the XLA
+path, the kernel itself is validated in interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, timeit
+from repro.kernels.weighted_aggregate.ops import weighted_aggregate
+from repro.utils import tree_weighted_sum
+
+
+def main(fast: bool = FAST):
+    sizes = [(8, 1 << 18), (20, 1 << 20)] if fast else \
+        [(8, 1 << 20), (20, 1 << 22), (64, 1 << 22)]
+    for C, M in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (C, M), jnp.float32)
+        w = jax.random.uniform(jax.random.PRNGKey(1), (C,))
+        fn = jax.jit(lambda x, w: weighted_aggregate(x, w, impl="naive"))
+        us = timeit(fn, x, w)
+        gbps = C * M * 4 / (us / 1e6) / 1e9
+        emit(f"aggregate/xla_C{C}_M{M}", us, f"read_GBps={gbps:.2f}")
+
+    # pytree path (stacked CNN-scale model)
+    tree = {f"l{i}": jax.random.normal(jax.random.PRNGKey(i), (12, 64, 64))
+            for i in range(8)}
+    w = jax.nn.softmax(jnp.arange(12.0))
+    fn = jax.jit(lambda t, w: tree_weighted_sum(t, w))
+    us = timeit(fn, tree, w)
+    emit("aggregate/pytree_12clients", us, "leaves=8")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Communication-cost accounting (paper Sec. V-A): orthogonal-RB uplink
+volume per round, D2D tester traffic, and the pod-side ring vs all-gather
+exchange volume for the distributed FedTest round."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.selection import rb_schedule
+
+
+def main(fast: bool = True):
+    model_bytes = 4 * get_config("fedtest-cnn").param_count()
+    for N, K in [(10, 3), (20, 5), (50, 10)]:
+        sched = rb_schedule(np.arange(K), num_users=N,
+                            model_bytes=model_bytes)
+        emit(f"comm/rb_N{N}_K{K}", 0.0,
+             f"slots={sched['num_slots']} "
+             f"uplink_MB={sched['uplink_bytes'] / 1e6:.2f} "
+             f"d2d_MB={sched['d2d_bytes'] / 1e6:.2f}")
+
+    # pod exchange volume per client for the cross-testing phase:
+    #   ring: (N-1) x model in/out per device; all-gather: (N-1) x model in
+    # but N x model peak memory. Same volume, different high-water mark.
+    for arch in ("qwen2-0.5b", "qwen3-1.7b"):
+        n = get_config(arch).param_count() * 2     # bf16
+        for N in (8, 16):
+            ring = (N - 1) * n
+            emit(f"comm/pod_ring_{arch}_N{N}", 0.0,
+                 f"exchange_GB_per_client={ring / 1e9:.2f} "
+                 f"peak_mem_models=2 allgather_peak_models={N}")
+
+
+if __name__ == "__main__":
+    main()

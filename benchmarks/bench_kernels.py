@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks (XLA paths on CPU; Pallas targets TPU and is
+validated by the interpret-mode test sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, timeit
+from repro.kernels.decode_attention.ops import _decode_xla
+from repro.kernels.flash_attention.ops import attention_xla
+from repro.kernels.ssd_scan.ops import _ssd_xla
+
+
+def main(fast: bool = FAST):
+    # flash attention (prefill-like)
+    B, S, Hq, Hkv, D = (1, 512, 8, 2, 64) if fast else (2, 2048, 8, 2, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: attention_xla(q, k, v, causal=True,
+                                               block_q=256, block_k=256))
+    us = timeit(fn, q, k, v)
+    flops = 4 * B * S * S * Hq * D
+    emit(f"flash_attention/xla_S{S}", us,
+         f"gflops={flops / (us / 1e6) / 1e9:.2f}")
+
+    # decode attention
+    T = 4096 if fast else 32768
+    kc = jax.random.normal(ks[1], (B, T, Hkv, D), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (B, T, Hkv, D), jnp.bfloat16)
+    qd = jax.random.normal(ks[0], (B, Hq, D), jnp.bfloat16)
+    lengths = jnp.full((B,), T)
+    fn = jax.jit(lambda q, k, v, l: _decode_xla(q, k, v, l, block_k=1024))
+    us = timeit(fn, qd, kc, vc, lengths)
+    kv_bytes = 2 * B * T * Hkv * D * 2
+    emit(f"decode_attention/xla_T{T}", us,
+         f"kv_GBps={kv_bytes / (us / 1e6) / 1e9:.2f}")
+
+    # SSD scan
+    Bt, S2, H, P, G, N = (1, 512, 8, 64, 1, 64) if fast else \
+        (1, 2048, 16, 64, 1, 128)
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    x = jax.random.normal(ks[0], (Bt, S2, H, P), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S2, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bt, S2, G, N), jnp.bfloat16)
+    Cm = jax.random.normal(ks[4], (Bt, S2, G, N), jnp.bfloat16)
+    Dv = jax.random.normal(ks[5], (H,))
+    fn = jax.jit(lambda *a: _ssd_xla(*a, chunk=128)[0])
+    us = timeit(fn, x, dt, A, Bm, Cm, Dv)
+    emit(f"ssd_scan/xla_S{S2}", us, f"heads={H} state={N}")
+
+
+if __name__ == "__main__":
+    main()

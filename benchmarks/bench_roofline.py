@@ -1,0 +1,46 @@
+"""Roofline summary rows derived from the dry-run artifacts
+(experiments/dryrun/*.json). Emits one row per (arch, shape) single-pod
+baseline; recomputes MODEL_FLOPS/useful ratio from the (fixed) analytic
+param counts rather than trusting the values stored in older artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.config import INPUT_SHAPES
+from repro.configs import get_config
+from repro.roofline import model_flops
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def main(fast: bool = True):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__single.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dryrun artifacts yet")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            emit(f"roofline/{rec['arch']}__{rec['shape']}", 0.0,
+                 f"status={rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        cfg = get_config(rec["arch"])
+        shape = INPUT_SHAPES[rec["shape"]]
+        mf = model_flops(cfg, shape)
+        useful = mf / rec["num_chips"] / max(
+            rec["cost"]["flops_per_device"], 1.0)
+        emit(f"roofline/{rec['arch']}__{rec['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"bottleneck={r['bottleneck']} "
+             f"compute_s={r['compute_s']:.3e} "
+             f"memory_s={r['memory_s']:.3e} "
+             f"collective_s={r['collective_s']:.3e} "
+             f"useful_ratio={useful:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+FAST = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5):
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows. Fast mode is the default
+(CPU-budget scales); set REPRO_BENCH_FULL=1 for paper-scale runs.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run kernels    # one suite
+"""
+import sys
+import time
+
+SUITES = [
+    ("kernels", "benchmarks.bench_kernels"),          # kernel micro
+    ("aggregation", "benchmarks.bench_aggregation"),  # FedTest server op
+    ("comm", "benchmarks.bench_comm"),                # Sec. V-A accounting
+    ("roofline", "benchmarks.bench_roofline"),        # dry-run artifacts
+    ("score_power", "benchmarks.bench_score_power"),  # Sec. V-B ablation
+    ("testers", "benchmarks.bench_testers"),          # Sec. V-C ablation
+    ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for name, module in SUITES:
+        if want and name not in want:
+            continue
+        t0 = time.time()
+        mod = __import__(module, fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness alive per-suite
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+        print(f"# suite {name} done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

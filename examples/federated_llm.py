@@ -1,0 +1,72 @@
+"""Federated fine-tuning of an assigned LM backbone with FedTest.
+
+Each client holds a topic-skewed shard of a synthetic bigram language;
+clients cross-test each other's checkpoints on their own held-out text
+(token accuracy as the FedTest score), the server aggregates with the
+moving-average accuracy^4 weights, and at the end the global model serves
+greedy continuations.
+
+  PYTHONPATH=src python examples/federated_llm.py --arch qwen2-0.5b
+  PYTHONPATH=src python examples/federated_llm.py --arch mamba2-2.7b \\
+      --malicious 1
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, TrainConfig, reduce_for_smoke
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.launch.train import make_lm_federated_dataset
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--users", type=int, default=4)
+    ap.add_argument("--malicious", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=97)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_config(args.arch)).replace(
+        dtype="float32", vocab_size=args.vocab)
+    model = build_model(cfg)
+    print(f"federated fine-tune: {cfg.name} "
+          f"({model.param_count():,} params), "
+          f"{args.users} clients, {args.malicious} malicious")
+
+    data = make_lm_federated_dataset(args.vocab, args.users, seq_len=32,
+                                     seqs_per_user=48)
+    fed = FedConfig(num_users=args.users, num_testers=2,
+                    num_malicious=args.malicious, local_steps=8,
+                    attack="random_weights")
+    tc = TrainConfig(optimizer="adamw", lr=2e-3, schedule="constant",
+                     batch_size=16, grad_clip=1.0, remat=False)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=32)
+
+    state, hist = trainer.run(jax.random.PRNGKey(0), data,
+                              rounds=args.rounds, verbose=True)
+
+    # serve the federated model: greedy continuation of a held-out prefix
+    prefix = data.global_x[:1, :12]
+    _, cache = model.prefill(state.global_params, {"tokens": prefix},
+                             cache_len=32)
+    toks = prefix[:, -1:]
+    generated = []
+    for _ in range(12):
+        logits, cache = model.decode_step(state.global_params, cache, toks)
+        toks = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        generated.append(int(toks[0, 0]))
+    truth = data.global_x[0, 12:24].tolist()
+    hits = sum(g == t for g, t in zip(generated, truth))
+    print(f"\nprefix    : {prefix[0].tolist()}")
+    print(f"generated : {generated}")
+    print(f"truth     : {truth}")
+    print(f"greedy continuation matches {hits}/12 ground-truth tokens")
+
+
+if __name__ == "__main__":
+    main()

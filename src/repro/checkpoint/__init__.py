@@ -1,0 +1,4 @@
+from repro.checkpoint.serialization import save_pytree, load_pytree
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

@@ -1,0 +1,46 @@
+"""Round-state checkpoint manager for federated training runs."""
+from __future__ import annotations
+
+import glob
+import os
+import re
+from typing import Any, Optional
+
+from repro.checkpoint.serialization import load_pytree, save_pytree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, state: Any) -> str:
+        path = self._path(step)
+        save_pytree(state, path)
+        self._gc()
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for f in glob.glob(os.path.join(self.directory, "ckpt_*.npz")):
+            m = re.search(r"ckpt_(\d+)\.npz$", f)
+            if m:
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load_pytree(template, self._path(step))
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(re.search(r"ckpt_(\d+)\.npz$", f).group(1))
+            for f in glob.glob(os.path.join(self.directory, "ckpt_*.npz")))
+        for s in steps[:-self.keep]:
+            os.remove(self._path(s))

@@ -1,0 +1,55 @@
+"""Pytree <-> .npz serialization (path-keyed, restores exact structure)."""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for i, (p, leaf) in enumerate(flat):
+        k = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy .npz cannot store ml_dtypes (bfloat16 etc.); bf16 -> f32
+            # is exact and the loader casts back to the template dtype.
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        arrays[k] = arr
+        keys.append(_path_str(p))
+    meta = json.dumps({"treedef": str(treedef), "paths": keys})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(meta.encode(), dtype=np.uint8),
+                 **arrays)
+
+
+def load_pytree(template: Any, path: str) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with np.load(path) as z:
+        flat_t, treedef = jax.tree_util.tree_flatten(template)
+        leaves = []
+        for i, t in enumerate(flat_t):
+            arr = z[f"leaf_{i}"]
+            leaves.append(jnp.asarray(arr).astype(t.dtype)
+                          if hasattr(t, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

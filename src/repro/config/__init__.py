@@ -1,0 +1,30 @@
+"""Typed configuration system for the repro framework.
+
+Four config families compose a run:
+
+* :class:`ModelConfig`   — architecture hyper-parameters (one per assigned arch).
+* :class:`FedConfig`     — the paper's federated-learning knobs (FedTest).
+* :class:`TrainConfig`   — optimizer / schedule / step counts.
+* :class:`MeshConfig`    — device-mesh shape and axis names.
+
+plus :class:`InputShape`, the four assigned workload shapes.
+"""
+from repro.config.base import (
+    FedConfig,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    TrainConfig,
+    INPUT_SHAPES,
+    reduce_for_smoke,
+)
+
+__all__ = [
+    "ModelConfig",
+    "FedConfig",
+    "TrainConfig",
+    "MeshConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "reduce_for_smoke",
+]

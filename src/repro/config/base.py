@@ -1,0 +1,282 @@
+"""Core config dataclasses.
+
+Everything is a frozen dataclass so configs are hashable and safe to close
+over in jitted functions. ``ModelConfig`` covers all six architecture
+families via optional fields; family-specific validation lives in
+``__post_init__``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters.
+
+    Families:
+      * ``dense``  — decoder-only transformer (GQA, optional qk-norm / qkv-bias).
+      * ``moe``    — decoder-only with per-layer top-k mixture-of-experts FFN.
+      * ``ssm``    — attention-free Mamba2 (SSD) stack.
+      * ``hybrid`` — Jamba-style Mamba+attention interleave with periodic MoE.
+      * ``encdec`` — Whisper-style encoder-decoder (audio frontend stubbed).
+      * ``vlm``    — decoder-only consuming stubbed patch embeddings + text.
+      * ``cnn``    — the paper's own 3-conv/2-fc CIFAR classifier.
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # --- attention details -------------------------------------------------
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    sliding_window: Optional[int] = None  # None = full causal attention
+    max_position: int = 131_072
+
+    # --- mixture of experts -------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_every: int = 1          # a layer uses MoE FFN iff layer_idx % moe_every == moe_offset
+    moe_offset: int = 0
+    router_aux_coef: float = 0.01
+
+    # --- state-space (Mamba2 / SSD) ------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+
+    # --- hybrid interleave (Jamba) -------------------------------------------
+    attn_every: int = 0         # attention layer iff layer_idx % attn_every == attn_offset
+    attn_offset: int = 0
+
+    # --- encoder-decoder (Whisper) -------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0        # fixed 1500 mel-frame positions for whisper
+    decoder_max_position: int = 0
+
+    # --- modality frontend stub ----------------------------------------------
+    frontend: Optional[str] = None  # 'audio' | 'vision' | None
+    num_patches: int = 0            # vlm: image patch embeddings per sample
+
+    # --- cnn (paper's model) ---------------------------------------------------
+    image_size: int = 0
+    image_channels: int = 0
+    cnn_channels: Tuple[int, ...] = ()
+    cnn_hidden: int = 0
+    num_classes: int = 0
+
+    # --- numerics / misc -------------------------------------------------------
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""            # citation for the config (paper / model card)
+
+    def __post_init__(self) -> None:
+        _require(self.family in
+                 ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "cnn"),
+                 f"unknown family {self.family!r}")
+        if self.family in ("dense", "moe", "encdec", "vlm", "hybrid"):
+            _require(self.num_heads > 0 and self.num_kv_heads > 0,
+                     f"{self.name}: attention archs need heads")
+            _require(self.num_heads % self.num_kv_heads == 0,
+                     f"{self.name}: num_heads must be divisible by num_kv_heads")
+        if self.family in ("moe",):
+            _require(self.num_experts > 0 and self.num_experts_per_tok > 0,
+                     f"{self.name}: moe needs experts")
+        if self.family == "ssm":
+            _require(self.ssm_state > 0, f"{self.name}: ssm needs state size")
+        if self.family == "hybrid":
+            _require(self.attn_every > 0, f"{self.name}: hybrid needs attn_every")
+        if self.family == "encdec":
+            _require(self.encoder_layers > 0 and self.encoder_seq > 0,
+                     f"{self.name}: encdec needs encoder dims")
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def uses_attention(self, layer_idx: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid":
+            return layer_idx % self.attn_every == self.attn_offset
+        return True
+
+    def uses_moe(self, layer_idx: int) -> bool:
+        if not self.has_moe:
+            return False
+        return layer_idx % self.moe_every == self.moe_offset
+
+    def supports_long_context(self) -> bool:
+        """True if the arch can serve a 524k-token KV without quadratic attn.
+
+        SSM is trivially sub-quadratic; hybrid bounds attention; dense/moe/vlm
+        run only via the sliding-window variant (applied by the launcher);
+        encdec (whisper) cannot — its decoder has a hard 448-position ceiling.
+        """
+        return self.family != "encdec"
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact for our implementation)."""
+        from repro.models.params import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.params import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned workload shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    def __post_init__(self) -> None:
+        _require(self.kind in ("train", "prefill", "decode"), self.kind)
+
+
+INPUT_SHAPES: Mapping[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """The paper's knobs (Sec. III, Algorithm 1)."""
+
+    num_users: int = 20            # N
+    num_testers: int = 5           # K, reselected every round (Alg.1 l.16)
+    num_malicious: int = 0         # M
+    rounds: int = 100              # n, max global iterations
+    local_steps: int = 20          # SGD steps per user per round
+    score_power: float = 4.0       # accuracy raised to this power (Sec. V-B)
+    power_warmup_rounds: int = 2   # rounds at power=1 first (Sec. V-B idea)
+    score_decay: float = 0.5       # weighted moving average: s <- (1-d)*a^p + d*s
+    aggregator: str = "fedtest"    # 'fedtest' | 'fedavg' | 'accuracy_based'
+    attack: str = "random_weights"  # malicious model: paper uses random weights
+    attack_scale: float = 1.0
+    lying_testers: int = 0          # testers reporting fake accuracies (Sec. V-C)
+    server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
+    participation: float = 1.0     # R/N; paper sets R = N
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        _require(0 < self.num_testers <= self.num_users,
+                 "need 0 < K <= N")
+        _require(self.num_malicious < self.num_users, "M < N")
+        _require(self.aggregator in ("fedtest", "fedavg", "accuracy_based"),
+                 self.aggregator)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"       # 'sgd' | 'momentum' | 'adam' | 'adamw'
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    momentum: float = 0.9
+    schedule: str = "cosine"       # 'constant' | 'cosine' | 'linear_warmup_cosine'
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    grad_clip: float = 1.0
+    batch_size: int = 32
+    remat: bool = True             # activation checkpointing over layer scan
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    def __post_init__(self) -> None:
+        _require(len(self.shape) == len(self.axes), "shape/axes mismatch")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced variant of the same family for CPU smoke tests.
+
+    Mandated bounds: <=2 layers, d_model <= 512, <= 4 experts.
+    """
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        num_layers=min(cfg.num_layers, 2),
+        d_model=min(cfg.d_model, 256),
+        vocab_size=min(cfg.vocab_size, 512) if cfg.vocab_size else 0,
+        max_position=4096,
+    )
+    if cfg.num_heads:
+        heads = min(cfg.num_heads, 4)
+        kv = min(cfg.num_kv_heads, heads)
+        while heads % kv:
+            kv -= 1
+        kw.update(num_heads=heads, num_kv_heads=kv, head_dim=32)
+    if cfg.d_ff:
+        kw.update(d_ff=min(cfg.d_ff, 512))
+    if cfg.num_experts:
+        kw.update(num_experts=min(cfg.num_experts, 4),
+                  num_experts_per_tok=min(cfg.num_experts_per_tok, 2))
+    if cfg.ssm_state:
+        kw.update(ssm_state=min(cfg.ssm_state, 16), ssm_head_dim=32,
+                  ssm_chunk=32)
+    if cfg.family == "hybrid":
+        # keep one attention layer in the 2-layer smoke stack
+        kw.update(attn_every=2, attn_offset=1, moe_every=cfg.moe_every)
+    if cfg.family == "encdec":
+        kw.update(encoder_layers=min(cfg.encoder_layers, 2), encoder_seq=64,
+                  decoder_max_position=128)
+    if cfg.family == "vlm":
+        kw.update(num_patches=min(cfg.num_patches, 16))
+    if cfg.family == "cnn":
+        kw.update(cnn_channels=tuple(min(c, 16) for c in cfg.cnn_channels),
+                  cnn_hidden=min(cfg.cnn_hidden, 64))
+    return cfg.replace(**kw)

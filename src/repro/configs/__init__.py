@@ -1,0 +1,9 @@
+"""Assigned architecture configs (+ the paper's own CNN).
+
+Each module defines ``config() -> ModelConfig`` with the exact assigned
+hyper-parameters, citing its source. ``get_config(arch_id)`` resolves the
+CLI ``--arch`` id (dashes allowed) to the config.
+"""
+from repro.configs.registry import ARCH_IDS, get_config, list_configs
+
+__all__ = ["get_config", "list_configs", "ARCH_IDS"]

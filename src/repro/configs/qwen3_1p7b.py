@@ -1,0 +1,24 @@
+"""qwen3-1.7b [dense] — qk_norm, GQA. [hf:Qwen/Qwen3-8B family card]
+
+Assigned: 28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b",
+        family="dense",
+        num_layers=28,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=6144,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        max_position=131_072,
+        tie_embeddings=True,
+        source="hf:Qwen/Qwen3-8B family model card (1.7B size)",
+    )

@@ -1,0 +1,35 @@
+"""Arch-id -> ModelConfig registry."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+# CLI id -> module name under repro.configs
+ARCH_IDS: Dict[str, str] = {
+    "whisper-base": "whisper_base",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "qwen2-72b": "qwen2_72b",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "pixtral-12b": "pixtral_12b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    # the paper's own model (CIFAR-10 CNN, Sec. III)
+    "fedtest-cnn": "fedtest_cnn",
+    "fedtest-cnn-mnist": "fedtest_cnn_mnist",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.config()
+
+
+def list_configs() -> List[str]:
+    return sorted(ARCH_IDS)

@@ -1,0 +1,24 @@
+"""FedTest — the paper's contribution (Sec. III, Algorithm 1).
+
+* ``scoring``       — weighted-moving-average accuracy^p scores (Sec. III + V-B).
+* ``aggregation``   — FedTest score-weighted aggregation + the two baselines
+  the paper compares against (FedAvg, server-side accuracy-based).
+* ``cross_testing`` — testers evaluate every client model on their own data.
+* ``attacks``       — malicious-user model suite (paper: random weights).
+* ``selection``     — rotating tester selection + orthogonal-RB schedule.
+* ``round``         — the federated round engine (Algorithm 1).
+"""
+from repro.core.scoring import ScoreState, init_scores, update_scores, score_weights
+from repro.core.aggregation import (
+    fedavg_weights, accuracy_based_weights, aggregate_models)
+from repro.core.attacks import apply_attacks, ATTACKS
+from repro.core.cross_testing import cross_test_accuracies
+from repro.core.selection import select_testers, rb_schedule
+from repro.core.round import FederatedTrainer, RoundState
+
+__all__ = [
+    "ScoreState", "init_scores", "update_scores", "score_weights",
+    "fedavg_weights", "accuracy_based_weights", "aggregate_models",
+    "apply_attacks", "ATTACKS", "cross_test_accuracies",
+    "select_testers", "rb_schedule", "FederatedTrainer", "RoundState",
+]

@@ -1,0 +1,43 @@
+"""Model aggregation: FedTest + the paper's two baselines.
+
+All three schemes reduce a client-stacked param pytree with a weight
+vector; they differ only in how the weights are produced:
+
+* **FedTest** — normalised moving-average accuracy^p scores
+  (``repro.core.scoring``), accuracies measured by peer testers.
+* **FedAvg** [McMahan et al.] — weights proportional to client sample
+  counts (Fig. 1 of the paper).
+* **Accuracy-based** [TiFL-style, ref 2] — weights proportional to each
+  model's accuracy on the *server's* held-out test set.
+
+The reduction itself runs through the ``weighted_aggregate`` Pallas kernel
+on TPU (``impl='pallas'``) or its jnp oracle elsewhere.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.weighted_aggregate import aggregate_pytree
+
+
+def fedavg_weights(sample_counts: jnp.ndarray) -> jnp.ndarray:
+    c = sample_counts.astype(jnp.float32)
+    return c / jnp.maximum(c.sum(), 1e-9)
+
+
+def accuracy_based_weights(server_accuracies: jnp.ndarray,
+                           power: float = 1.0) -> jnp.ndarray:
+    a = jnp.clip(server_accuracies.astype(jnp.float32), 0.0, 1.0) ** power
+    total = jnp.sum(a)
+    n = a.shape[0]
+    return jnp.where(total > 1e-12, a / jnp.maximum(total, 1e-12),
+                     jnp.full_like(a, 1.0 / n))
+
+
+def aggregate_models(stacked_params, weights: jnp.ndarray, *,
+                     impl: str = "auto"):
+    """Algorithm 1 line 14: score-weighted model aggregation.
+
+    ``stacked_params``: pytree whose leaves have a leading client axis.
+    """
+    return aggregate_pytree(stacked_params, weights, impl=impl)

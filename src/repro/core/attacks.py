@@ -1,0 +1,85 @@
+"""Malicious-user model suite.
+
+The paper's attack (Sec. IV): "some users send random weights to the
+server". We additionally implement standard poisoning attacks for the
+robustness ablations: sign-flip (gradient ascent) and scaled-update
+(model-replacement-style magnification), plus lying testers (Sec. V-C)
+handled in the round engine.
+
+``apply_attacks`` operates on the client-stacked param pytree; malicious
+clients are the *last M* client slots (a fixed, known set for evaluation —
+the defence, of course, does not use this knowledge).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import key_iter
+
+
+def _random_weights(key, trained, reference, scale):
+    """Paper's attack: replace the model with random weights of the same
+    magnitude statistics as the trained model."""
+    leaves, treedef = jax.tree_util.tree_flatten(trained)
+    ks = list(jax.random.split(key, len(leaves)))
+    new = []
+    for k, leaf in zip(ks, leaves):
+        std = jnp.std(leaf.astype(jnp.float32)) + 1e-6
+        new.append((jax.random.normal(k, leaf.shape, jnp.float32)
+                    * std * scale).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def _sign_flip(key, trained, reference, scale):
+    """Send global - scale * (trained - global): a gradient-ascent update."""
+    return jax.tree_util.tree_map(
+        lambda g, t: (g.astype(jnp.float32) - scale
+                      * (t.astype(jnp.float32) - g.astype(jnp.float32))
+                      ).astype(t.dtype),
+        reference, trained)
+
+
+def _scaled_update(key, trained, reference, scale):
+    """Magnify the local update by ``scale`` (model replacement)."""
+    return jax.tree_util.tree_map(
+        lambda g, t: (g.astype(jnp.float32) + scale
+                      * (t.astype(jnp.float32) - g.astype(jnp.float32))
+                      ).astype(t.dtype),
+        reference, trained)
+
+
+ATTACKS: Dict[str, Callable] = {
+    "random_weights": _random_weights,
+    "sign_flip": _sign_flip,
+    "scaled_update": _scaled_update,
+    "none": lambda key, trained, reference, scale: trained,
+}
+
+
+def apply_attacks(key, stacked_params, global_params, *,
+                  num_malicious: int, attack: str = "random_weights",
+                  scale: float = 1.0):
+    """Replace the last ``num_malicious`` clients' models with attacked ones."""
+    if num_malicious == 0 or attack == "none":
+        return stacked_params
+    fn = ATTACKS[attack]
+    N = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    ks = key_iter(key)
+
+    def client(c):
+        trained = jax.tree_util.tree_map(lambda a: a[c], stacked_params)
+        return fn(next(ks), trained, global_params, scale)
+
+    attacked = [client(c) for c in range(N - num_malicious, N)]
+
+    def merge(stack, *bad_leaves):
+        out = stack
+        for i, bl in enumerate(bad_leaves):
+            out = out.at[N - num_malicious + i].set(bl)
+        return out
+
+    return jax.tree_util.tree_map(
+        lambda stack, *bads: merge(stack, *bads), stacked_params, *attacked)

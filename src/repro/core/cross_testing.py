@@ -1,0 +1,42 @@
+"""Cross-testing (the heart of FedTest, Fig. 3b).
+
+Each selected tester evaluates *every* client's model on the tester's own
+local held-out data. On a single host this is a ``vmap`` over the client
+axis of the stacked params (N models evaluated in one XLA call per
+tester); on a pod the same computation is the ring schedule in
+``repro.launch.train`` (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_eval_fn(model) -> Callable:
+    """Returns eval_fn(params, bx, by) -> accuracy in [0, 1]."""
+    if model.cfg.family == "cnn":
+        def eval_fn(params, bx, by):
+            logits, _ = model.forward_train(params, {"images": bx})
+            return jnp.mean((jnp.argmax(logits, -1) == by)
+                            .astype(jnp.float32))
+    else:
+        def eval_fn(params, bx, by):
+            logits, _ = model.forward_train(params, {"tokens": bx})
+            valid = by != -1
+            correct = (jnp.argmax(logits, -1) == by) & valid
+            return correct.sum() / jnp.maximum(valid.sum(), 1)
+    return eval_fn
+
+
+def cross_test_accuracies(eval_fn, stacked_params, tester_x, tester_y
+                          ) -> jnp.ndarray:
+    """Accuracy matrix A[k, c] = acc of client c's model on tester k's data.
+
+    stacked_params: leaves [N, ...]; tester_x/y: [K, batch, ...].
+    """
+    def one_tester(bx, by):
+        return jax.vmap(lambda p: eval_fn(p, bx, by))(stacked_params)
+
+    return jax.vmap(one_tester)(tester_x, tester_y)     # [K, N]

@@ -1,0 +1,209 @@
+"""Distributed FedTest round via ``shard_map`` — one client per mesh slice.
+
+This is the datacenter mapping of the paper's D2D protocol (DESIGN.md §3):
+
+* the ``clients`` mesh axis carries one FL client per slice;
+* "users send models to testers over orthogonal RBs" becomes a
+  **ring schedule**: ``lax.ppermute`` rotates the stacked client models
+  around the ring, and at each of the N-1 hops every device evaluates the
+  visiting model on its *own* local test shard. Each hop uses disjoint
+  neighbour links — the ICI analogue of interference-free RB slots — and
+  the memory high-water mark is 2x one model instead of the N-x blow-up of
+  an all-gather (the paper-faithful alternative, kept for comparison in
+  EXPERIMENTS.md §Perf);
+* "testers upload accuracies, server aggregates" becomes a masked
+  ``psum``: tester rows of the accuracy matrix are averaged, scores are
+  updated replicated, and the weighted model aggregation is a single
+  ``psum`` of ``w_c * params_c``.
+
+The same ``FedConfig`` drives this and the single-host engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import FedConfig, TrainConfig
+from repro.core.cross_testing import make_eval_fn
+from repro.core.scoring import ScoreState, score_weights, update_scores
+from repro.optim import make_optimizer
+
+
+def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
+    """Every device measures every client's model on its own test data.
+
+    Returns acc_row [num_clients]: accuracy of client c's model on *my*
+    local test shard. Implemented as N-1 ``ppermute`` hops around the ring
+    (visiting models), so peak memory is own + visiting model.
+    """
+    my_idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % num_clients) for i in range(num_clients)]
+
+    def hop(step, carry):
+        visiting, acc_row = carry
+        # who owned `visiting` before `step` hops reached me?
+        owner = (my_idx - step) % num_clients
+        acc = eval_fn(visiting, tx, ty)
+        acc_row = acc_row.at[owner].set(acc)
+        visiting = jax.lax.ppermute(visiting, axis, perm)
+        return (visiting, acc_row)
+
+    acc_row = jnp.zeros((num_clients,), jnp.float32)
+    (_, acc_row) = jax.lax.fori_loop(
+        0, num_clients, hop, (my_params, acc_row))
+    return acc_row
+
+
+def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
+                           mesh, axis: str = "clients"):
+    """Builds the jitted shard_map FedTest round for ``mesh[axis]`` clients.
+
+    Inputs (per call):
+      global_params — replicated pytree
+      scores        — ScoreState (replicated)
+      round_idx     — i32
+      bx, by        — [N, steps, batch, ...] client-sharded training batches
+      tx, ty        — [N, eval_batch, ...]   client-sharded local test data
+      tester_mask   — [N] f32 (K ones; rotating selection by the caller)
+
+    Returns (new_global (replicated), new_scores, metrics).
+    """
+    opt = make_optimizer(train_cfg)
+    eval_fn = make_eval_fn(model)
+    num_clients = mesh.shape[axis]
+
+    def batchify(bx, by):
+        if model.cfg.family == "cnn":
+            return {"images": bx, "labels": by}
+        return {"tokens": bx, "labels": by}
+
+    def local_train(params, bx, by):
+        opt_state = opt.init(params)
+
+        def step(carry, xb_yb):
+            params, opt_state = carry
+            xb, yb = xb_yb
+            (loss, _), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batchify(xb, yb))
+            params, opt_state = opt.update(grads, opt_state, params)
+            return (params, opt_state), loss
+
+        (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                           (bx, by))
+        return params, jnp.mean(losses)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(), P()),
+        check_vma=False)
+    def round_fn(global_params, scores: ScoreState, bx, by, tx, ty,
+                 tester_mask):
+        # shard_map gives per-client leading axes of size 1 — drop them
+        bx, by = bx[0], by[0]
+        tx, ty = tx[0], ty[0]
+        my_mask = tester_mask[0]
+        my_idx = jax.lax.axis_index(axis)
+
+        # 1-2. local training on my shard
+        params, local_loss = local_train(global_params, bx, by)
+
+        # 4. ring cross-testing (only tester rows count)
+        acc_row = ring_cross_test(eval_fn, params, tx, ty, axis,
+                                  num_clients)
+
+        # combine tester reports: mean over the K testers via masked psum
+        k_total = jax.lax.psum(my_mask, axis)
+        acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
+
+        # 6. replicated score update + weights
+        tester_ids = jnp.arange(num_clients)   # reports already masked
+        new_scores = update_scores(scores, acc[None, :], tester_ids,
+                                   power=fed.score_power,
+                                   decay=fed.score_decay,
+                                   power_warmup_rounds=
+                                   fed.power_warmup_rounds)
+        weights = score_weights(new_scores)
+
+        # 7. weighted aggregation = one psum over the client axis
+        my_w = weights[my_idx]
+        new_global = jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(
+                (x.astype(jnp.float32) * my_w), axis).astype(x.dtype),
+            params)
+
+        metrics = {"local_loss": jax.lax.pmean(local_loss, axis),
+                   "acc_mean": jnp.mean(acc),
+                   "weights": weights}
+        return new_global, new_scores, metrics
+
+    return round_fn
+
+
+def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
+                         mesh, axis: str = "clients"):
+    """Paper-faithful alternative: all-gather every model to every tester
+    (each user receives all models at once, as in the RB broadcast).
+    Memory: N x model per device — kept as the §Perf comparison baseline.
+    """
+    opt = make_optimizer(train_cfg)
+    eval_fn = make_eval_fn(model)
+    num_clients = mesh.shape[axis]
+
+    def batchify(bx, by):
+        if model.cfg.family == "cnn":
+            return {"images": bx, "labels": by}
+        return {"tokens": bx, "labels": by}
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(), P()),
+        check_vma=False)
+    def round_fn(global_params, scores, bx, by, tx, ty, tester_mask):
+        bx, by = bx[0], by[0]
+        tx, ty = tx[0], ty[0]
+        my_mask = tester_mask[0]
+        my_idx = jax.lax.axis_index(axis)
+
+        opt_state = opt.init(global_params)
+
+        def step(carry, xb_yb):
+            params, opt_state = carry
+            xb, yb = xb_yb
+            (loss, _), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batchify(xb, yb))
+            params, opt_state = opt.update(grads, opt_state, params)
+            return (params, opt_state), loss
+
+        (params, _), losses = jax.lax.scan(
+            step, (global_params, opt_state), (bx, by))
+
+        everyone = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, axis), params)   # [N, ...]
+        acc_row = jax.vmap(
+            lambda p: eval_fn(p, tx, ty))(everyone)          # [N]
+
+        k_total = jax.lax.psum(my_mask, axis)
+        acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
+        new_scores = update_scores(scores, acc[None, :],
+                                   jnp.arange(num_clients),
+                                   power=fed.score_power,
+                                   decay=fed.score_decay,
+                                   power_warmup_rounds=
+                                   fed.power_warmup_rounds)
+        weights = score_weights(new_scores)
+        new_global = jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(
+                x.astype(jnp.float32) * weights[my_idx], axis).astype(x.dtype),
+            params)
+        metrics = {"local_loss": jax.lax.pmean(jnp.mean(losses), axis),
+                   "acc_mean": jnp.mean(acc),
+                   "weights": weights}
+        return new_global, new_scores, metrics
+
+    return round_fn

@@ -1,0 +1,52 @@
+"""Tester selection + orthogonal resource-block schedule (Sec. III).
+
+Algorithm 1 line 16 re-selects a *different* set of K testers each round.
+The paper's collection phase assigns every user an orthogonal resource
+block (RB); non-tester users transmit in the first N-K slots (testers
+receive + evaluate concurrently, D2D), then testers transmit their model +
+measured accuracies in the last K slots. ``rb_schedule`` materialises that
+timetable — the simulation uses it for communication-cost accounting, and
+it is the wireless analogue of the deterministic ring-permutation schedule
+used on the pod (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def select_testers(key, num_users: int, num_testers: int,
+                   round_idx: int) -> jnp.ndarray:
+    """Rotating K-subset; independent draw per round (Alg. 1 line 16)."""
+    k = jax.random.fold_in(key, round_idx)
+    perm = jax.random.permutation(k, num_users)
+    return perm[:num_testers]
+
+
+def rb_schedule(tester_ids: np.ndarray, num_users: int,
+                model_bytes: int, acc_report_bytes: int = 4
+                ) -> Dict[str, object]:
+    """Orthogonal-RB timetable for one collection phase.
+
+    Returns slot list [(slot_idx, user, payload_bytes, receivers)] plus
+    totals. Non-testers transmit first (server + all testers receive);
+    testers transmit last (their model + N accuracy scalars).
+    """
+    testers = set(int(t) for t in np.asarray(tester_ids))
+    others = [u for u in range(num_users) if u not in testers]
+    slots: List[Dict[str, object]] = []
+    for i, u in enumerate(others):
+        slots.append({"slot": i, "user": u, "bytes": model_bytes,
+                      "receivers": ["server"] + sorted(testers)})
+    for j, t in enumerate(sorted(testers)):
+        payload = model_bytes + acc_report_bytes * num_users
+        slots.append({"slot": len(others) + j, "user": t, "bytes": payload,
+                      "receivers": ["server"]})
+    uplink = sum(s["bytes"] for s in slots)
+    return {"slots": slots, "num_slots": len(slots),
+            "uplink_bytes": uplink,
+            "broadcast_bytes": model_bytes,           # server -> all users
+            "d2d_bytes": model_bytes * len(others) * len(testers)}

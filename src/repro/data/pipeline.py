@@ -1,0 +1,77 @@
+"""Federated data pipeline: client-stacked arrays + batch sampling.
+
+The FL round engine vectorises local training across clients with ``vmap``,
+so batches are materialised as [N_clients, local_steps, batch, ...] index
+gathers from the stacked client arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClientData:
+    """Stacked per-client dataset. Leaves: xs [N,M,...], ys [N,M,...]."""
+    xs: jnp.ndarray
+    ys: jnp.ndarray
+    counts: jnp.ndarray            # [N] valid rows per client
+
+    @property
+    def num_clients(self) -> int:
+        return self.xs.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FederatedDataset:
+    train: ClientData
+    # held-out *local* eval shards (the FedTest testers' data)
+    test: ClientData
+    # global eval set (convergence curves) + server set (accuracy-based)
+    global_x: jnp.ndarray
+    global_y: jnp.ndarray
+    server_x: jnp.ndarray
+    server_y: jnp.ndarray
+
+
+def sample_client_batches(key, data: ClientData, steps: int, batch: int
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Random-with-replacement batches per client.
+
+    Returns (bx [N, steps, batch, ...], by [N, steps, batch, ...]).
+    """
+    N = data.num_clients
+    u = jax.random.uniform(key, (N, steps, batch))
+    idx = (u * data.counts[:, None, None]).astype(jnp.int32)
+    bx = jax.vmap(lambda x, i: x[i])(data.xs, idx)
+    by = jax.vmap(lambda y, i: y[i])(data.ys, idx)
+    return bx, by
+
+
+def split_client_holdout(xs: np.ndarray, ys: np.ndarray, counts: np.ndarray,
+                         frac: float = 0.2):
+    """Split stacked client arrays into train/test ClientData pairs."""
+    N, M = xs.shape[0], xs.shape[1]
+    n_test = np.maximum((counts * frac).astype(np.int32), 1)
+    n_train = np.maximum(counts - n_test, 1)
+    # test rows are the tail of each client's valid region
+    test_x = np.zeros_like(xs)
+    test_y = np.zeros_like(ys)
+    for i in range(N):
+        t = int(n_test[i])
+        seg_x = xs[i, int(n_train[i]):int(counts[i])]
+        seg_y = ys[i, int(n_train[i]):int(counts[i])]
+        reps = int(np.ceil(M / max(len(seg_x), 1)))
+        test_x[i] = np.tile(seg_x, (reps,) + (1,) * (xs.ndim - 2))[:M]
+        test_y[i] = np.tile(seg_y, (reps,) + (1,) * (ys.ndim - 2))[:M]
+    train = ClientData(jnp.asarray(xs), jnp.asarray(ys),
+                       jnp.asarray(n_train.astype(np.int32)))
+    test = ClientData(jnp.asarray(test_x), jnp.asarray(test_y),
+                      jnp.asarray(n_test.astype(np.int32)))
+    return train, test

@@ -1,0 +1,3 @@
+from repro.eval.metrics import classify_accuracy, evaluate_classifier
+
+__all__ = ["classify_accuracy", "evaluate_classifier"]

@@ -1,0 +1,23 @@
+"""Evaluation helpers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def classify_accuracy(logits: jnp.ndarray, labels: jnp.ndarray):
+    return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+
+def evaluate_classifier(model, params, x, y, batch: int = 512):
+    """Batched global-test accuracy for image classifiers."""
+    n = x.shape[0]
+    correct = 0
+    fwd = jax.jit(lambda p, bx: model.forward_train(p, {"images": bx})[0])
+    for i in range(0, n, batch):
+        bx, by = x[i:i + batch], y[i:i + batch]
+        logits = fwd(params, bx)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == by))
+    return correct / n

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel lives in its own subpackage with three modules:
+
+* ``kernel.py`` — the ``pl.pallas_call`` body with explicit BlockSpec VMEM
+  tiling (TPU is the target; validated on CPU with ``interpret=True``).
+* ``ops.py``    — the jit'd public wrapper with backend dispatch
+  (``pallas`` on TPU, memory-bounded pure-XLA path elsewhere).
+* ``ref.py``    — the pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+* ``flash_attention``    — blockwise causal/sliding-window GQA attention.
+* ``decode_attention``   — single-token flash-decoding with LSE outputs for
+  cross-shard softmax merging.
+* ``ssd_scan``           — Mamba2 SSD chunked scan (state passed across the
+  sequential chunk grid dimension in VMEM scratch).
+* ``weighted_aggregate`` — the FedTest server's score-weighted N-way model
+  reduction.
+"""

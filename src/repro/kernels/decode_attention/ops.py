@@ -1,0 +1,138 @@
+"""Public decode-attention op with backend dispatch + partial merging.
+
+``decode_attention`` returns (out, lse) for one KV shard; ``merge_partials``
+combines partials from sequence-sharded caches with LSE weighting. Under
+pjit the merge is expressed with ordinary jnp ops so GSPMD emits the
+all-reduce; under shard_map the caller psums the two merge accumulators.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps block loops exact)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "window", "block_k", "unroll"))
+def _decode_xla(q, k, v, lengths, *, scale=None, window=None, block_k=1024,
+                unroll=False):
+    """Blockwise decode attention in pure XLA (scan over KV blocks)."""
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    if unroll:
+        block_k = max(block_k, (T + 7) // 8)
+    block_k = _divisor_block(T, block_k)
+    nk = T // block_k
+
+    qg = (q.reshape(B, Hkv, rep, D).astype(jnp.float32)) * scale
+    kb = k.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 3, 2, 4)
+
+    def step(carry, kv):
+        m, l, acc = carry
+        ki, kblk, vblk = kv
+        s = jnp.einsum("bgrd,bgkd->bgrk", qg, kblk.astype(jnp.float32))
+        kpos = ki * block_k + jnp.arange(block_k)
+        valid = kpos[None, :] < lengths[:, None]
+        if window is not None:
+            valid &= kpos[None, :] >= lengths[:, None] - window
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, -1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bgrk,bgkd->bgrd", p,
+                                      vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, rep, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb),
+                                  unroll=True if unroll else 1)
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l).astype(q.dtype).reshape(B, Hq, D)
+    lse = (m + jnp.log(l)).reshape(B, Hq)
+    return out, lse
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window"))
+def _decode_oneshot(q, k, v, lengths, *, scale=None, window=None):
+    """Unblocked grouped decode attention (GSPMD-friendly).
+
+    No jnp.repeat and no reshape along the cache's sequence dim, so a
+    sequence-sharded KV cache stays sharded: the [B,Hkv,rep,T] logits are
+    computed per T-shard and the softmax reductions become psums. This is
+    the default graph-level path; on TPU the Pallas kernel adds the VMEM
+    block streaming per shard.
+    """
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qg = q.reshape(B, Hkv, rep, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bgrd,btgd->bgrt", qg, k.astype(jnp.float32))
+    t = jnp.arange(T)[None, :]
+    valid = t < lengths[:, None]
+    if window is not None:
+        valid &= t >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgrt,btgd->bgrd", p / l, v.astype(jnp.float32))
+    lse = (m + jnp.log(l))[..., 0]
+    return (out.reshape(B, Hq, D).astype(q.dtype),
+            lse.reshape(B, Hq))
+
+
+def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
+                     window: Optional[int] = None, impl: str = "auto",
+                     interpret: bool = False, block_k: int = 1024,
+                     unroll: bool = False):
+    """q [B,Hq,D]; cache k/v [B,T,Hkv,D]; lengths [B] -> (out, lse)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "oneshot"
+    if impl == "oneshot":
+        return _decode_oneshot(q, k, v, lengths, scale=scale, window=window)
+    if impl == "pallas":
+        return decode_attention_pallas(
+            q, k, v, lengths, scale=scale, window=window,
+            block_k=min(block_k, 256), interpret=interpret)
+    if impl == "xla":
+        return _decode_xla(q, k, v, lengths, scale=scale, window=window,
+                           block_k=block_k, unroll=unroll)
+    if impl == "naive":
+        return decode_attention_ref(q, k, v, lengths, scale=scale,
+                                    window=window)
+    raise ValueError(impl)
+
+
+def merge_partials(outs, lses):
+    """LSE-weighted merge of per-shard partial attentions.
+
+    outs [S, B, H, D] and lses [S, B, H] stacked over shards ->
+    (out [B,H,D]). Shards with no valid keys carry lse = -inf and drop out.
+    """
+    m = jnp.max(lses, axis=0, keepdims=True)
+    w = jnp.exp(lses - m)                        # [S, B, H]
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
+    out = jnp.sum(outs.astype(jnp.float32) * w[..., None], axis=0) / denom[..., None]
+    return out.astype(outs.dtype)

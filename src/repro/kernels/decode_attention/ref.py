@@ -1,0 +1,37 @@
+"""Oracle for single-token decode attention.
+
+q [B, Hq, D] attends a KV cache k/v [B, T, Hkv, D] of which the first
+``lengths[b]`` entries are valid. Returns (out [B, Hq, D], lse [B, Hq]) —
+the log-sum-exp output makes the op composable across KV shards
+(flash-decoding style merging).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: Optional[float] = None,
+                         window: Optional[int] = None):
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    t = jnp.arange(T)[None, :]
+    valid = t < lengths[:, None]
+    if window is not None:
+        valid &= t >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bthd->bhd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    return out.astype(q.dtype), lse

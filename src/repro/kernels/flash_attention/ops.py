@@ -1,0 +1,139 @@
+"""Public flash-attention op with backend dispatch.
+
+* ``impl='pallas'``  — the TPU Pallas kernel (interpret-mode on CPU).
+* ``impl='xla'``     — memory-bounded blockwise online-softmax attention in
+  pure XLA (double ``lax.scan`` over q/kv blocks). This is what the model
+  zoo lowers for the dry-runs: per-step intermediates are
+  ``[B, H, block_q, block_k]`` instead of the quadratic ``[B, H, S, T]``.
+* ``impl='naive'``   — the ref oracle (small shapes / tests only).
+* ``impl='auto'``    — pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+NEG_INF = -1e30
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps block loops exact)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "sliding_window", "scale",
+                              "q_offset", "block_q", "block_k", "unroll"))
+def attention_xla(q, k, v, *, causal=True, sliding_window=None, scale=None,
+                  q_offset=0, block_q=512, block_k=512, unroll=False):
+    """Blockwise online-softmax attention, pure XLA. Same layout as ref.
+
+    ``unroll=True`` (dry-run cost probes only) unrolls the block loops so
+    XLA cost analysis sees every body; blocks are enlarged to keep the
+    body count small — total matmul FLOPs are blocking-independent.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    if unroll:
+        block_q = max(block_q, (S + 3) // 4)
+        block_k = max(block_k, (T + 3) // 4)
+    block_q = _divisor_block(S, block_q)
+    block_k = _divisor_block(T, block_k)
+    nq, nk = S // block_q, T // block_k
+
+    # [n_blocks, B, Hkv, rep|1, block, D] layouts for scanning.
+    qb = (q.reshape(B, nq, block_q, Hkv, rep, D)
+          .transpose(1, 0, 3, 4, 2, 5))           # [nq, B, Hkv, rep, bq, D]
+    kb = k.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, block_k, Hkv, D).transpose(1, 0, 3, 2, 4)
+
+    qpos_base = jnp.arange(block_q) + q_offset
+    kpos_base = jnp.arange(block_k)
+
+    def q_step(_, qi_and_blk):
+        qi, qblk = qi_and_blk
+        qblk = qblk.astype(jnp.float32) * scale
+        qpos = qpos_base + qi * block_q            # [bq]
+
+        def kv_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_kv
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qblk,
+                           kblk.astype(jnp.float32))
+            kpos = kpos_base + ki * block_k
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if sliding_window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - sliding_window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * corr + jnp.einsum("bgrqk,bgkd->bgrqd", p,
+                                          vblk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, rep, block_q, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, block_q, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, block_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb),
+            unroll=True if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb),
+                         unroll=True if unroll else 1)
+    # ob: [nq, B, Hkv, rep, bq, D] -> [B, S, Hq, D]
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sliding_window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    q_offset: int = 0,
+                    impl: str = "auto",
+                    interpret: bool = False,
+                    block_q: int = 512,
+                    block_k: int = 512,
+                    unroll: bool = False):
+    """Attention entry point used by the model zoo.
+
+    q [B,S,Hq,D]; k, v [B,T,Hkv,D] -> [B,S,Hq,D].
+    """
+    if impl == "auto":
+        impl = _default_backend()
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            scale=scale, q_offset=q_offset, interpret=interpret,
+            block_q=min(block_q, 128), block_k=min(block_k, 128))
+    if impl == "xla":
+        return attention_xla(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            scale=scale, q_offset=q_offset, block_q=block_q,
+            block_k=block_k, unroll=unroll)
+    if impl == "naive":
+        return attention_ref(q, k, v, causal=causal,
+                             sliding_window=sliding_window, scale=scale,
+                             q_offset=q_offset)
+    raise ValueError(f"unknown impl {impl!r}")

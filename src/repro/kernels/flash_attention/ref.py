@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for flash attention (naive materialised softmax).
+
+Layout: q [B, S, Hq, D]; k, v [B, T, Hkv, D]; output [B, S, Hq, D].
+GQA: Hq must be a multiple of Hkv; kv heads are shared across groups.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  sliding_window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Naive attention. ``q_offset`` positions queries inside a longer KV
+    (decode / chunked prefill): query i attends key t iff t <= i + q_offset.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window is not None:
+        mask &= kpos > qpos - sliding_window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,93 @@
+"""Public SSD-scan op with backend dispatch.
+
+``impl='xla'`` runs the same chunked algorithm as the Pallas kernel with a
+``lax.scan`` over chunks (intra-chunk quadratic form + carried [P,N] state),
+so its HLO is memory-bounded and representative for the dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps block loops exact)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "unroll"))
+def _ssd_xla(x, dt, A, B, C, D, *, chunk: int = 128, unroll: bool = False):
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    if unroll:
+        chunk = max(chunk, (S + 7) // 8)
+    chunk = _divisor_block(S, chunk)
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bt, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, chunk, H)
+    Bf = B.astype(jnp.float32).reshape(Bt, nc, chunk, G, N)
+    Cf = C.astype(jnp.float32).reshape(Bt, nc, chunk, G, N)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    # chunk-major for scanning
+    xs = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+          Bf.transpose(1, 0, 2, 3, 4), Cf.transpose(1, 0, 2, 3, 4))
+
+    idx = jnp.arange(chunk)
+    lower = idx[:, None] >= idx[None, :]
+
+    def head_group(a):
+        # [..., G, N] -> [..., H, N]
+        return jnp.repeat(a, rep, axis=-2)
+
+    def chunk_step(h, inp):
+        xb, dtb, Bb, Cb = inp          # [Bt,Q,H,P],[Bt,Q,H],[Bt,Q,G,N]x2
+        Bh = head_group(Bb)            # [Bt,Q,H,N]
+        Ch = head_group(Cb)
+        dA = dtb * Af                   # [Bt,Q,H]
+        cum = jnp.cumsum(dA, axis=1)    # inclusive
+        CB = jnp.einsum("bqhn,bkhn->bhqk", Ch, Bh)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]   # [Bt,q,k,H]
+        # mask BEFORE exp: above-diagonal rel is large-positive (cum is
+        # decreasing), and exp(+big)=inf would poison the backward pass
+        # through the where.
+        rel = jnp.where(lower[None, :, :, None], rel, -1e30)
+        Lmat = jnp.exp(rel) * dtb[:, None, :, :]
+        y = jnp.einsum("bhqk,bqkh,bkhp->bqhp", CB, Lmat, xb)
+        y += jnp.exp(cum)[..., None] * jnp.einsum("bqhn,bhpn->bqhp", Ch, h)
+        y += Df[None, None, :, None] * xb
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtb          # [Bt,Q,H]
+        h = (jnp.exp(cum[:, -1, :])[..., None, None] * h
+             + jnp.einsum("bqhp,bqhn->bhpn", xb * w[..., None], Bh))
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(chunk_step, h0, xs, unroll=True if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bt, S, H, P).astype(x.dtype)
+    return y, h
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128, impl: str = "auto",
+             interpret: bool = False, unroll: bool = False):
+    """Mamba2 SSD scan. Returns (y, final_state)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                               interpret=interpret)
+    if impl == "xla":
+        return _ssd_xla(x, dt, A, B, C, D, chunk=chunk, unroll=unroll)
+    if impl == "naive":
+        return ssd_ref(x, dt, A, B, C, D)
+    raise ValueError(impl)

@@ -1,0 +1,56 @@
+"""Sequential-oracle for the Mamba2 SSD recurrence.
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * (x_t outer B_t)     h in R^{P x N}
+    y_t = h_t @ C_t + D_h * x_t
+
+Shapes: x [Bt,S,H,P]; dt [Bt,S,H] (post-softplus); A [H] (negative);
+B, C [Bt,S,G,N] (G state groups shared across H//G heads); D [H].
+Returns (y [Bt,S,H,P], final_state [Bt,H,P,N]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D, init_state=None):
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # [Bt,S,H,N]
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    if init_state is None:
+        init_state = jnp.zeros((Bt, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct_ = inp                     # [Bt,H,P],[Bt,H],[Bt,H,N]x2
+        decay = jnp.exp(dtt * A)[..., None, None]   # [Bt,H,1,1]
+        upd = dtt[..., None, None] * xt[..., :, None] * Bt_[..., None, :]
+        h = decay * h + upd                          # [Bt,H,P,N]
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct_) + D[None, :, None] * xt
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    h, ys = jax.lax.scan(step, init_state, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, h
+
+
+def ssd_decode_ref(x, dt, A, B, C, D, state):
+    """Single-token recurrent update. x [Bt,H,P]; dt [Bt,H]; B,C [Bt,G,N];
+    state [Bt,H,P,N] -> (y [Bt,H,P], new_state)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)[..., None, None]
+    state = decay * state + dtf[..., None, None] * xf[..., :, None] * Bh[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + D[None, :, None] * xf
+    return y.astype(x.dtype), state

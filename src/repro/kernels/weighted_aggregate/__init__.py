@@ -1,0 +1,4 @@
+from repro.kernels.weighted_aggregate.ops import (
+    weighted_aggregate, aggregate_pytree)
+
+__all__ = ["weighted_aggregate", "aggregate_pytree"]

@@ -1,0 +1,41 @@
+"""Public weighted-aggregation ops (array- and pytree-level)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_aggregate.kernel import weighted_aggregate_pallas
+from repro.kernels.weighted_aggregate.ref import weighted_aggregate_ref
+
+
+def weighted_aggregate(x: jnp.ndarray, w: jnp.ndarray, *,
+                       impl: str = "auto", block_m: int = 4096,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x [C, M]; w [C] -> [M]. Pads M up to a block multiple as needed."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "naive"
+    if impl == "naive":
+        return weighted_aggregate_ref(x, w)
+    C, M = x.shape
+    bm = min(block_m, max(M, 1))
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = weighted_aggregate_pallas(x, w, block_m=bm, interpret=interpret)
+    return out[:M]
+
+
+def aggregate_pytree(stacked, w, *, impl: str = "auto",
+                     interpret: bool = False):
+    """Score-weighted reduction of a client-stacked pytree.
+
+    ``stacked`` leaves carry a leading client axis [C, ...]; returns the
+    aggregated pytree without that axis. This is the device-side form of
+    the FedTest server step (Algorithm 1, line 14).
+    """
+    def _leaf(x):
+        C = x.shape[0]
+        flat = x.reshape(C, -1)
+        return weighted_aggregate(flat, w, impl=impl,
+                                  interpret=interpret).reshape(x.shape[1:])
+    return jax.tree_util.tree_map(_leaf, stacked)

@@ -1,0 +1,11 @@
+"""Oracle for the FedTest server aggregation: out = sum_c w_c * x_c."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [C, M]; w [C] -> [M], fp32 accumulation, cast back to x.dtype."""
+    acc = jnp.einsum("c,cm->m", w.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    return acc.astype(x.dtype)

@@ -1,0 +1,1 @@
+"""Launchers: production meshes, dry-runs, federated training, serving."""

@@ -1,0 +1,114 @@
+"""Pod-level federated training driver: FedTest via shard_map, one client
+per device along the ``clients`` mesh axis.
+
+This is the datacenter deployment path of DESIGN.md §3 (the single-host
+``launch/train.py`` engine is the simulation path). On real hardware the
+mesh axis maps onto TPU chips; in this container it runs on host-platform
+placeholder devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.federated --clients 8 --rounds 4 \\
+      --exchange ring
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--exchange", default="ring",
+                    choices=["ring", "allgather"],
+                    help="cross-testing model exchange schedule")
+    ap.add_argument("--dataset", default="mnist_like",
+                    choices=["mnist_like", "cifar_like"])
+    ap.add_argument("--out", default="experiments/federated_pod")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # the device count must be set before jax initialises
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.clients}")
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.config import FedConfig, TrainConfig
+    from repro.configs import get_config
+    from repro.core.distributed import (
+        make_allgather_round, make_distributed_round)
+    from repro.core.scoring import init_scores
+    from repro.data import (CIFAR_LIKE, MNIST_LIKE,
+                            make_federated_image_dataset,
+                            sample_client_batches)
+    from repro.models import build_model
+
+    N = args.clients
+    if len(jax.devices()) < N:
+        raise SystemExit(f"need {N} devices, have {len(jax.devices())}; "
+                         "set XLA_FLAGS before running")
+    mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+
+    arch = ("fedtest-cnn-mnist" if args.dataset == "mnist_like"
+            else "fedtest-cnn")
+    cfg = get_config(arch).replace(cnn_channels=(8, 16, 16), cnn_hidden=32)
+    model = build_model(cfg)
+    fed = FedConfig(num_users=N, num_testers=N, num_malicious=0,
+                    local_steps=args.local_steps)
+    tc = TrainConfig(optimizer="sgd", lr=args.lr, schedule="constant",
+                     batch_size=args.batch, grad_clip=0.0, remat=False)
+    spec = MNIST_LIKE if args.dataset == "mnist_like" else CIFAR_LIKE
+    data = make_federated_image_dataset(spec, N, num_samples=N * 250,
+                                        global_test=400, seed=args.seed)
+
+    make = (make_distributed_round if args.exchange == "ring"
+            else make_allgather_round)
+    round_fn = jax.jit(make(model, fed, tc, mesh))
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    scores = init_scores(N)
+    mask = jnp.ones((N,), jnp.float32)
+    tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
+
+    history = {"round": [], "acc": [], "local_loss": []}
+    t0 = time.time()
+    for r in range(args.rounds):
+        bx, by = sample_client_batches(
+            jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), r),
+            data.train, fed.local_steps, tc.batch_size)
+        params, scores, metrics = round_fn(params, scores, bx, by, tx, ty,
+                                           mask)
+        logits, _ = model.forward_train(params,
+                                        {"images": data.global_x[:400]})
+        acc = float((jnp.argmax(logits, -1) == data.global_y[:400]).mean())
+        history["round"].append(r + 1)
+        history["acc"].append(acc)
+        history["local_loss"].append(float(metrics["local_loss"]))
+        print(f"round {r + 1}: global_acc={acc:.4f} "
+              f"local_loss={float(metrics['local_loss']):.4f} "
+              f"({args.exchange} exchange)", flush=True)
+    history["wall_s"] = time.time() - t0
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out,
+                           f"{args.dataset}__{args.exchange}.json"),
+              "w") as f:
+        json.dump(history, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

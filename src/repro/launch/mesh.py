@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run script
+must set XLA_FLAGS before the first jax call, and tests must keep seeing a
+single CPU device.
+
+Target hardware: TPU v5e pods. Single pod = 256 chips as (data=16,
+model=16); multi-pod = 2 pods = 512 chips as (pod=2, data=16, model=16).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE any jax import (see launch/dryrun.py)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return Mesh(np.asarray(devices).reshape(shape), axes)

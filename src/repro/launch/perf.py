@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb runner (EXPERIMENTS.md §Perf).
+
+Re-lowers one (arch x shape) combination under a named variant — an
+activation-rule override, a parameter-sharding mode, a model knob, or a
+training knob — and reports the roofline-term deltas against whatever
+baseline artifact exists in experiments/dryrun.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen2-72b \\
+      --shape decode_32k --variant tp_only_params
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.config import INPUT_SHAPES, TrainConfig
+from repro.configs import get_config
+from repro.launch import dryrun as dr
+from repro.roofline import TPU_V5E
+from repro.roofline.analysis import roofline_terms
+
+# name -> dict(rules=..., model_kw=..., train_kw=..., params=...)
+VARIANTS = {
+    "baseline": {},
+    # ---- decode-side ideas ----
+    # serve with tensor-parallel-only params (no FSDP regather per step)
+    "tp_only_params": {"params": "tp_only"},
+    # KV cache sequence dim spread over BOTH axes
+    "kv_seq_2d": {"rules": {"kv_seq": ("data", "model")}},
+    # KV cache sharded over batch only (heads/seq replicated)
+    "kv_batch_only": {"rules": {"kv_seq": None}},
+    # ---- train-side ideas ----
+    "no_remat": {"train_kw": {"remat": False}},
+    "sgd_momentum": {"train_kw": {"optimizer": "momentum"}},
+    # keep activations' embed dim sharded over model after each block
+    "embed_sharded": {"rules": {"embed": "model"}},
+    # ---- moe ideas ----
+    "moe_group_256": {"model_kw": {"moe_group_size": 256}},
+    "moe_group_1024": {"model_kw": {"moe_group_size": 1024}},
+    "moe_group_2048": {"model_kw": {"moe_group_size": 2048}},
+    # decode: drop the graph-level block scan (GSPMD cannot propagate the
+    # kv_seq sharding through the [B,T,..]->[B,nk,bk,..] reshape and
+    # re-gathers the cache); a single masked einsum keeps the cache sharded
+    # and XLA emits the distributed-softmax psums instead. On real TPU the
+    # in-kernel (Pallas) blocking provides the VMEM streaming.
+    "decode_naive_attn": {"model_kw": {"attn_impl": "naive"}},
+    # decode: keep expert weights stationary (fully sharded over
+    # model x data via the expert FFN dim) so serving never re-gathers the
+    # expert bank; tiny activation psums replace the 40GB+ weight gathers.
+    "moe_stationary": {"params": "moe_stationary"},
+    "serve_opt": {"model_kw": {"attn_impl": "naive"},
+                  "params": "moe_stationary"},
+    # train: Megatron-style sequence parallelism for the residual stream
+    "seq_parallel": {"rules": {"seq": "model"}},
+    # decode: heads replicated, KV cache stays sequence-sharded — the
+    # q.K einsum then contracts locally per seq shard and XLA emits the
+    # distributed-softmax psums (true flash-decoding layout). Combines the
+    # naive-attn graph with head replication.
+    "decode_flash_layout": {"model_kw": {"attn_impl": "naive"},
+                            "rules": {"heads": None, "kv_heads": None}},
+    "serve_opt2": {"model_kw": {"attn_impl": "naive"},
+                   "rules": {"heads": None, "kv_heads": None},
+                   "params": "moe_stationary"},
+    # scatter (dynamic-update-slice) cache write instead of the one-hot
+    # masked multiply — the write touches one row, sharding preserved
+    "decode_dus": {"model_kw": {"cache_update": "dus"}},
+    "decode_onehot": {"model_kw": {"cache_update": "onehot"}},
+    "serve_opt3": {"model_kw": {"attn_impl": "naive",
+                                "cache_update": "dus"}},
+    # experts stationary AND the (much smaller) non-expert params kept
+    # tensor-parallel-only: zero per-step weight gathers
+    "serve_stationary_tp": {"params": "moe_stationary_tp"},
+    # sequence-chunked cross-entropy: never materialise [B,S,V] fp32 logits
+    "ce_chunked": {"model_kw": {"ce_chunk": 512}},
+    "ce_chunked_noremat": {"model_kw": {"ce_chunk": 512},
+                           "train_kw": {"remat": False}},
+    # the "fits on v5e" configuration: residual stream sharded over model
+    # (cuts the per-layer remat-saved activations 16x) + chunked CE
+    "train_fit": {"rules": {"embed": "model"},
+                  "model_kw": {"ce_chunk": 512}},
+}
+
+
+def remap_moe_stationary(spec_tree):
+    """Expert banks fully sharded (E over model, FFN dim over data):
+    w_gate/w_up [L,E,D,F] -> P(None, model, None, data);
+    w_down      [L,E,F,D] -> P(None, model, data, None)."""
+    from jax.sharding import PartitionSpec as P
+
+    def walk(node, in_moe=False):
+        if isinstance(node, dict):
+            return {k: walk(v, in_moe or k == "moe") for k, v in
+                    node.items()}
+        return node
+
+    def fix_tree(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            if k == "moe" and isinstance(v, dict):
+                new = dict(v)
+                if "w_gate" in new:
+                    new["w_gate"] = P(None, "model", None, "data")
+                if "w_up" in new:
+                    new["w_up"] = P(None, "model", None, "data")
+                if "w_down" in new:
+                    new["w_down"] = P(None, "model", "data", None)
+                out[k] = new
+            else:
+                out[k] = fix_tree(v)
+        return out
+
+    return fix_tree(spec_tree)
+
+
+def strip_fsdp_params(spec_tree):
+    """Replace every non-'model' mesh axis in param specs with None."""
+    from jax.sharding import PartitionSpec as P
+
+    def fix(spec):
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a == "model")
+                out.append(kept[0] if len(kept) == 1 else (kept or None))
+            else:
+                out.append(entry if entry == "model" else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def run_variant(arch, shape_name, variant_name, extrapolate=True):
+    v = VARIANTS[variant_name]
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    train_cfg = TrainConfig(**v.get("train_kw", {}))
+    rules_override = v.get("rules")
+    model_kw = v.get("model_kw", {})
+    param_mode = v.get("params", "fsdp")
+
+    # monkey-patch the spec builders the dryrun module uses
+    orig_model_for = dr.model_for
+    orig_param_tree = dr.param_sharding_tree
+
+    def model_for_patched(cfg_, shape_, unroll=False):
+        return orig_model_for(cfg_, shape_, unroll=unroll).__class__(
+            **{**orig_model_for(cfg_, shape_, unroll=unroll).__dict__,
+               **model_kw})
+
+    def param_tree_patched(cfg_, mesh, params):
+        spec = orig_param_tree(cfg_, mesh, params)
+        if param_mode == "tp_only":
+            spec = strip_fsdp_params(spec)
+        elif param_mode == "moe_stationary":
+            spec = remap_moe_stationary(spec)
+        elif param_mode == "moe_stationary_tp":
+            spec = remap_moe_stationary(strip_fsdp_params(spec))
+        return spec
+
+    dr.model_for = model_for_patched
+    dr.param_sharding_tree = param_tree_patched
+    try:
+        full = dr._lower_compile(cfg, shape, False, train_cfg,
+                                 rules_override)
+        if extrapolate:
+            costs = dr.extrapolated_costs(cfg, shape, False, train_cfg,
+                                          rules_override)
+        else:
+            costs = {k: full[k] for k in ("flops", "bytes", "coll_bytes",
+                                          "collectives")}
+    finally:
+        dr.model_for = orig_model_for
+        dr.param_sharding_tree = orig_param_tree
+
+    terms = roofline_terms(costs["flops"], costs["bytes"],
+                           costs["coll_bytes"], TPU_V5E,
+                           full["num_chips"])
+    return {"arch": arch, "shape": shape_name, "variant": variant_name,
+            "roofline": terms, "memory": full["memory"],
+            "collectives": costs["collectives"],
+            "cost": {"flops_per_device": costs["flops"],
+                     "bytes_per_device": costs["bytes"]},
+            "collective_bytes_per_device": costs["coll_bytes"],
+            "compile_s": full["compile_s"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True,
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    rec = run_variant(args.arch, args.shape, args.variant,
+                      extrapolate=not args.no_extrapolate)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.variant}"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(f"[perf] {tag}: compute={r['compute_s']:.3e} "
+          f"memory={r['memory_s']:.3e} collective={r['collective_s']:.3e} "
+          f"bottleneck={r['bottleneck']}")
+
+    # diff against the baseline dry-run artifact when present
+    base_path = os.path.join("experiments/dryrun",
+                             f"{args.arch}__{args.shape}__single.json")
+    if os.path.exists(base_path) and args.variant != "baseline":
+        base = json.load(open(base_path))
+        if base.get("status") == "ok":
+            b = base["roofline"]
+            for k in ("compute_s", "memory_s", "collective_s"):
+                delta = (r[k] - b[k]) / max(b[k], 1e-30) * 100
+                print(f"   {k}: {b[k]:.3e} -> {r[k]:.3e}  ({delta:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct input specs + sharding specs for every
+(architecture x input shape) combination — the dry-run's contract.
+
+Nothing here allocates: specs are shape/dtype stand-ins; cache templates
+come from ``jax.eval_shape`` over the real cache constructors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig, TrainConfig
+from repro.models import build_model
+from repro.models import decoder as dec_mod
+from repro.models import encdec as encdec_mod
+from repro.optim import make_optimizer
+from repro.sharding import (guard_divisibility, make_ruleset,
+                            param_spec_tree)
+
+# sliding window applied to full-attention archs for the long_500k shape
+LONG_CONTEXT_WINDOW = 16_384
+
+
+def model_for(cfg: ModelConfig, shape: InputShape, *, unroll: bool = False):
+    """Model variant serving this workload shape (DESIGN.md §5)."""
+    kw: Dict = {"scan_unroll": unroll}
+    if cfg.family == "encdec":
+        kw["max_target_positions"] = shape.seq_len + 1
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        kw["sliding_window"] = LONG_CONTEXT_WINDOW
+    return build_model(cfg, **kw)
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, ("whisper decoder has a hard 448-position ceiling and "
+                       "no sub-quadratic variant (DESIGN.md §5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch specs for the *step function* of this shape's kind."""
+    model = model_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "vlm":
+            text = S - cfg.num_patches
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), model.dtype)
+            batch["tokens"] = jax.ShapeDtypeStruct((B, text), i32)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, text), i32)
+        elif cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), model.dtype)
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+
+    # decode: one new token against a cache filled to capacity-1
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    model = model_for(cfg, shape)
+    B, cap = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        enc = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                   model.dtype)
+        return jax.eval_shape(
+            lambda e: encdec_mod.make_empty_cache(
+                cfg, B, cap, model.dtype, e, length=cap - 1), enc)
+    return jax.eval_shape(
+        lambda: dec_mod.make_empty_cache(cfg, B, cap, model.dtype,
+                                         length=cap - 1))
+
+
+def params_and_opt_specs(cfg: ModelConfig, shape: InputShape,
+                         train_cfg: Optional[TrainConfig] = None):
+    """eval_shape templates for params (and optimizer state for training)."""
+    model = model_for(cfg, shape)
+    params = jax.eval_shape(
+        lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if shape.kind != "train":
+        return params, None
+    opt = make_optimizer(train_cfg or TrainConfig())
+    opt_state = jax.eval_shape(lambda p: opt.init(p), params)
+    return params, opt_state
+
+
+# ------------------------------------------------------------- sharding specs
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def activation_rules(cfg: ModelConfig, shape: InputShape, mesh):
+    ba = batch_axes(mesh)
+    n_batch_shards = int(np.prod([dict(zip(mesh.axis_names,
+                                           mesh.devices.shape))[a]
+                                  for a in ba]))
+    divisible = shape.global_batch % n_batch_shards == 0
+    return make_ruleset(mesh.axis_names, kind=shape.kind,
+                        batch_divisible=divisible)
+
+
+def batch_spec_tree(cfg: ModelConfig, shape: InputShape, mesh,
+                    specs: Dict[str, jax.ShapeDtypeStruct]):
+    rules = activation_rules(cfg, shape, mesh)
+    b = rules["batch"]
+    out = {}
+    for name, s in specs.items():
+        out[name] = P(*([b] + [None] * (len(s.shape) - 1)))
+    return guard_divisibility(out, specs, mesh)
+
+
+def cache_spec_tree(cfg: ModelConfig, shape: InputShape, mesh, cache):
+    rules = activation_rules(cfg, shape, mesh)
+    b, kvs = rules["batch"], rules["kv_seq"]
+
+    def _spec(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        leafname = next((n for n in reversed(names) if isinstance(n, str)),
+                        "")
+        if leafname == "length":
+            return P(b)
+        if "cross" in names:               # [L, B, T_enc, Hkv, dh]
+            return P(None, b, None, None, None)
+        if leafname in ("k", "v"):         # [L|P, B, cap, Hkv, dh]
+            return P(None, b, kvs, None, None)
+        if leafname == "conv":             # [P, B, W-1, conv_dim]
+            return P(None, b, None, "model")
+        if leafname == "ssm":              # [P, B, H, Pd, N]
+            return P(None, b, "model", None, None)
+        return P(*([None] * leaf.ndim))
+
+    spec = jax.tree_util.tree_map_with_path(_spec, cache)
+    return guard_divisibility(spec, cache, mesh)
+
+
+def param_sharding_tree(cfg: ModelConfig, mesh, params):
+    spec = param_spec_tree(params, mesh.axis_names)
+    return guard_divisibility(spec, params, mesh)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

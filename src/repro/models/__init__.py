@@ -1,0 +1,16 @@
+"""Model zoo: composable JAX model definitions for all assigned families.
+
+Everything is functional — params are plain pytrees (nested dicts), layer
+stacks are stacked along a leading axis and driven by ``lax.scan`` so the
+HLO stays compact for the 80-layer configs. ``repro.models.model`` exposes
+the family-independent API the FL round engine and launchers consume:
+
+    m = build_model(cfg)
+    params = m.init(key)
+    logits = m.forward_train(params, batch)     # [B, S, V]
+    logits, cache = m.prefill(params, batch)
+    logits, cache = m.decode_step(params, cache, tokens, positions)
+"""
+from repro.models.model import build_model, Model
+
+__all__ = ["build_model", "Model"]

@@ -1,0 +1,144 @@
+"""GQA attention block (full-sequence and single-token decode paths)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention, merge_partials
+from repro.kernels.flash_attention import flash_attention
+from repro.models.common import dense_init, rms_norm, rope
+from repro.sharding import shard_hint
+from repro.utils import key_iter
+
+
+def attention_init(key, cfg, dtype):
+    D, Hq, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = key_iter(key)
+    p = {
+        "wq": dense_init(next(ks), (D, Hq * dh), dtype=dtype),
+        "wk": dense_init(next(ks), (D, Hkv * dh), dtype=dtype),
+        "wv": dense_init(next(ks), (D, Hkv * dh), dtype=dtype),
+        "wo": dense_init(next(ks), (Hq * dh, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, use_rope: bool):
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, ("batch", "seq", "heads", None))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", None))
+    v = shard_hint(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def attention_full(p, cfg, x, positions, *, causal=True,
+                   sliding_window: Optional[int] = None,
+                   use_rope: bool = True, return_kv: bool = False,
+                   attn_impl: str = "auto", unroll: bool = False):
+    """Full-sequence path (training / prefill). x [B,S,D] -> y [B,S,D]."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope)
+    o = flash_attention(q, k, v, causal=causal,
+                        sliding_window=sliding_window, impl=attn_impl,
+                        unroll=unroll)
+    o = shard_hint(o, ("batch", "seq", "heads", None))
+    y = o.reshape(B, S, -1) @ p["wo"]
+    y = shard_hint(y, ("batch", "seq", "embed"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attention_full(p, cfg, x, memory_kv, *, attn_impl: str = "auto",
+                         unroll: bool = False):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B, S, D = x.shape
+    Hq, dh = cfg.num_heads, cfg.head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, Hq, dh)
+    k, v = memory_kv
+    o = flash_attention(q, k, v, causal=False, impl=attn_impl,
+                        unroll=unroll)
+    y = o.reshape(B, S, -1) @ p["wo"]
+    return shard_hint(y, ("batch", "seq", "embed"))
+
+
+def encode_memory_kv(p, cfg, memory):
+    """Project encoder output once into cross-attention K/V."""
+    B, T, D = memory.shape
+    Hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    k = memory @ p["wk"]
+    v = memory @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, T, Hkv, dh), v.reshape(B, T, Hkv, dh))
+
+
+def _cache_write_onehot(cache, new, positions):
+    """Masked-multiply cache write (baseline): touches the WHOLE cache
+    (3x full-cache traffic) and, under a sequence-sharded cache, makes
+    GSPMD replicate it — see EXPERIMENTS.md §Perf iteration A3."""
+    oh = jnp.arange(cache.shape[1])[None, :] == positions[:, None]  # [B,T]
+    ohc = oh[..., None, None].astype(cache.dtype)
+    return cache * (1 - ohc) + new * ohc
+
+
+def _cache_write_dus(cache, new, positions):
+    """Scatter cache write: a vmapped dynamic-update-slice lowers to a
+    scatter that only touches one row per sequence and keeps the cache's
+    sharding intact."""
+    def upd(c, n, pos):
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), (pos, 0, 0))
+    return jax.vmap(upd)(cache, new, positions)
+
+
+def attention_decode(p, cfg, x, positions, kcache, vcache, lengths, *,
+                     sliding_window: Optional[int] = None,
+                     use_rope: bool = True,
+                     attn_impl: str = "auto",
+                     unroll: bool = False,
+                     cache_update: str = "dus") -> Tuple[jnp.ndarray, tuple]:
+    """Single-token decode. x [B,1,D]; caches [B,T,Hkv,dh]; positions [B].
+
+    Writes the new K/V at ``positions`` then attends the first
+    ``lengths = positions + 1`` entries via the flash-decoding op.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, positions[:, None], use_rope)
+    write = _cache_write_dus if cache_update == "dus" else \
+        _cache_write_onehot
+    kcache = write(kcache, k, positions)
+    vcache = write(vcache, v, positions)
+    kcache = shard_hint(kcache, ("batch", "kv_seq", "kv_heads", None))
+    vcache = shard_hint(vcache, ("batch", "kv_seq", "kv_heads", None))
+    out, _lse = decode_attention(q[:, 0], kcache, vcache, positions + 1,
+                                 window=sliding_window, impl=attn_impl,
+                                 unroll=unroll)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return shard_hint(y, ("batch", "seq", "embed")), (kcache, vcache)

@@ -1,0 +1,97 @@
+"""Shared building blocks: norms, rotary embeddings, initializers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layer_norm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x [..., S, H, D]; positions [..., S] (broadcast to B)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position table [seq, dim]."""
+    half = dim // 2
+    log_timescale = jnp.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(seq, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def pick_norm(cfg):
+    """Qwen/Mamba families use RMSNorm; Whisper uses LayerNorm."""
+    if cfg.family == "encdec":
+        return layer_norm_init, layer_norm
+    return rms_norm_init, rms_norm
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          ignore_index: int = -1):
+    """Mean NLL over non-ignored labels. logits [..., V]; labels [...]."""
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom
+
+
+def token_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+                   ignore_index: int = -1):
+    valid = labels != ignore_index
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels) & valid
+    return correct.sum() / jnp.maximum(valid.sum(), 1)

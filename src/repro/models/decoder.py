@@ -1,0 +1,291 @@
+"""Unified decoder-only stack for dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are homogeneous for dense/moe/ssm/vlm and are stacked along a
+leading axis + driven by ``lax.scan`` (compact HLO for 80-layer configs).
+The hybrid (Jamba) family scans over *periods* of ``attn_every`` layers —
+each period is an unrolled mini-stack (7 mamba + 1 attention, alternating
+dense/MoE FFN) whose slot params are stacked across periods.
+
+Caches are pytrees with a leading layer (or period) axis so the same scans
+drive prefill and decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_decode, attention_full, attention_init)
+from repro.models.common import embed_init, rms_norm, rms_norm_init
+from repro.models.mlp import swiglu, swiglu_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_decode, ssm_full, ssm_init, _dims
+from repro.sharding import shard_hint
+from repro.utils import key_iter
+
+
+# ----------------------------------------------------------------- layer slot
+def slot_init(key, cfg, layer_idx: int, dtype) -> Dict[str, Any]:
+    ks = key_iter(key)
+    p: Dict[str, Any] = {"norm1": rms_norm_init(cfg.d_model)}
+    if cfg.uses_attention(layer_idx):
+        p["attn"] = attention_init(next(ks), cfg, dtype)
+    else:
+        p["mamba"] = ssm_init(next(ks), cfg, dtype)
+    if cfg.family != "ssm":
+        p["norm2"] = rms_norm_init(cfg.d_model)
+        if cfg.uses_moe(layer_idx):
+            p["moe"] = moe_init(next(ks), cfg, dtype)
+        else:
+            p["ffn"] = swiglu_init(next(ks), cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def slot_apply_full(p, cfg, x, positions, *, sliding_window, attn_impl,
+                    ssm_impl, want_cache: bool, moe_dropless: bool = False,
+                    unroll: bool = False, moe_group_size: int = 0):
+    """Full-sequence layer. Returns (x, cache_slice, aux)."""
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    cache = {}
+    if "attn" in p:
+        if want_cache:
+            y, (k, v) = attention_full(
+                p["attn"], cfg, h, positions, causal=True,
+                sliding_window=sliding_window, return_kv=True,
+                attn_impl=attn_impl, unroll=unroll)
+            cache = {"k": k, "v": v}
+        else:
+            y = attention_full(p["attn"], cfg, h, positions, causal=True,
+                               sliding_window=sliding_window,
+                               attn_impl=attn_impl, unroll=unroll)
+    else:
+        if want_cache:
+            y, (conv_s, ssm_s) = ssm_full(p["mamba"], cfg, h,
+                                          return_state=True, impl=ssm_impl,
+                                          unroll=unroll)
+            cache = {"conv": conv_s, "ssm": ssm_s}
+        else:
+            y = ssm_full(p["mamba"], cfg, h, impl=ssm_impl, unroll=unroll)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if "norm2" in p:
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, aux = moe_apply(p["moe"], cfg, h, dropless=moe_dropless,
+                               group_size=moe_group_size)
+        else:
+            y = swiglu(p["ffn"], h)
+        x = x + y
+    return x, cache, aux
+
+
+def slot_apply_decode(p, cfg, x, positions, cache, *, sliding_window,
+                      attn_impl, unroll: bool = False,
+                      cache_update: str = "dus"):
+    """Single-token layer step. Returns (x, new_cache_slice, aux)."""
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if "attn" in p:
+        y, (k, v) = attention_decode(
+            p["attn"], cfg, h, positions, cache["k"], cache["v"],
+            positions + 1, sliding_window=sliding_window,
+            attn_impl=attn_impl, unroll=unroll, cache_update=cache_update)
+        new_cache = {"k": k, "v": v}
+    else:
+        y, (conv_s, ssm_s) = ssm_decode(p["mamba"], cfg, h,
+                                        cache["conv"], cache["ssm"])
+        new_cache = {"conv": conv_s, "ssm": ssm_s}
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if "norm2" in p:
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, aux = moe_apply(p["moe"], cfg, h, dropless=True)
+        else:
+            y = swiglu(p["ffn"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------- periods
+def _period(cfg) -> int:
+    """Scan unit: 1 layer for homogeneous stacks, attn_every for hybrid."""
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        if cfg.has_moe:
+            p = max(p, cfg.moe_every) if p % cfg.moe_every == 0 else \
+                p * cfg.moe_every
+        return p
+    return 1
+
+
+def init_decoder(cfg, key, dtype) -> Dict[str, Any]:
+    ks = key_iter(key)
+    period = _period(cfg)
+    n_periods = cfg.num_layers // period
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+
+    # stacked slot params: dict slot_<s> -> stacked-over-periods params
+    slots = {}
+    for s in range(period):
+        keys = jax.random.split(next(ks), n_periods)
+        slots[f"slot_{s}"] = jax.vmap(
+            lambda k, s=s: slot_init(k, cfg, s, dtype))(keys)
+
+    p = {
+        "embed": embed_init(next(ks), (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": slots,
+        "final_norm": rms_norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(next(ks), (cfg.d_model, cfg.vocab_size),
+                                  dtype)
+    if cfg.family == "vlm":
+        p["patch_proj"] = embed_init(next(ks), (cfg.d_model, cfg.d_model),
+                                     dtype)
+    return p
+
+
+def _logits(p, cfg, x):
+    x = rms_norm(p["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["lm_head"]
+    return shard_hint(logits, ("batch", "seq", "vocab"))
+
+
+def _embed_inputs(p, cfg, tokens, prefix_embeds):
+    x = p["embed"][tokens]
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype)
+        if cfg.family == "vlm":
+            pe = pe @ p["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return shard_hint(x, ("batch", "seq", "embed"))
+
+
+def decoder_forward(p, cfg, tokens, *, prefix_embeds=None,
+                    want_cache: bool = False, cache_len: int = 0,
+                    sliding_window: Optional[int] = None,
+                    attn_impl: str = "auto", ssm_impl: str = "auto",
+                    remat: bool = False, moe_dropless: bool = False,
+                    unroll: bool = False, moe_group_size: int = 0,
+                    return_hidden: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits [B,S,V], moe_aux scalar, cache|None). ``cache_len``
+    pads KV caches up to a serving capacity >= S when want_cache.
+    """
+    x = _embed_inputs(p, cfg, tokens, prefix_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    period = _period(cfg)
+    n_periods = cfg.num_layers // period
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        slot_params = xs
+        caches = {}
+        for s in range(period):
+            x, c, aux = slot_apply_full(
+                jax.tree_util.tree_map(lambda a: a, slot_params[f"slot_{s}"]),
+                cfg, x, positions, sliding_window=sliding_window,
+                attn_impl=attn_impl, ssm_impl=ssm_impl,
+                want_cache=want_cache, moe_dropless=moe_dropless,
+                unroll=unroll, moe_group_size=moe_group_size)
+            caches[f"slot_{s}"] = c
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), caches
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), p["layers"],
+        unroll=True if unroll else 1)
+
+    if return_hidden:
+        x = rms_norm(p["final_norm"], x, cfg.norm_eps)
+        return x, aux, None
+    logits = _logits(p, cfg, x)
+
+    cache = None
+    if want_cache:
+        cap = max(cache_len, S)
+        def _pad_kv(a):  # [n_periods, B, S, Hkv, dh] -> capacity cap
+            return jnp.pad(a, ((0, 0), (0, 0), (0, cap - S), (0, 0), (0, 0)))
+        for s in list(caches):
+            if caches[s] and "k" in caches[s]:
+                caches[s] = {"k": _pad_kv(caches[s]["k"]),
+                             "v": _pad_kv(caches[s]["v"])}
+        cache = {"layers": caches,
+                 "length": jnp.full((B,), S, jnp.int32)}
+    return logits, aux, cache
+
+
+def decoder_decode_step(p, cfg, cache, tokens, *,
+                        sliding_window: Optional[int] = None,
+                        attn_impl: str = "auto", unroll: bool = False,
+                        cache_update: str = "dus"
+                        ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. tokens [B,1]; cache from ``decoder_forward`` or
+    ``make_empty_cache``. Returns (logits [B,1,V], new_cache)."""
+    B = tokens.shape[0]
+    positions = cache["length"]                      # [B], next position
+    x = p["embed"][tokens]
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    period = _period(cfg)
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        slot_params, layer_cache = xs
+        new_caches = {}
+        for s in range(period):
+            x, c, aux = slot_apply_decode(
+                slot_params[f"slot_{s}"], cfg, x, positions,
+                layer_cache[f"slot_{s}"], sliding_window=sliding_window,
+                attn_impl=attn_impl, unroll=unroll,
+                cache_update=cache_update)
+            new_caches[f"slot_{s}"] = c
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), new_caches
+
+    (x, _), new_layer_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (p["layers"], cache["layers"]), unroll=True if unroll else 1)
+
+    logits = _logits(p, cfg, x)
+    new_cache = {"layers": new_layer_caches, "length": cache["length"] + 1}
+    return logits, new_cache
+
+
+def make_empty_cache(cfg, batch: int, capacity: int, dtype,
+                     length: Optional[int] = None) -> Dict:
+    """Empty (or length-prefilled-shape) cache pytree for serving."""
+    period = _period(cfg)
+    n_periods = cfg.num_layers // period
+    d_in, H, P, G, N, conv_dim = (_dims(cfg) if (cfg.family in ("ssm", "hybrid")
+                                                 and cfg.ssm_state)
+                                  else (0,) * 6)
+    layers = {}
+    for s in range(period):
+        if cfg.uses_attention(s):
+            layers[f"slot_{s}"] = {
+                "k": jnp.zeros((n_periods, batch, capacity,
+                                cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((n_periods, batch, capacity,
+                                cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+        else:
+            layers[f"slot_{s}"] = {
+                "conv": jnp.zeros((n_periods, batch, cfg.ssm_conv_width - 1,
+                                   conv_dim), dtype),
+                "ssm": jnp.zeros((n_periods, batch, H, P, N), jnp.float32),
+            }
+    ln = length if length is not None else 0
+    return {"layers": layers,
+            "length": jnp.full((batch,), ln, jnp.int32)}

@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU (qwen/jamba/pixtral) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.sharding import shard_hint
+from repro.utils import key_iter
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    ks = key_iter(key)
+    return {
+        "w_gate": dense_init(next(ks), (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(next(ks), (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(next(ks), (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    h = h * (x @ p["w_up"])
+    h = shard_hint(h, ("batch", "seq", "mlp"))
+    y = h @ p["w_down"]
+    return shard_hint(y, ("batch", "seq", "embed"))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype):
+    ks = key_iter(key)
+    return {
+        "w_in": dense_init(next(ks), (d_model, d_ff), dtype=dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(next(ks), (d_ff, d_model), dtype=dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu((x @ p["w_in"] + p["b_in"]).astype(jnp.float32))
+    h = shard_hint(h.astype(x.dtype), ("batch", "seq", "mlp"))
+    return shard_hint(h @ p["w_out"] + p["b_out"], ("batch", "seq", "embed"))

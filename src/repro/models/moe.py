@@ -1,0 +1,137 @@
+"""Top-k mixture-of-experts FFN with capacity-based einsum dispatch.
+
+The dispatch follows the GShard/Switch GSPMD recipe: tokens are split into
+groups of ``group_size``; inside a group each token's top-k experts get a
+capacity slot (overflow drops to the residual path). Dispatch/combine are
+one-hot einsums, which GSPMD partitions into all-to-alls when experts are
+sharded over the ``model`` ("expert") mesh axis.
+
+Capacity per group: C = ceil(top_k * group_size * capacity_factor / E).
+The dispatch einsum cost is 2 * T * D * top_k * group_size * cf FLOPs —
+independent of E and *linear in group_size*, which is why the group size is
+kept small (it is a tunable hillclimb knob, see EXPERIMENTS.md §Perf).
+
+Also emits the Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.sharding import shard_hint
+from repro.utils import key_iter
+
+DEFAULT_GROUP = 512
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg, dtype, d_ff: int = 0):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    E = cfg.num_experts
+    ks = key_iter(key)
+    return {
+        "router": dense_init(next(ks), (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(next(ks), (E, D, F), in_axis=1, dtype=dtype),
+        "w_up": dense_init(next(ks), (E, D, F), in_axis=1, dtype=dtype),
+        "w_down": dense_init(next(ks), (E, F, D), in_axis=1, dtype=dtype),
+    }
+
+
+def _capacity(group: int, top_k: int, E: int,
+              cf: float = CAPACITY_FACTOR) -> int:
+    return max(int(math.ceil(top_k * group * cf / E)), 1)
+
+
+def moe_dropless(p, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless routing: every expert runs on every token, combined with the
+    (renormalised) top-k gates. Exact per-token routing independent of batch
+    composition — used on the decode path where T is small and exactness
+    matters more than the E/top_k compute overhead (see EXPERIMENTS.md
+    §Roofline for the accounted waste)."""
+    B, S, D = x.shape
+    E, top_k = cfg.num_experts, cfg.num_experts_per_tok
+    xt = x.reshape(B * S, D)
+    logits = xt.astype(jnp.float32) @ p["router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], expert_idx].set(gate_vals)
+
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    ye = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    y = jnp.einsum("te,ted->td", gates.astype(x.dtype), ye)
+
+    frac_tokens = jnp.mean((gates > 0).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * top_k
+    return y.reshape(B, S, D), aux
+
+
+def moe_apply(p, cfg, x, *, group_size: int = 0,
+              dropless: bool = False,
+              capacity_factor: float = CAPACITY_FACTOR
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    if dropless:
+        return moe_dropless(p, cfg, x)
+    group_size = group_size or DEFAULT_GROUP
+    B, S, D = x.shape
+    E, top_k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    G = T // g
+    C = _capacity(g, top_k, E, capacity_factor)
+
+    xt = x.reshape(G, g, D)
+    logits = (xt.astype(jnp.float32) @ p["router"])        # [G, g, E] fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection, positioned into capacity slots
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)    # [G, g, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)            # renormalise
+
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # [G,g,k,E]
+    # slot position of token t's k-th choice within its expert queue
+    pos_e = jnp.cumsum(onehot.reshape(G, g * top_k, E), axis=1
+                       ).reshape(G, g, top_k, E) - 1.0
+    pos = jnp.sum(pos_e * onehot, axis=-1)                 # [G,g,k] scalar slot
+    keep = (pos < C).astype(jnp.float32)
+    # one-hot over capacity slots, zeroed for dropped tokens. The [E]x[C]
+    # outer products are contracted over k by the einsums below without ever
+    # materialising a [g, k, E, C] intermediate.
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                             dtype=jnp.float32) * keep[..., None]  # [G,g,k,C]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, slot_oh)      # [G,g,E,C]
+    combine = jnp.einsum("gtke,gtkc->gtec",
+                         onehot * gate_vals[..., None], slot_oh)
+
+    dispatch = shard_hint(dispatch, ("expert_group", None, "expert", None))
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    xe = shard_hint(xe, ("expert_group", "expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = shard_hint(ye, ("expert_group", "expert", None, None))
+
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    y = y.reshape(B, S, D)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    frac_tokens = jnp.mean(onehot[..., 0, :], axis=(0, 1)) if top_k == 1 \
+        else jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1)) / top_k
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return shard_hint(y, ("batch", "seq", "embed")), aux

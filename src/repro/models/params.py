@@ -1,0 +1,40 @@
+"""Parameter accounting (exact, via ``jax.eval_shape`` over the real init).
+
+``count_params_analytic(cfg)`` is used for the roofline MODEL_FLOPS terms:
+dense archs use 6*N*D; MoE archs use 6*N_active*D where N_active replaces
+each MoE layer's expert bank with top_k experts' worth of weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _shapes(cfg):
+    from repro.models.model import build_model
+    m = build_model(cfg)
+    tree = jax.eval_shape(lambda k: m.init(k), jax.ShapeDtypeStruct((2,),
+                                                                    jnp.uint32))
+    return tree
+
+
+def _leaf_sizes_with_paths(tree):
+    import math
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        name = "/".join(str(p) for p in path)
+        yield name, math.prod(leaf.shape) if leaf.shape else 1
+
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    total = 0
+    for name, size in _leaf_sizes_with_paths(_shapes(cfg)):
+        is_expert = any(t in name for t in ("w_gate", "w_up", "w_down")) \
+            and "moe" in name
+        if active_only and is_expert and cfg.num_experts:
+            size = size * cfg.num_experts_per_tok // cfg.num_experts
+        total += size
+    return total

@@ -1,0 +1,133 @@
+"""Mamba2 (SSD) block — full-sequence chunked scan and single-token decode.
+
+Block layout follows the Mamba2 paper: fused in-projection producing
+(z, x, B, C, dt), short causal depthwise conv over (x, B, C), softplus dt,
+the SSD scan (``repro.kernels.ssd_scan``), gated RMSNorm, out-projection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_decode_ref
+from repro.models.common import dense_init, rms_norm
+from repro.sharding import shard_hint
+from repro.utils import key_iter
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, G, N, conv_dim
+
+
+def ssm_init(key, cfg, dtype):
+    D = cfg.d_model
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    W = cfg.ssm_conv_width
+    ks = key_iter(key)
+    proj_dim = 2 * d_in + 2 * G * N + H
+    return {
+        "in_proj": dense_init(next(ks), (D, proj_dim), dtype=dtype),
+        "conv_w": (jax.random.normal(next(ks), (W, conv_dim), jnp.float32)
+                   * (W ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "out_proj": dense_init(next(ks), (d_in, D), dtype=dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    z = proj[..., :d_in]
+    rest = proj[..., d_in:d_in + conv_dim]
+    dt = proj[..., d_in + conv_dim:]
+    return z, rest, dt                          # rest = (x, B, C) pre-conv
+
+
+def _split_conv_out(u, cfg):
+    d_in, H, P, G, N, _ = _dims(cfg)
+    x = u[..., :d_in]
+    Bm = u[..., d_in:d_in + G * N]
+    Cm = u[..., d_in + G * N:]
+    return x, Bm, Cm
+
+
+def _causal_conv_full(p, u):
+    """Depthwise causal conv. u [B,S,C] -> [B,S,C]."""
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * p["conv_w"][i]
+              for i in range(W))
+    return out + p["conv_b"]
+
+
+def ssm_full(p, cfg, x, *, return_state: bool = False, impl: str = "auto",
+             unroll: bool = False):
+    """x [B,S,D] -> y [B,S,D] (+ (conv_state, ssm_state) for serve handoff)."""
+    B, S, D = x.shape
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    W = cfg.ssm_conv_width
+
+    proj = x @ p["in_proj"]
+    z, pre, dt_raw = _split_proj(proj, cfg)
+    u = jax.nn.silu(_causal_conv_full(p, pre).astype(jnp.float32)
+                    ).astype(x.dtype)
+    xs, Bm, Cm = _split_conv_out(u, cfg)
+    xs = shard_hint(xs.reshape(B, S, H, P), ("batch", "seq", "heads", None))
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+                        impl=impl, unroll=unroll)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(p["norm_scale"],
+                 y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 cfg.norm_eps)
+    out = shard_hint(y @ p["out_proj"], ("batch", "seq", "embed"))
+    if return_state:
+        conv_state = jnp.pad(pre, ((0, 0), (W - 1, 0), (0, 0)))[:, S:S + W - 1]
+        return out, (conv_state, state)
+    return out
+
+
+def ssm_decode(p, cfg, x, conv_state, ssm_state
+               ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token recurrent step.
+
+    x [B,1,D]; conv_state [B,W-1,conv_dim]; ssm_state [B,H,P,N] fp32.
+    """
+    B = x.shape[0]
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    W = cfg.ssm_conv_width
+
+    proj = x[:, 0] @ p["in_proj"]                  # [B, proj_dim]
+    z, pre, dt_raw = _split_proj(proj, cfg)
+    window = jnp.concatenate([conv_state, pre[:, None, :]], axis=1)  # [B,W,C]
+    u = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = _split_conv_out(u, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, ssm_state = ssd_decode_ref(
+        xs.reshape(B, H, P), dt, A, Bm.reshape(B, G, N), Cm.reshape(B, G, N),
+        p["D"], ssm_state)
+    y = y.reshape(B, d_in)
+    y = rms_norm(p["norm_scale"],
+                 y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, (window[:, 1:], ssm_state)

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import Optimizer, make_optimizer
+from repro.optim.schedules import make_schedule
+
+__all__ = ["Optimizer", "make_optimizer", "make_schedule"]

@@ -1,0 +1,105 @@
+"""Pytree optimizers: SGD / momentum / Adam / AdamW, with grad clipping.
+
+No optax dependency — states are plain pytrees so the FL engine can stack
+them along a client axis and the launchers can shard them like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import make_schedule
+from repro.utils import tree_l2_norm
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+    name: str = ""
+
+
+def _clip(grads, max_norm):
+    if not max_norm or max_norm <= 0:
+        return grads
+    norm = tree_l2_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def make_optimizer(cfg) -> Optimizer:
+    """cfg: TrainConfig."""
+    sched = make_schedule(cfg)
+
+    if cfg.optimizer == "sgd":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = sched(state["step"])
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, {"step": state["step"] + 1}
+        return Optimizer(init, update, "sgd")
+
+    if cfg.optimizer == "momentum":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32),
+                    "mu": jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+        def update(grads, state, params):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = sched(state["step"])
+            mu = jax.tree_util.tree_map(
+                lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            new = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, mu)
+            return new, {"step": state["step"] + 1, "mu": mu}
+        return Optimizer(init, update, "momentum")
+
+    if cfg.optimizer in ("adam", "adamw"):
+        wd = cfg.weight_decay if cfg.optimizer == "adamw" else 0.0
+
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, jnp.float32)
+            return {"step": jnp.zeros((), jnp.int32),
+                    "m": jax.tree_util.tree_map(z, params),
+                    "v": jax.tree_util.tree_map(z, params)}
+
+        def update(grads, state, params):
+            grads = _clip(grads, cfg.grad_clip)
+            step = state["step"] + 1
+            lr = sched(state["step"])
+            b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+            m = jax.tree_util.tree_map(
+                lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                state["m"], grads)
+            v = jax.tree_util.tree_map(
+                lambda v_, g: b2 * v_ + (1 - b2)
+                * jnp.square(g.astype(jnp.float32)),
+                state["v"], grads)
+            bc1 = 1 - b1 ** step.astype(jnp.float32)
+            bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+            def upd(p, m_, v_):
+                u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                if wd:
+                    u = u + wd * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+            new = jax.tree_util.tree_map(upd, params, m, v)
+            return new, {"step": step, "m": m, "v": v}
+        return Optimizer(init, update, cfg.optimizer)
+
+    raise ValueError(cfg.optimizer)

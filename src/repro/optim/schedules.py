@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(cfg):
+    """cfg: TrainConfig -> step -> lr."""
+    base = cfg.lr
+    warmup = max(cfg.warmup_steps, 0)
+    total = max(cfg.total_steps, 1)
+
+    if cfg.schedule == "constant":
+        def sched(step):
+            return jnp.asarray(base, jnp.float32)
+    elif cfg.schedule == "cosine":
+        def sched(step):
+            frac = jnp.clip(step / total, 0.0, 1.0)
+            return base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear_warmup_cosine":
+        def sched(step):
+            wu = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+            frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                            0.0, 1.0)
+            return base * wu * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    else:
+        raise ValueError(cfg.schedule)
+    return sched

@@ -1,0 +1,5 @@
+from repro.roofline.hw import TPU_V5E
+from repro.roofline.analysis import (
+    parse_collectives, roofline_terms, model_flops)
+
+__all__ = ["TPU_V5E", "parse_collectives", "roofline_terms", "model_flops"]

@@ -1,0 +1,104 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+* HLO_FLOPs / HLO_bytes — from ``compiled.cost_analysis()``.
+* collective bytes       — parsed from the post-SPMD ``compiled.as_text()``:
+  shapes there are *per-partition*, so summed operand/output sizes are
+  bytes-per-device directly. All-reduce counts 2x (reduce-scatter +
+  all-gather decomposition on a ring); the others 1x.
+
+    compute_term    = HLO_FLOPs / (chips * peak)        [s]
+    memory_term     = HLO_bytes / (chips * hbm_bw)      [s]
+    collective_term = coll_bytes_per_dev / link_bw      [s]
+
+cost_analysis flops/bytes are *whole-program* totals for the partitioned
+module as compiled for one logical program: with SPMD partitioning the
+reported numbers are per-partition, so we do NOT divide by chips again —
+``per_device=True`` flags that. (The CPU-backend dry-run compiles the
+partitioned module, so numbers arrive per-device.)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_LINE_RE = re.compile(
+    r"=\s*(.+?)\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device output bytes of every collective op, by op kind."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:          # async pair: count the -start only
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        op = m.group(2)
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+def collective_bytes_per_device(colls: Dict[str, int]) -> float:
+    factors = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(b * factors.get(op, 1.0) for op, b in colls.items())
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, chip, num_chips: int,
+                   per_device: bool = True) -> Dict[str, float]:
+    div = 1 if per_device else num_chips
+    compute = flops / div / chip.peak_flops_bf16
+    memory = bytes_accessed / div / chip.hbm_bw
+    collective = coll_bytes / chip.ici_link_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, shape, active: bool = True) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference steps
+    (N = (active) params, D = tokens processed)."""
+    n = cfg.active_param_count() if active else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

@@ -1,0 +1,9 @@
+from repro.sharding.hints import (
+    shard_hint, logical_rules, current_rules, spec_for)
+from repro.sharding.rules import (
+    RULESETS, param_spec_tree, make_ruleset, guard_divisibility)
+
+__all__ = [
+    "shard_hint", "logical_rules", "current_rules", "spec_for",
+    "RULESETS", "param_spec_tree", "make_ruleset", "guard_divisibility",
+]

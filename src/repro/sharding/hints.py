@@ -1,0 +1,49 @@
+"""Logical-axis sharding hints.
+
+Model code is written once, annotation-free of any concrete mesh: it tags
+activations with *logical* axis names via ``shard_hint(x, ("batch", "seq",
+"embed"))``. The launcher activates a rule set (logical name -> mesh axes)
+with ``logical_rules(...)``; outside that context the hints are no-ops, so
+the exact same model code runs on one CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Dict[str, Axis]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             rules: Optional[Dict[str, Axis]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    return P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+
+
+def shard_hint(x, logical_axes: Sequence[Optional[str]]):
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec_for(logical_axes, rules))

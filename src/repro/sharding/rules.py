@@ -1,0 +1,136 @@
+"""Concrete sharding rule sets: logical activation axes + per-param specs.
+
+Activation rules (used by ``shard_hint`` inside model code) and parameter
+PartitionSpecs (used as ``in_shardings`` by the launchers) are both derived
+from the mesh axis names, so the same model code serves:
+
+* single pod  — mesh ("data", "model") = (16, 16)
+* multi pod   — mesh ("pod", "data", "model") = (2, 16, 16)
+
+Parameter layout is FSDP-style: the "feature-out" dimension of each matmul
+weight is sharded over ``model`` and the other large dimension over
+(``pod``, ``data``), so 110B/398B optimizer state fits; XLA inserts the
+per-layer all-gathers. Vectors and norm scales are replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def make_ruleset(axes: Tuple[str, ...], *, kind: str = "train",
+                 batch_divisible: bool = True) -> Dict[str, object]:
+    """Logical-axis -> mesh-axis rules for activations."""
+    fsdp = tuple(a for a in axes if a != "model")
+    fsdp = fsdp[0] if len(fsdp) == 1 else fsdp
+    batch = fsdp if batch_divisible else None
+    rules: Dict[str, object] = {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,
+        "kv_seq": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_group": batch,
+    }
+    if kind == "decode" and not batch_divisible:
+        # long-context decode with batch=1: spread the KV over everything
+        rules["kv_seq"] = tuple(a for a in axes)
+    return rules
+
+
+RULESETS = {"make": make_ruleset}
+
+
+# --------------------------------------------------------------- param specs
+_MATMUL_SPECS = {
+    # name -> (spec by dim, from the *trailing* dims of the leaf)
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    "w_gate": ("fsdp", "model"),
+    "w_up": ("fsdp", "model"),
+    "w_down": ("model", "fsdp"),
+    "w_in": ("fsdp", "model"),
+    "w_out": ("model", "fsdp"),
+    "in_proj": ("fsdp", "model"),
+    "out_proj": ("model", "fsdp"),
+    "router": ("fsdp", None),
+    "embed": ("model", "fsdp"),      # vocab over model
+    "lm_head": ("fsdp", "model"),
+    "dec_pos": (None, "fsdp"),
+    "patch_proj": ("fsdp", None),
+    "conv_w": (None, "model"),
+}
+_MOE_SPECS = {  # leading expert dim over model (expert parallelism)
+    "w_gate": ("model", "fsdp", None),
+    "w_up": ("model", "fsdp", None),
+    "w_down": ("model", None, "fsdp"),
+}
+
+
+def _resolve(axis_tag: Optional[str], fsdp_axes):
+    if axis_tag == "fsdp":
+        return fsdp_axes
+    return axis_tag
+
+
+def _leaf_spec(path, leaf, fsdp_axes) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    names = [n for n in names if isinstance(n, str)]
+    leafname = names[-1] if names else ""
+    in_moe = "moe" in names
+    stacked = sum(1 for n in names
+                  if n in ("layers", "encoder", "decoder")
+                  or n.startswith("slot_"))
+    # slot_k lives under layers -> exactly one leading stack axis
+    n_stack = 1 if stacked else 0
+
+    table = _MOE_SPECS if (in_moe and leafname in _MOE_SPECS) else _MATMUL_SPECS
+    if leafname in table:
+        tags = table[leafname]
+        spec = [_resolve(t, fsdp_axes) for t in tags]
+        ndim = leaf.ndim
+        if n_stack and ndim == len(tags) + 1:
+            spec = [None] + spec
+        elif ndim != len(spec):
+            spec = [None] * (ndim - len(spec)) + spec
+        return P(*spec)
+    # vectors / norms / biases / scalar banks: replicate
+    return P(*([None] * leaf.ndim))
+
+
+def param_spec_tree(params, axes: Tuple[str, ...]):
+    """PartitionSpec pytree matching ``params`` (shape/dtype structs ok)."""
+    fsdp = tuple(a for a in axes if a != "model")
+    fsdp = fsdp[0] if len(fsdp) == 1 else (fsdp if fsdp else None)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, fsdp), params)
+
+
+def guard_divisibility(spec_tree, shape_tree, mesh):
+    """Drop mesh axes from specs whenever they don't divide the dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _fix(spec: P, leaf) -> P:
+        entries = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        fixed = []
+        for dim, ax in zip(leaf.shape, entries):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([sizes[a] for a in axs]))
+            fixed.append(ax if dim % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map(
+        _fix, spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,24 @@
+from repro.utils.pytree import (
+    tree_bytes,
+    tree_size,
+    tree_zeros_like,
+    tree_weighted_sum,
+    tree_add,
+    tree_scale,
+    tree_l2_norm,
+    tree_cast,
+)
+from repro.utils.prng import key_iter, fold_in_name
+
+__all__ = [
+    "tree_bytes",
+    "tree_size",
+    "tree_zeros_like",
+    "tree_weighted_sum",
+    "tree_add",
+    "tree_scale",
+    "tree_l2_norm",
+    "tree_cast",
+    "key_iter",
+    "fold_in_name",
+]

@@ -1,0 +1,19 @@
+"""PRNG-key plumbing helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def key_iter(key):
+    """Infinite iterator of fresh subkeys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def fold_in_name(key, name: str):
+    """Deterministically derive a key from a string (stable across runs)."""
+    h = 0
+    for ch in name:
+        h = (h * 131 + ord(ch)) % (2 ** 31 - 1)
+    return jax.random.fold_in(key, h)

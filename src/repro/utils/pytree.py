@@ -1,0 +1,61 @@
+"""Pytree arithmetic helpers used by optimizers and the FL aggregators."""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees: Sequence[Pytree], weights) -> Pytree:
+    """sum_i w_i * tree_i  — the FL aggregation primitive.
+
+    ``trees`` may be a list of pytrees, or a single *stacked* pytree whose
+    leaves carry a leading client axis; ``weights`` is a vector of matching
+    length. The stacked form is the one used on device.
+    """
+    weights = jnp.asarray(weights)
+    if isinstance(trees, (list, tuple)):
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+    else:
+        stacked = trees
+
+    def _comb(x):
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(x.dtype)
+
+    return jax.tree_util.tree_map(_comb, stacked)
+
+
+def tree_l2_norm(tree: Pytree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

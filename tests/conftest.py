@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see exactly 1 CPU device (dry-runs set their own flags in a
+subprocess)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_lm_batch(cfg, B=2, S=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    from repro.models.frontend_stub import stub_embeddings
+    if cfg.family == "cnn":
+        return {
+            "images": jax.random.normal(
+                ks[0], (B, cfg.image_size, cfg.image_size,
+                        cfg.image_channels)),
+            "labels": jax.random.randint(ks[1], (B,), 0, cfg.num_classes)}
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["patches"] = stub_embeddings(cfg, B, ks[2], dtype=jnp.float32)
+    if cfg.family == "encdec":
+        b["frames"] = stub_embeddings(cfg, B, ks[2], dtype=jnp.float32)
+    return b

@@ -1,0 +1,35 @@
+"""Checkpoint round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.array(7, jnp.int32)},
+            "list": [jnp.zeros(2), jnp.full((1, 2), 3.0)]}
+    path = str(tmp_path / "t.npz")
+    save_pytree(tree, path)
+    out = load_pytree(tree, path)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_manager_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros(3)}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, jax.tree_util.tree_map(lambda x, s=step: x + s, tree))
+    assert mgr.latest_step() == 4
+    restored = mgr.restore(tree)
+    np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
+    # gc kept only the last 2
+    assert mgr.latest_step() == 4
+    import glob
+    assert len(glob.glob(str(tmp_path / "ckpt_*.npz"))) == 2

@@ -1,0 +1,93 @@
+"""Config registry: every assigned architecture loads with the exact
+assigned hyper-parameters, and analytic param counts land in the right
+ballpark for the named model sizes."""
+import pytest
+
+from repro.config import INPUT_SHAPES, reduce_for_smoke
+from repro.configs import get_config, list_configs
+
+ASSIGNED = {
+    "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                         num_kv_heads=8, d_ff=2048, vocab_size=51865),
+    "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048, num_heads=32,
+                              num_kv_heads=4, d_ff=768, vocab_size=151936,
+                              num_experts=128, num_experts_per_tok=8),
+    "qwen3-1.7b": dict(num_layers=28, d_model=2048, num_heads=16,
+                       num_kv_heads=8, d_ff=6144, vocab_size=151936,
+                       qk_norm=True),
+    "mamba2-2.7b": dict(num_layers=64, d_model=2560, d_ff=0,
+                        vocab_size=50280, ssm_state=128),
+    "qwen2-0.5b": dict(num_layers=24, d_model=896, num_heads=14,
+                       num_kv_heads=2, d_ff=4864, vocab_size=151936,
+                       qkv_bias=True),
+    "qwen1.5-110b": dict(num_layers=80, d_model=8192, num_heads=64,
+                         num_kv_heads=8, d_ff=49152, vocab_size=152064,
+                         qkv_bias=True),
+    "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                      num_kv_heads=8, d_ff=29568, vocab_size=152064,
+                      qkv_bias=True),
+    "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192, num_heads=64,
+                                 num_kv_heads=8, d_ff=24576,
+                                 vocab_size=65536, num_experts=16,
+                                 num_experts_per_tok=2),
+    "pixtral-12b": dict(num_layers=40, d_model=5120, num_heads=32,
+                        num_kv_heads=8, d_ff=14336, vocab_size=131072),
+    "granite-moe-1b-a400m": dict(num_layers=24, d_model=1024, num_heads=16,
+                                 num_kv_heads=8, d_ff=512, vocab_size=49155,
+                                 num_experts=32, num_experts_per_tok=8),
+}
+
+# target total-param counts (fraction tolerance): sanity that the configs
+# really describe the named model sizes
+SIZES = {
+    "qwen2-0.5b": (0.5e9, 0.45),
+    "qwen3-1.7b": (1.7e9, 0.45),
+    "mamba2-2.7b": (2.7e9, 0.35),
+    "pixtral-12b": (12e9, 0.3),
+    "qwen3-moe-30b-a3b": (30e9, 0.3),
+    "qwen2-72b": (72e9, 0.25),
+    "qwen1.5-110b": (110e9, 0.25),
+    "jamba-1.5-large-398b": (398e9, 0.3),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_hyperparams(arch):
+    cfg = get_config(arch)
+    for field, expected in ASSIGNED[arch].items():
+        assert getattr(cfg, field) == expected, (arch, field)
+
+
+def test_all_ids_resolve():
+    for arch in list_configs():
+        cfg = get_config(arch)
+        assert cfg.name
+
+
+@pytest.mark.parametrize("arch", sorted(SIZES))
+def test_param_counts_match_model_size(arch):
+    cfg = get_config(arch)
+    target, tol = SIZES[arch]
+    n = cfg.param_count()
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_smoke_reduction_bounds(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4

@@ -1,0 +1,93 @@
+"""shard_map FedTest round on 8 host-platform devices (subprocess, so the
+device-count flag never leaks into other tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core.distributed import (
+    make_allgather_round, make_distributed_round, ring_cross_test)
+from repro.core.cross_testing import cross_test_accuracies
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset, \
+    sample_client_batches
+from repro.models import build_model
+
+N = 8
+mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                              cnn_hidden=16)
+model = build_model(cfg)
+fed = FedConfig(num_users=N, num_testers=N, num_malicious=0, local_steps=6)
+tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                 batch_size=8, grad_clip=0.0, remat=False)
+data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
+                                    global_test=200, seed=0)
+
+round_fn = make_distributed_round(model, fed, tc, mesh)
+ag_round_fn = make_allgather_round(model, fed, tc, mesh)
+
+params = model.init(jax.random.PRNGKey(0))
+scores = init_scores(N)
+bx, by = sample_client_batches(jax.random.PRNGKey(1), data.train,
+                               fed.local_steps, tc.batch_size)
+tx = data.test.xs[:, :64]
+ty = data.test.ys[:, :64]
+mask = jnp.ones((N,), jnp.float32)
+
+new_global, new_scores, metrics = jax.jit(round_fn)(
+    params, scores, bx, by, tx, ty, mask)
+ag_global, ag_scores, ag_metrics = jax.jit(ag_round_fn)(
+    params, scores, bx, by, tx, ty, mask)
+
+# ring and all-gather paths must agree exactly (same math, diff schedule)
+ring_w = np.asarray(metrics["weights"])
+ag_w = np.asarray(ag_metrics["weights"])
+max_w_err = float(np.abs(ring_w - ag_w).max())
+
+leaf_err = max(
+    float(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max())
+    for a, b in zip(jax.tree_util.tree_leaves(new_global),
+                    jax.tree_util.tree_leaves(ag_global)))
+
+# and the global model must actually train across rounds
+g = new_global
+s = new_scores
+for r in range(2, 4):
+    bx, by = sample_client_batches(jax.random.PRNGKey(r), data.train,
+                                   fed.local_steps, tc.batch_size)
+    g, s, metrics = jax.jit(round_fn)(g, s, bx, by, tx, ty, mask)
+
+logits, _ = model.forward_train(g, {"images": data.global_x[:256]})
+acc = float((jnp.argmax(logits, -1) == data.global_y[:256]).mean())
+
+print(json.dumps({"max_w_err": max_w_err, "leaf_err": leaf_err,
+                  "weights_sum": float(ring_w.sum()), "acc": acc}))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_round_matches_allgather_and_trains(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["max_w_err"] < 1e-5
+    assert out["leaf_err"] < 1e-4
+    assert abs(out["weights_sum"] - 1.0) < 1e-4
+    assert out["acc"] > 0.25

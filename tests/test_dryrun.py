@@ -1,0 +1,50 @@
+"""Dry-run machinery on the production mesh (subprocess: needs 512
+host-platform placeholder devices, which must never leak into this
+process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import json
+from repro.launch.dryrun import lower_one
+rec = lower_one("mamba2-2.7b", "long_500k", multi_pod=False,
+                extrapolate=False)
+print(json.dumps({"status": rec["status"],
+                  "chips": rec.get("num_chips"),
+                  "coll": sum(rec.get("collectives", {}).values())}))
+"""
+
+SKIP_SCRIPT = r"""
+import json
+from repro.launch.dryrun import lower_one
+rec = lower_one("whisper-base", "long_500k", multi_pod=False)
+print(json.dumps(rec))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_compiles_on_production_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["status"] == "ok"
+    assert out["chips"] == 256
+    assert out["coll"] > 0          # sharded program must communicate
+
+
+def test_whisper_long_context_is_skipped_with_reason():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SKIP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["status"] == "skipped"
+    assert "448" in out["reason"]

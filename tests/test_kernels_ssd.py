@@ -1,0 +1,83 @@
+"""Mamba2 SSD kernel: chunked scan vs the sequential oracle, plus the
+decode recurrence hand-off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ops import _ssd_xla
+from repro.kernels.ssd_scan.ref import ssd_decode_ref, ssd_ref
+
+SHAPES = [
+    # (Bt, S, H, P, G, N)
+    (1, 64, 2, 16, 1, 8),
+    (2, 128, 4, 32, 2, 16),
+    (1, 96, 6, 16, 3, 8),     # H/G = 2, S not a power of two
+]
+
+
+def _inputs(shape, key=0):
+    Bt, S, H, P, G, N = shape
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, S, G, N))
+    C = jax.random.normal(ks[4], (Bt, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_pallas_ssd_matches_sequential(shape, chunk):
+    if shape[1] % chunk:
+        pytest.skip("chunk must divide S for the Pallas grid")
+    x, dt, A, B, C, D = _inputs(shape)
+    yr, hr = ssd_ref(x, dt, A, B, C, D)
+    yp, hp = ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hr), atol=1e-3,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_xla_chunked_matches_sequential(shape):
+    x, dt, A, B, C, D = _inputs(shape, key=1)
+    yr, hr = ssd_ref(x, dt, A, B, C, D)
+    yx, hx = _ssd_xla(x, dt, A, B, C, D, chunk=32)
+    np.testing.assert_allclose(np.asarray(yx), np.asarray(yr), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hx), np.asarray(hr), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_bf16_inputs():
+    shape = (1, 64, 2, 16, 1, 8)
+    x, dt, A, B, C, D = _inputs(shape, key=2)
+    yr, _ = ssd_ref(x, dt, A, B, C, D)
+    yp, _ = ssd_scan_pallas(x.astype(jnp.bfloat16), dt, A,
+                            B.astype(jnp.bfloat16),
+                            C.astype(jnp.bfloat16), D, chunk=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(yp, np.float32), np.asarray(yr),
+                               atol=0.15, rtol=0.15)
+
+
+def test_decode_recurrence_continues_scan():
+    """State from the chunked scan feeds the decode step exactly."""
+    shape = (2, 64, 4, 16, 2, 8)
+    Bt, S, H, P, G, N = shape
+    x, dt, A, B, C, D = _inputs(shape, key=3)
+    y_all, h_all = ssd_ref(x, dt, A, B, C, D)
+    # scan the first S-1 steps, then decode step S-1
+    y_pre, h_pre = _ssd_xla(x[:, :S - 1], dt[:, :S - 1], A, B[:, :S - 1],
+                            C[:, :S - 1], D, chunk=21)
+    y_dec, h_dec = ssd_decode_ref(x[:, -1], dt[:, -1], A, B[:, -1],
+                                  C[:, -1], D, h_pre)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_all[:, -1]),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_dec), np.asarray(h_all),
+                               atol=1e-3, rtol=1e-3)

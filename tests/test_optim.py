@@ -1,0 +1,69 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optim import make_optimizer, make_schedule
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw"])
+def test_optimizer_minimises_quadratic(name):
+    cfg = TrainConfig(optimizer=name, lr=0.1, schedule="constant",
+                      weight_decay=0.0, grad_clip=0.0)
+    opt = make_optimizer(cfg)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = TrainConfig(optimizer="sgd", lr=1.0, schedule="constant",
+                      grad_clip=1.0)
+    opt = make_optimizer(cfg)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(4, 100.0)}
+    new, _ = opt.update(grads, state, params)
+    assert float(jnp.linalg.norm(new["w"])) <= 1.0 + 1e-5
+
+
+def test_weight_decay_shrinks_params():
+    base = TrainConfig(optimizer="adam", lr=0.01, schedule="constant",
+                       grad_clip=0.0)
+    wd = TrainConfig(optimizer="adamw", lr=0.01, weight_decay=0.5,
+                     schedule="constant", grad_clip=0.0)
+    p0 = {"w": jnp.full(3, 5.0)}
+    grads = {"w": jnp.zeros(3)}
+    for cfg, expect_shrink in [(base, False), (wd, True)]:
+        opt = make_optimizer(cfg)
+        p, s = p0, opt.init(p0)
+        p, s = opt.update(grads, s, p)
+        if expect_shrink:
+            assert float(p["w"][0]) < 5.0
+        else:
+            np.testing.assert_allclose(np.asarray(p["w"]), 5.0, atol=1e-6)
+
+
+def test_cosine_schedule_endpoints():
+    cfg = TrainConfig(lr=1.0, schedule="cosine", total_steps=100)
+    sched = make_schedule(cfg)
+    assert abs(float(sched(0)) - 1.0) < 1e-6
+    assert float(sched(100)) < 1e-6
+    assert 0.4 < float(sched(50)) < 0.6
+
+
+def test_warmup_cosine():
+    cfg = TrainConfig(lr=1.0, schedule="linear_warmup_cosine",
+                      warmup_steps=10, total_steps=100)
+    sched = make_schedule(cfg)
+    assert float(sched(0)) == 0.0
+    assert float(sched(5)) < float(sched(10))

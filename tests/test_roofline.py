@@ -1,0 +1,69 @@
+"""Roofline analysis plumbing: HLO collective parsing + term math."""
+import pytest
+
+from repro.config import INPUT_SHAPES
+from repro.configs import get_config
+from repro.roofline import TPU_V5E, model_flops, parse_collectives
+from repro.roofline.analysis import (
+    _shape_bytes, collective_bytes_per_device, roofline_terms)
+
+HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%sum
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[16,64]{1,0} all-to-all(%z), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ars = (f32[256]{0}, f32[256]{0}) all-reduce-start(%q), to_apply=%sum
+  %ard = f32[256]{0} all-reduce-done(%ars)
+  %dot = f32[4,4]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert _shape_bytes("f32[1024]{0}") == 4096
+    assert _shape_bytes("(f32[2]{0}, bf16[4]{0})") == 8 + 8
+
+
+def test_parse_collectives_kinds_and_bytes():
+    colls = parse_collectives(HLO)
+    assert colls["all-gather"] == 2048 * 256 * 2
+    assert colls["reduce-scatter"] == 64 * 32 * 4
+    assert colls["all-to-all"] == 16 * 64 * 2
+    assert colls["collective-permute"] == 8 * 8 * 2
+    # sync all-reduce + the async -start pair (done line skipped)
+    assert colls["all-reduce"] == 1024 * 4 + 2 * 256 * 4
+
+
+def test_collective_factors():
+    b = collective_bytes_per_device({"all-reduce": 100, "all-gather": 50})
+    assert b == 2 * 100 + 50
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(flops=197e12, bytes_accessed=819e9 * 2,
+                       coll_bytes=50e9 * 0.5, chip=TPU_V5E, num_chips=256)
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    assert abs(t["memory_s"] - 2.0) < 1e-6
+    assert abs(t["collective_s"] - 0.5) < 1e-6
+    assert t["bottleneck"] == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen2-0.5b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr > de * 1000
+    n = cfg.param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    f_active = model_flops(cfg, INPUT_SHAPES["train_4k"], active=True)
+    f_total = model_flops(cfg, INPUT_SHAPES["train_4k"], active=False)
+    assert f_active < 0.3 * f_total

@@ -1,0 +1,82 @@
+"""Sharding rule sets + divisibility guard (no multi-device mesh needed —
+specs are pure metadata)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, reduce_for_smoke
+from repro.configs import get_config
+from repro.models import build_model
+from repro.sharding import (guard_divisibility, make_ruleset,
+                            param_spec_tree)
+
+
+class FakeMesh:
+    """Stand-in carrying just axis names + sizes (enough for the guard)."""
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+def _specs_for(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return cfg, params, param_spec_tree(params, ("data", "model"))
+
+
+def test_dense_param_specs():
+    cfg, params, specs = _specs_for("qwen3-1.7b")
+    slot = specs["layers"]["slot_0"]
+    # stacked weights get a leading None then (fsdp, model) or (model, fsdp)
+    assert slot["attn"]["wq"] == P(None, "data", "model")
+    assert slot["attn"]["wo"] == P(None, "model", "data")
+    assert slot["ffn"]["w_gate"] == P(None, "data", "model")
+    assert slot["ffn"]["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", "data")
+    # norms replicate
+    assert slot["norm1"]["scale"] == P(None, None)
+
+
+def test_moe_param_specs_expert_parallel():
+    cfg, params, specs = _specs_for("granite-moe-1b-a400m")
+    moe = specs["layers"]["slot_0"]["moe"]
+    assert moe["w_gate"] == P(None, "model", "data", None)
+    assert moe["w_down"] == P(None, "model", None, "data")
+    assert moe["router"] == P(None, "data", None)
+
+
+def test_multi_pod_fsdp_axes():
+    cfg, params, _ = _specs_for("qwen2-0.5b")
+    specs = param_spec_tree(params, ("pod", "data", "model"))
+    assert specs["layers"]["slot_0"]["attn"]["wq"] == \
+        P(None, ("pod", "data"), "model")
+
+
+def test_divisibility_guard_drops_bad_axes():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = {"w": P("data", "model")}
+    shapes = {"w": jax.ShapeDtypeStruct((24, 32), jnp.float32)}
+    fixed = guard_divisibility(spec, shapes, mesh)
+    assert fixed["w"] == P(None, "model")     # 24 % 16 != 0 -> dropped
+
+
+def test_ruleset_decode_long_context():
+    rules = make_ruleset(("data", "model"), kind="decode",
+                         batch_divisible=False)
+    assert rules["batch"] is None
+    assert rules["kv_seq"] == ("data", "model")
+    rules2 = make_ruleset(("data", "model"), kind="decode",
+                          batch_divisible=True)
+    assert rules2["batch"] == "data"
+    assert rules2["kv_seq"] == "model"
+
+
+def test_hints_noop_without_rules():
+    from repro.sharding import shard_hint
+    x = jnp.ones((4, 4))
+    out = shard_hint(x, ("batch", "embed"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))

@@ -1,0 +1,56 @@
+"""Sec. V-C trusted-tester mechanism end-to-end: with ``use_trust`` the
+server down-weights testers whose reports deviate from consensus, so a
+persistent liar loses influence over the scores."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scoring import (
+    ScoreState, combine_tester_reports, init_scores, update_scores,
+    update_tester_trust)
+
+
+def test_trust_converges_against_persistent_liar():
+    n = 6
+    state = init_scores(n)
+    tester_ids = jnp.array([0, 1, 2])
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        honest = jnp.asarray(
+            np.clip(0.7 + 0.03 * rng.normal(size=(1, n)), 0, 1))
+        acc = jnp.concatenate([
+            jnp.asarray(rng.uniform(size=(1, n))),   # tester 0 lies
+            honest, honest + 0.01], axis=0)
+        state = update_tester_trust(state, acc, tester_ids)
+    trust = np.asarray(state.tester_trust)
+    assert trust[0] < 0.6 * trust[1]
+    assert trust[0] < 0.6 * trust[2]
+
+
+def test_trust_weighted_reports_ignore_liar():
+    n = 4
+    state = init_scores(n)
+    tester_ids = jnp.array([0, 1])
+    # tester 0 inverts accuracies, tester 1 honest
+    acc = jnp.array([[0.1, 0.9, 0.1, 0.9],
+                     [0.9, 0.1, 0.9, 0.1]])
+    # after trust collapse for tester 0:
+    state = state._replace(tester_trust=jnp.array([0.01, 1.0, 1.0, 1.0]))
+    combined = np.asarray(combine_tester_reports(acc, tester_ids,
+                                                 trust=state.tester_trust))
+    np.testing.assert_allclose(combined, [0.892, 0.108, 0.892, 0.108],
+                               atol=1e-2)
+
+
+def test_trust_scores_update_uses_trust():
+    n = 3
+    state = init_scores(n)._replace(
+        tester_trust=jnp.array([1.0, 0.0, 1.0]))
+    acc = jnp.array([[0.8, 0.2, 0.5],     # trusted
+                     [0.0, 1.0, 0.0],     # liar, zero trust
+                     [0.8, 0.2, 0.5]])    # trusted
+    state = update_scores(state, acc, jnp.array([0, 1, 2]), power=1.0,
+                          use_trust=True, power_warmup_rounds=0)
+    np.testing.assert_allclose(np.asarray(state.scores), [0.8, 0.2, 0.5],
+                               atol=1e-6)
