@@ -1,17 +1,62 @@
 """Server-side aggregation throughput (the FedTest hot-spot the
 weighted_aggregate Pallas kernel targets on TPU; CPU numbers use the XLA
-path, the kernel itself is validated in interpret mode)."""
+path, the kernel itself is validated in interpret mode).
+
+Also sweeps **every registered aggregation strategy** by name: builds a
+synthetic :class:`RoundContext` and times the jitted
+``update_scores + weights`` computation, so any strategy added through
+``repro.strategies`` gets per-round latency numbers for free.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import FAST, emit, timeit
+from repro.core.scoring import init_scores
 from repro.kernels.weighted_aggregate.ops import weighted_aggregate
+from repro.strategies import AGGREGATORS, RoundContext
 from repro.utils import tree_weighted_sum
 
 
+def strategy_weights_fn(agg):
+    """Jittable (acc, scores, counts, updates, key) -> [N] weights.
+
+    The :class:`RoundContext` is rebuilt inside the traced function (it
+    carries the ``server_eval`` closure, which cannot cross the jit
+    boundary as an argument); the server-eval stand-in is the tester
+    consensus.
+    """
+    def weights_of(acc, scores, counts, updates, key):
+        ctx = RoundContext(
+            acc_matrix=acc, tester_ids=jnp.arange(acc.shape[0]),
+            scores=scores, counts=counts, round_idx=scores.rounds_seen,
+            key=key, updates=updates,
+            server_eval=lambda: acc.mean(axis=0))
+        scores2 = agg.update_scores(ctx)
+        return agg.weights(ctx._replace(scores=scores2))
+    return weights_of
+
+
+def sweep_strategies(fast: bool = FAST):
+    """Per-aggregator round-weight latency for every registered name."""
+    shapes = [(8, 2, 1 << 14), (20, 5, 1 << 16)] if fast else \
+        [(8, 2, 1 << 16), (20, 5, 1 << 18), (64, 8, 1 << 20)]
+    for N, K, D in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        acc = jax.random.uniform(ks[0], (K, N))
+        scores = init_scores(N)
+        counts = jnp.full((N,), 100.0)
+        updates = jax.random.normal(ks[2], (N, D))
+        for name in AGGREGATORS.names():
+            agg = AGGREGATORS.build(name, defaults={"num_byzantine": 1})
+            fn = jax.jit(strategy_weights_fn(agg))
+            us = timeit(fn, acc, scores, counts, updates, ks[1])
+            emit(f"aggregate/strategy_{name}_N{N}_D{D}", us, f"K={K}")
+
+
 def main(fast: bool = FAST):
+    sweep_strategies(fast)
     sizes = [(8, 1 << 18), (20, 1 << 20)] if fast else \
         [(8, 1 << 20), (20, 1 << 22), (64, 1 << 22)]
     for C, M in sizes:

@@ -2,10 +2,15 @@
 
 Runs a few federated rounds of the paper's scheme on synthetic MNIST-like
 data with a malicious client, and prints how the server's scores expose
-the attacker.
+the attacker. Every aggregator / attack is a registered strategy — pick
+any pair by name:
 
   PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py krum scaled_update
+  PYTHONPATH=src python examples/quickstart.py median label_flip_proxy
 """
+import sys
+
 import jax
 
 from repro.config import FedConfig, TrainConfig
@@ -13,35 +18,44 @@ from repro.configs import get_config
 from repro.core import FederatedTrainer
 from repro.data import MNIST_LIKE, make_federated_image_dataset
 from repro.models import build_model
+from repro.strategies import AGGREGATORS, ATTACKS
 
 
 def main():
+    aggregator = sys.argv[1] if len(sys.argv) > 1 else "fedtest"
+    attack = sys.argv[2] if len(sys.argv) > 2 else "random_weights"
+    print(f"registered aggregators: {', '.join(AGGREGATORS.names())}")
+    print(f"registered attacks:     {', '.join(ATTACKS.names())}")
+
     users, malicious = 6, 1
     cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(8, 16, 16),
                                                   cnn_hidden=32)
     model = build_model(cfg)
     print(f"model: {cfg.name} ({model.param_count():,} params), "
-          f"{users} users, {malicious} malicious (random weights)")
+          f"{users} users, {malicious} malicious "
+          f"({attack} attack, {aggregator} aggregation)")
 
     data = make_federated_image_dataset(MNIST_LIKE, users,
                                         num_samples=3000, global_test=400)
     fed = FedConfig(num_users=users, num_testers=2,
                     num_malicious=malicious, local_steps=10,
-                    score_power=4.0, aggregator="fedtest")
+                    score_power=4.0, aggregator=aggregator, attack=attack,
+                    attack_scale=10.0 if attack == "scaled_update" else 1.0)
     tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
                      batch_size=16, grad_clip=0.0, remat=False)
     trainer = FederatedTrainer(model, fed, tc, eval_batch=128)
 
     state = trainer.init(jax.random.PRNGKey(0))
-    print(f"{'round':>5} {'glob acc':>9} {'mal weight':>11}   scores")
+    print(f"{'round':>5} {'glob acc':>9} {'mal weight':>11}   weights")
     for r in range(6):
         state, metrics = trainer.run_round(state, data)
         acc = trainer.global_accuracy(state, data)
-        scores = " ".join(f"{s:.3f}" for s in metrics["scores"].tolist())
+        w = " ".join(f"{v:.3f}" for v in metrics["weights"].tolist())
         print(f"{r + 1:>5} {acc:>9.4f} "
-              f"{float(metrics['malicious_weight']):>11.5f}   [{scores}]")
-    print("\nThe last client is malicious — its score (last entry) should "
-          "collapse\nwhile honest clients keep high scores.")
+              f"{float(metrics['malicious_weight']):>11.5f}   [{w}]")
+    print(f"\nClients {trainer.attack.malicious_indices(users)} are "
+          "malicious — their aggregation weight should collapse\nwhile "
+          "honest clients keep high weight.")
 
 
 if __name__ == "__main__":

@@ -180,9 +180,29 @@ INPUT_SHAPES: Mapping[str, InputShape] = {
 }
 
 
+def _freeze_kwargs(kw: Any) -> Tuple[Tuple[str, Any], ...]:
+    """Normalise a strategy-kwargs mapping to a hashable sorted tuple."""
+    if kw is None:
+        return ()
+    items = kw.items() if isinstance(kw, Mapping) else tuple(kw)
+    out = []
+    for k, v in sorted(items):
+        if isinstance(v, list):
+            v = tuple(v)
+        out.append((str(k), v))
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
-    """The paper's knobs (Sec. III, Algorithm 1)."""
+    """The paper's knobs (Sec. III, Algorithm 1).
+
+    ``aggregator`` / ``attack`` / ``selector`` are **registry names**
+    resolved against :mod:`repro.strategies` (``AGGREGATORS`` /
+    ``ATTACKS`` / ``SELECTORS``); the ``*_kwargs`` mappings are forwarded
+    to the strategy constructor (stored as sorted tuples so the config
+    stays frozen and hashable).
+    """
 
     num_users: int = 20            # N
     num_testers: int = 5           # K, reselected every round (Alg.1 l.16)
@@ -192,9 +212,13 @@ class FedConfig:
     score_power: float = 4.0       # accuracy raised to this power (Sec. V-B)
     power_warmup_rounds: int = 2   # rounds at power=1 first (Sec. V-B idea)
     score_decay: float = 0.5       # weighted moving average: s <- (1-d)*a^p + d*s
-    aggregator: str = "fedtest"    # 'fedtest' | 'fedavg' | 'accuracy_based'
-    attack: str = "random_weights"  # malicious model: paper uses random weights
+    aggregator: str = "fedtest"    # repro.strategies.AGGREGATORS name
+    aggregator_kwargs: Any = ()    # extra ctor kwargs for the aggregator
+    attack: str = "random_weights"  # repro.strategies.ATTACKS name
+    attack_kwargs: Any = ()        # e.g. placement='first', indices=(1, 3)
     attack_scale: float = 1.0
+    selector: str = "rotating"     # repro.strategies.SELECTORS name
+    selector_kwargs: Any = ()
     lying_testers: int = 0          # testers reporting fake accuracies (Sec. V-C)
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
@@ -204,8 +228,19 @@ class FedConfig:
         _require(0 < self.num_testers <= self.num_users,
                  "need 0 < K <= N")
         _require(self.num_malicious < self.num_users, "M < N")
-        _require(self.aggregator in ("fedtest", "fedavg", "accuracy_based"),
-                 self.aggregator)
+        for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs"):
+            object.__setattr__(self, f, _freeze_kwargs(getattr(self, f)))
+        # Validate names against the registries (KeyError lists the
+        # registered names). Lazy import: repro.strategies never imports
+        # repro.config, so this cannot cycle.
+        from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
+        AGGREGATORS.get(self.aggregator)
+        ATTACKS.get(self.attack)
+        SELECTORS.get(self.selector)
+
+    def strategy_kwargs(self, field: str) -> dict:
+        """``aggregator`` | ``attack`` | ``selector`` kwargs as a dict."""
+        return dict(getattr(self, field + "_kwargs"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,5 +5,7 @@ hyper-parameters, citing its source. ``get_config(arch_id)`` resolves the
 CLI ``--arch`` id (dashes allowed) to the config.
 """
 from repro.configs.registry import ARCH_IDS, get_config, list_configs
+from repro.configs.scenarios import SCENARIOS, get_scenario, list_scenarios
 
-__all__ = ["get_config", "list_configs", "ARCH_IDS"]
+__all__ = ["get_config", "list_configs", "ARCH_IDS",
+           "get_scenario", "list_scenarios", "SCENARIOS"]

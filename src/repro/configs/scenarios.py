@@ -1,0 +1,51 @@
+"""Named federated scenarios: (aggregator x attack x selector) presets.
+
+A scenario is a fully-specified :class:`FedConfig` — the strategy
+registry's analogue of the arch registry. ``--scenario`` in
+``repro.launch.train`` resolves these by name; individual CLI flags still
+override single fields on top of the preset.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config import FedConfig
+
+SCENARIOS: Dict[str, FedConfig] = {
+    # the paper's headline experiments (Sec. V / Fig. 4)
+    "honest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=0, attack="none",
+        rounds=60),
+    "paper_random_weights": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="random_weights", rounds=60),
+    "paper_lying_testers": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="random_weights", lying_testers=2, rounds=60),
+    # robust-baseline comparisons opened by the strategy registry
+    "krum_vs_scaled_update": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        aggregator="krum", attack="scaled_update", attack_scale=10.0,
+        rounds=60),
+    "trimmed_mean_vs_label_flip": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        aggregator="trimmed_mean", attack="label_flip_proxy", rounds=60),
+    "median_vs_spread_attack": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4, aggregator="median",
+        attack="random_weights", attack_kwargs={"placement": "spread"},
+        rounds=60),
+    "fixed_testers": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="random_weights", selector="fixed", rounds=60),
+}
+
+
+def get_scenario(name: str) -> FedConfig:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)

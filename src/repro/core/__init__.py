@@ -6,7 +6,9 @@
 * ``cross_testing`` — testers evaluate every client model on their own data.
 * ``attacks``       — malicious-user model suite (paper: random weights).
 * ``selection``     — rotating tester selection + orthogonal-RB schedule.
-* ``round``         — the federated round engine (Algorithm 1).
+* ``round``         — the federated round engine (Algorithm 1), whose
+  aggregator / attack / tester-selection seams resolve by name through
+  the ``repro.strategies`` registries.
 """
 from repro.core.scoring import ScoreState, init_scores, update_scores, score_weights
 from repro.core.aggregation import (
@@ -14,11 +16,13 @@ from repro.core.aggregation import (
 from repro.core.attacks import apply_attacks, ATTACKS
 from repro.core.cross_testing import cross_test_accuracies
 from repro.core.selection import select_testers, rb_schedule
-from repro.core.round import FederatedTrainer, RoundState
+from repro.core.round import (
+    FederatedTrainer, RoundState, resolve_strategies)
 
 __all__ = [
     "ScoreState", "init_scores", "update_scores", "score_weights",
     "fedavg_weights", "accuracy_based_weights", "aggregate_models",
     "apply_attacks", "ATTACKS", "cross_test_accuracies",
     "select_testers", "rb_schedule", "FederatedTrainer", "RoundState",
+    "resolve_strategies",
 ]

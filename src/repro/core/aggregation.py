@@ -1,7 +1,8 @@
-"""Model aggregation: FedTest + the paper's two baselines.
+"""Model aggregation primitives.
 
-All three schemes reduce a client-stacked param pytree with a weight
-vector; they differ only in how the weights are produced:
+Every aggregation scheme reduces a client-stacked param pytree with a
+``[N]`` weight simplex; *how* the weights are produced is a registered
+strategy (``repro.strategies.AGGREGATORS``). The paper's three schemes:
 
 * **FedTest** — normalised moving-average accuracy^p scores
   (``repro.core.scoring``), accuracies measured by peer testers.

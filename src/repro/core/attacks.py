@@ -9,6 +9,10 @@ handled in the round engine.
 ``apply_attacks`` operates on the client-stacked param pytree; malicious
 clients are the *last M* client slots (a fixed, known set for evaluation —
 the defence, of course, does not use this knowledge).
+
+The round engine goes through ``repro.strategies.ATTACKS``, which wraps
+the per-client corruption primitives below and supports arbitrary
+placement of the malicious set; this module stays the primitive layer.
 """
 from __future__ import annotations
 

@@ -29,8 +29,74 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import FedConfig, TrainConfig
 from repro.core.cross_testing import make_eval_fn
-from repro.core.scoring import ScoreState, score_weights, update_scores
+from repro.core.scoring import ScoreState
 from repro.optim import make_optimizer
+from repro.strategies.base import Aggregator, RoundContext
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (experimental pre-0.5)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def _resolve_aggregator(fed: FedConfig, aggregator) -> Aggregator:
+    if isinstance(aggregator, Aggregator):
+        agg = aggregator
+    else:
+        from repro.core.round import aggregator_defaults
+        from repro.strategies import AGGREGATORS
+        agg = AGGREGATORS.build(aggregator or fed.aggregator,
+                                fed.strategy_kwargs("aggregator"),
+                                aggregator_defaults(fed))
+    if agg.needs_server_eval:
+        raise ValueError(
+            f"aggregator {agg.name!r} needs a server-side eval set, which "
+            "the pod path does not carry; use the single-host engine")
+    return agg
+
+
+def _strategy_weights(agg: Aggregator, acc, scores, params, global_params,
+                      axis: str, num_clients: int, counts=None):
+    """Replicated weight computation shared by both exchange schedules.
+
+    ``acc`` is the already-combined [N] accuracy vector, so the context
+    carries it as a single-tester matrix. Aggregators that need client
+    updates (krum / trimmed_mean / median) trigger one all-gather of the
+    *flattened* update — the same N-x memory cost as the all-gather
+    exchange, so prefer those aggregators with ``--exchange allgather``.
+    ``counts`` are the per-client sample counts (static host data, closed
+    over); without them fedavg degenerates to uniform weighting.
+    """
+    updates = None
+    if agg.needs_updates:
+        flat = jnp.concatenate([
+            (p.astype(jnp.float32) - g.astype(jnp.float32)).ravel()
+            for p, g in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(global_params))])
+        updates = jax.lax.all_gather(flat, axis)             # [N, D]
+    if counts is None:
+        counts = jnp.ones((num_clients,), jnp.float32)
+    ctx = RoundContext(
+        acc_matrix=acc[None, :],
+        tester_ids=jnp.arange(num_clients),
+        scores=scores,
+        counts=jnp.asarray(counts, jnp.float32),
+        round_idx=scores.rounds_seen,
+        key=jax.random.fold_in(jax.random.PRNGKey(0), scores.rounds_seen),
+        updates=updates)
+    new_scores = agg.update_scores(ctx)
+    weights = agg.weights(ctx._replace(scores=new_scores))
+    # stateless aggregators leave ScoreState untouched; advance the round
+    # counter for them so ctx.round_idx / ctx.key vary across rounds
+    if type(agg).update_scores is Aggregator.update_scores:
+        new_scores = new_scores._replace(
+            rounds_seen=new_scores.rounds_seen + 1)
+    return weights, new_scores
 
 
 def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
@@ -59,8 +125,13 @@ def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
 
 
 def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
-                           mesh, axis: str = "clients"):
+                           mesh, axis: str = "clients", aggregator=None,
+                           counts=None):
     """Builds the jitted shard_map FedTest round for ``mesh[axis]`` clients.
+
+    ``aggregator`` — registry name or :class:`Aggregator` instance;
+    defaults to ``fed.aggregator``. Resolved once here, pre-trace, exactly
+    like the single-host engine.
 
     Inputs (per call):
       global_params — replicated pytree
@@ -75,6 +146,7 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
     opt = make_optimizer(train_cfg)
     eval_fn = make_eval_fn(model)
     num_clients = mesh.shape[axis]
+    agg = _resolve_aggregator(fed, aggregator)
 
     def batchify(bx, by):
         if model.cfg.family == "cnn":
@@ -97,10 +169,9 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
         return params, jnp.mean(losses)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(), P()),
-        check_vma=False)
+        out_specs=(P(), P(), P()))
     def round_fn(global_params, scores: ScoreState, bx, by, tx, ty,
                  tester_mask):
         # shard_map gives per-client leading axes of size 1 — drop them
@@ -120,14 +191,10 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
         k_total = jax.lax.psum(my_mask, axis)
         acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
 
-        # 6. replicated score update + weights
-        tester_ids = jnp.arange(num_clients)   # reports already masked
-        new_scores = update_scores(scores, acc[None, :], tester_ids,
-                                   power=fed.score_power,
-                                   decay=fed.score_decay,
-                                   power_warmup_rounds=
-                                   fed.power_warmup_rounds)
-        weights = score_weights(new_scores)
+        # 6. replicated strategy weights (reports already masked)
+        weights, new_scores = _strategy_weights(
+            agg, acc, scores, params, global_params, axis, num_clients,
+            counts=counts)
 
         # 7. weighted aggregation = one psum over the client axis
         my_w = weights[my_idx]
@@ -145,7 +212,8 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
 
 
 def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
-                         mesh, axis: str = "clients"):
+                         mesh, axis: str = "clients", aggregator=None,
+                         counts=None):
     """Paper-faithful alternative: all-gather every model to every tester
     (each user receives all models at once, as in the RB broadcast).
     Memory: N x model per device — kept as the §Perf comparison baseline.
@@ -153,6 +221,7 @@ def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
     opt = make_optimizer(train_cfg)
     eval_fn = make_eval_fn(model)
     num_clients = mesh.shape[axis]
+    agg = _resolve_aggregator(fed, aggregator)
 
     def batchify(bx, by):
         if model.cfg.family == "cnn":
@@ -160,10 +229,9 @@ def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
         return {"tokens": bx, "labels": by}
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(), P()),
-        check_vma=False)
+        out_specs=(P(), P(), P()))
     def round_fn(global_params, scores, bx, by, tx, ty, tester_mask):
         bx, by = bx[0], by[0]
         tx, ty = tx[0], ty[0]
@@ -190,13 +258,9 @@ def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
 
         k_total = jax.lax.psum(my_mask, axis)
         acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
-        new_scores = update_scores(scores, acc[None, :],
-                                   jnp.arange(num_clients),
-                                   power=fed.score_power,
-                                   decay=fed.score_decay,
-                                   power_warmup_rounds=
-                                   fed.power_warmup_rounds)
-        weights = score_weights(new_scores)
+        weights, new_scores = _strategy_weights(
+            agg, acc, scores, params, global_params, axis, num_clients,
+            counts=counts)
         new_global = jax.tree_util.tree_map(
             lambda x: jax.lax.psum(
                 x.astype(jnp.float32) * weights[my_idx], axis).astype(x.dtype),

@@ -5,7 +5,7 @@ One fused, jitted round:
   1.  broadcast the global model to all N users            (line 15 of prev round)
   2.  every user runs ``local_steps`` optimizer steps on its own shard (line 5)
   3.  malicious users swap in attacked models              (Sec. IV)
-  4.  K rotating testers evaluate all N models on their own data (lines 6-9)
+  4.  K testers evaluate all N models on their own data    (lines 6-9)
   5.  lying testers corrupt their reports                  (Sec. V-C ablation)
   6.  the server computes scores / weights                 (line 13)
   7.  score-weighted aggregation -> new global model       (line 14)
@@ -15,9 +15,13 @@ leading axis of the stacked param pytree) — on a pod the same functions are
 driven by ``shard_map`` with the client axis laid over ``data``
 (``repro.launch.train``).
 
-Baselines (``aggregator=`` in FedConfig): ``fedavg`` weighs by sample
-counts; ``accuracy_based`` weighs by accuracy on the *server's* held-out
-set (the scheme FedTest improves upon — Fig. 3a).
+Steps 3, 4 and 6 are **pluggable**: the attack, tester-selection policy
+and aggregator are looked up by name in :mod:`repro.strategies`
+(``FedConfig.attack`` / ``.selector`` / ``.aggregator``) and resolved to
+plain Python objects in ``__post_init__`` — *before* tracing — so jit
+closes over static callables and one round compiles to one fused program
+with no trace-time branching. ``FederatedTrainer.num_traces`` counts
+retraces; steady-state training must keep it at 1.
 """
 from __future__ import annotations
 
@@ -28,16 +32,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FedConfig, TrainConfig
-from repro.core.aggregation import (
-    accuracy_based_weights, aggregate_models, fedavg_weights)
-from repro.core.attacks import apply_attacks
+from repro.core.aggregation import aggregate_models
 from repro.core.cross_testing import cross_test_accuracies, make_eval_fn
-from repro.core.scoring import (
-    ScoreState, init_scores, score_weights, update_scores,
-    update_tester_trust)
-from repro.core.selection import select_testers
+from repro.core.scoring import ScoreState, init_scores
 from repro.data.pipeline import FederatedDataset, sample_client_batches
 from repro.optim import make_optimizer
+from repro.strategies.base import RoundContext
 
 
 class RoundState(NamedTuple):
@@ -45,6 +45,36 @@ class RoundState(NamedTuple):
     scores: ScoreState
     round_idx: jnp.ndarray
     key: jnp.ndarray
+
+
+def aggregator_defaults(fed: FedConfig, use_trust: bool = False
+                        ) -> Dict[str, Any]:
+    """Engine-derived default kwargs offered to aggregator constructors.
+
+    Each aggregator picks up only the fields its ``__init__`` accepts
+    (``Registry.build`` filters by signature): ``fedtest`` takes the
+    scoring knobs, ``krum`` takes ``num_byzantine`` (the defender's
+    assumed f, defaulted to the scenario's ``num_malicious``), the rest
+    need nothing.
+    """
+    return dict(score_power=fed.score_power,
+                score_decay=fed.score_decay,
+                power_warmup_rounds=fed.power_warmup_rounds,
+                use_trust=use_trust,
+                num_byzantine=fed.num_malicious)
+
+
+def resolve_strategies(fed: FedConfig, use_trust: bool = False):
+    """Name -> object resolution for (aggregator, attack, selector)."""
+    # package import (not just .base) so the registries are populated
+    from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
+    agg = AGGREGATORS.build(fed.aggregator, fed.strategy_kwargs("aggregator"),
+                            aggregator_defaults(fed, use_trust))
+    atk = ATTACKS.build(fed.attack, fed.strategy_kwargs("attack"),
+                        dict(num_malicious=fed.num_malicious,
+                             scale=fed.attack_scale))
+    sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
+    return agg, atk, sel
 
 
 @dataclasses.dataclass
@@ -59,6 +89,14 @@ class FederatedTrainer:
 
     def __post_init__(self):
         self.opt = make_optimizer(self.train)
+        # strategy resolution happens once, pre-trace: the jitted round
+        # closes over these objects as static callables.
+        self.aggregator, self.attack, self.selector = resolve_strategies(
+            self.fed, self.use_trust)
+        self._malicious_idx = self.attack.malicious_indices(
+            self.fed.num_users)
+        self._malicious_mask = self.attack.malicious_mask(self.fed.num_users)
+        self.num_traces = 0
         self._round_fn = jax.jit(self._round)
         self._global_eval = jax.jit(self._global_eval_impl)
 
@@ -95,11 +133,23 @@ class FederatedTrainer:
                                            (bx, by))
         return params, jnp.mean(losses)
 
+    def _flat_updates(self, trained, global_params) -> jnp.ndarray:
+        """[N, D] float32 matrix of flattened client updates."""
+        def flat(stack, g):
+            n = stack.shape[0]
+            return (stack.astype(jnp.float32)
+                    - g.astype(jnp.float32)[None]).reshape(n, -1)
+        parts = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(flat, trained, global_params))
+        return jnp.concatenate(parts, axis=1)
+
     def _round(self, state: RoundState, data: FederatedDataset
                ) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
+        self.num_traces += 1        # python side-effect: runs per trace only
         fed = self.fed
         key = jax.random.fold_in(state.key, state.round_idx)
         k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
+        k_agg = jax.random.fold_in(key, 5)
 
         # 1-2. broadcast + vectorised local training
         stacked = jax.tree_util.tree_map(
@@ -110,14 +160,12 @@ class FederatedTrainer:
                                        self.train.batch_size)
         trained, local_loss = jax.vmap(self._local_train)(stacked, bx, by)
 
-        # 3. adversaries act
-        trained = apply_attacks(k_attack, trained, state.global_params,
-                                num_malicious=fed.num_malicious,
-                                attack=fed.attack, scale=fed.attack_scale)
+        # 3. adversaries act (strategy; malicious set can live anywhere)
+        trained = self.attack.apply(k_attack, trained, state.global_params)
 
-        # 4. rotating testers measure accuracies on their own data
-        tester_ids = select_testers(k_test, fed.num_users, fed.num_testers,
-                                    state.round_idx)
+        # 4. selected testers measure accuracies on their own data
+        tester_ids = self.selector.select(k_test, fed.num_users,
+                                          fed.num_testers, state.round_idx)
         eval_fn = make_eval_fn(self.model)
         tx = data.test.xs[tester_ids, :self.eval_batch]
         ty = data.test.ys[tester_ids, :self.eval_batch]
@@ -131,38 +179,35 @@ class FederatedTrainer:
             liar_rows = (tester_ids < fed.lying_testers)[:, None]
             acc = jnp.where(liar_rows, lies, acc)
 
-        # 6. weights per aggregator
-        scores = state.scores
-        if fed.aggregator == "fedtest":
-            if self.use_trust:
-                scores = update_tester_trust(scores, acc, tester_ids)
-            scores = update_scores(scores, acc, tester_ids,
-                                   power=fed.score_power,
-                                   decay=fed.score_decay,
-                                   use_trust=self.use_trust,
-                                   power_warmup_rounds=
-                                   fed.power_warmup_rounds)
-            weights = score_weights(scores)
-        elif fed.aggregator == "fedavg":
-            weights = fedavg_weights(data.train.counts)
-        elif fed.aggregator == "accuracy_based":
+        # 6. weights via the aggregation strategy
+        server_eval = None
+        if self.aggregator.needs_server_eval:
             sx = data.server_x[:self.eval_batch]
             sy = data.server_y[:self.eval_batch]
-            server_acc = jax.vmap(lambda p: eval_fn(p, sx, sy))(trained)
-            weights = accuracy_based_weights(server_acc)
-        else:
-            raise ValueError(fed.aggregator)
+            server_eval = lambda: jax.vmap(                      # noqa: E731
+                lambda p: eval_fn(p, sx, sy))(trained)
+        updates = (self._flat_updates(trained, state.global_params)
+                   if self.aggregator.needs_updates else None)
+        ctx = RoundContext(acc_matrix=acc, tester_ids=tester_ids,
+                           scores=state.scores, counts=data.train.counts,
+                           round_idx=state.round_idx, key=k_agg,
+                           updates=updates, server_eval=server_eval)
+        scores = self.aggregator.update_scores(ctx)
+        ctx = ctx._replace(scores=scores)
+        weights = self.aggregator.weights(ctx)
 
         # 7. score-weighted aggregation -> new global model
         new_global = aggregate_models(trained, weights, impl=self.agg_impl)
 
+        # the malicious index set comes from the attack strategy, so the
+        # metric stays correct for any placement of the attackers.
+        mal_w = (jnp.sum(weights * self._malicious_mask)
+                 if self._malicious_idx else jnp.zeros(()))
         metrics = {
             "local_loss": jnp.mean(local_loss),
             "acc_matrix_mean": jnp.mean(acc),
             "weights": weights,
-            "malicious_weight": jnp.sum(
-                weights[fed.num_users - fed.num_malicious:])
-            if fed.num_malicious else jnp.zeros(()),
+            "malicious_weight": mal_w,
             "scores": scores.scores,
         }
         new_state = RoundState(global_params=new_global, scores=scores,
@@ -203,4 +248,8 @@ class FederatedTrainer:
                     print(f"round {r+1:4d}  acc={ga:.4f}  "
                           f"loss={float(metrics['local_loss']):.4f}  "
                           f"mal_w={float(metrics['malicious_weight']):.4f}")
+        if rounds > 1 and self.num_traces > 1:
+            raise RuntimeError(
+                f"round engine retraced {self.num_traces}x over {rounds} "
+                "rounds — strategy resolution must stay pre-trace")
         return state, history

@@ -37,7 +37,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
     activation_rules, batch_spec_tree, cache_specs, cache_spec_tree,
     input_specs, model_for, param_sharding_tree, params_and_opt_specs,
-    supported)
+    supported, to_named)
 from repro.launch.steps import (
     make_decode_step, make_prefill_step, make_train_step)
 from repro.roofline import TPU_V5E, model_flops, parse_collectives
@@ -78,24 +78,33 @@ def _lower_compile(cfg, shape, multi_pod, train_cfg=None,
     b_spec = batch_spec_tree(cfg, shape, mesh, batch)
 
     t0 = time.time()
-    with jax.set_mesh(mesh), logical_rules(rules):
+    # jax.set_mesh is 0.5+; the Mesh context manager covers older jax
+    set_mesh = getattr(jax, "set_mesh", None) or (lambda m: m)
+    with set_mesh(mesh), logical_rules(rules):
+        # NamedSharding works on every jax version; raw PartitionSpecs
+        # in in_shardings need 0.5+
+        named = lambda spec: to_named(mesh, spec)   # noqa: E731
         if shape.kind == "train":
             step, _ = make_train_step(model, train_cfg)
             o_spec = _opt_specs(opt_state, p_spec)
             lowered = jax.jit(step,
-                              in_shardings=(p_spec, o_spec, b_spec),
+                              in_shardings=(named(p_spec), named(o_spec),
+                                            named(b_spec)),
                               donate_argnums=(0, 1)).lower(
                 params, opt_state, batch)
         elif shape.kind == "prefill":
             step = make_prefill_step(model, cache_len=shape.seq_len)
-            lowered = jax.jit(step, in_shardings=(p_spec, b_spec)).lower(
+            lowered = jax.jit(step,
+                              in_shardings=(named(p_spec),
+                                            named(b_spec))).lower(
                 params, batch)
         else:
             step = make_decode_step(model)
             cache = cache_specs(cfg, shape)
             c_spec = cache_spec_tree(cfg, shape, mesh, cache)
             lowered = jax.jit(step,
-                              in_shardings=(p_spec, c_spec, b_spec),
+                              in_shardings=(named(p_spec), named(c_spec),
+                                            named(b_spec)),
                               donate_argnums=(1,)).lower(
                 params, cache, batch)
         t_lower = time.time() - t0
@@ -104,6 +113,8 @@ def _lower_compile(cfg, shape, multi_pod, train_cfg=None,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax<=0.4: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     rec = {

@@ -30,6 +30,14 @@ def main():
     ap.add_argument("--exchange", default="ring",
                     choices=["ring", "allgather"],
                     help="cross-testing model exchange schedule")
+    ap.add_argument("--aggregator", default="fedtest",
+                    help="repro.strategies.AGGREGATORS name (krum / "
+                         "trimmed_mean / median all-gather flat updates)")
+    ap.add_argument("--selector", default="rotating",
+                    help="repro.strategies.SELECTORS name for the per-"
+                         "round tester mask")
+    ap.add_argument("--testers", type=int, default=None,
+                    help="K testers per round (default: all clients)")
     ap.add_argument("--dataset", default="mnist_like",
                     choices=["mnist_like", "cifar_like"])
     ap.add_argument("--out", default="experiments/federated_pod")
@@ -67,7 +75,9 @@ def main():
             else "fedtest-cnn")
     cfg = get_config(arch).replace(cnn_channels=(8, 16, 16), cnn_hidden=32)
     model = build_model(cfg)
-    fed = FedConfig(num_users=N, num_testers=N, num_malicious=0,
+    K = args.testers or N
+    fed = FedConfig(num_users=N, num_testers=K, num_malicious=0,
+                    aggregator=args.aggregator, selector=args.selector,
                     local_steps=args.local_steps)
     tc = TrainConfig(optimizer="sgd", lr=args.lr, schedule="constant",
                      batch_size=args.batch, grad_clip=0.0, remat=False)
@@ -77,16 +87,22 @@ def main():
 
     make = (make_distributed_round if args.exchange == "ring"
             else make_allgather_round)
-    round_fn = jax.jit(make(model, fed, tc, mesh))
+    round_fn = jax.jit(make(model, fed, tc, mesh,
+                            counts=data.train.counts))
+    from repro.strategies import SELECTORS
+    selector = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
 
     params = model.init(jax.random.PRNGKey(args.seed))
     scores = init_scores(N)
-    mask = jnp.ones((N,), jnp.float32)
     tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
 
     history = {"round": [], "acc": [], "local_loss": []}
     t0 = time.time()
     for r in range(args.rounds):
+        tester_ids = selector.select(
+            jax.random.fold_in(jax.random.PRNGKey(args.seed + 2), r),
+            N, K, r)
+        mask = jnp.zeros((N,), jnp.float32).at[tester_ids].set(1.0)
         bx, by = sample_client_batches(
             jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), r),
             data.train, fed.local_steps, tc.batch_size)

@@ -1,9 +1,22 @@
 """Federated training driver (the paper's training kind).
 
+Aggregators, attacks and tester-selection policies are resolved by name
+from :mod:`repro.strategies`, so every registered strategy is drivable
+from this CLI without touching the engine.
+
 Examples:
   # Fig. 4 reproduction (CIFAR-like, FedTest vs baselines):
   PYTHONPATH=src python -m repro.launch.train --dataset cifar_like \\
       --aggregator fedtest --users 20 --testers 5 --malicious 3 --rounds 60
+
+  # robust baseline vs model-replacement, attackers in the first slots:
+  PYTHONPATH=src python -m repro.launch.train --aggregator krum \\
+      --attack scaled_update --attack-scale 10 --malicious 4 \\
+      --attack-kwargs '{"placement": "first"}'
+
+  # a named scenario preset (see repro.configs.scenarios):
+  PYTHONPATH=src python -m repro.launch.train --scenario \\
+      krum_vs_scaled_update --rounds 10
 
   # Federated fine-tuning of an assigned LM backbone (reduced for CPU):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \\
@@ -12,6 +25,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -21,8 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedConfig, TrainConfig, reduce_for_smoke
-from repro.configs import get_config
+from repro.configs import get_config, get_scenario, list_scenarios
 from repro.core import FederatedTrainer
+from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
 from repro.checkpoint import CheckpointManager
 from repro.data import (
     CIFAR_LIKE, MNIST_LIKE, make_federated_image_dataset, make_token_stream)
@@ -67,6 +82,16 @@ def make_lm_federated_dataset(vocab: int, num_users: int, seq_len: int = 64,
                             server_y=jnp.asarray(y[n + 512:n + 768]))
 
 
+# FedConfig fields the CLI leaves unset use these (the argparse flags
+# default to None so --scenario can tell "explicitly passed" apart)
+_FED_CLI_DEFAULTS = dict(
+    num_users=20, num_testers=5, num_malicious=0, rounds=40,
+    local_steps=10, score_power=4.0, score_decay=0.5,
+    aggregator="fedtest", aggregator_kwargs={},
+    attack="random_weights", attack_kwargs={}, attack_scale=1.0,
+    selector="rotating", selector_kwargs={}, seed=0)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="fedtest-cnn")
@@ -74,21 +99,34 @@ def main():
                     help="reduce the arch for CPU-scale runs")
     ap.add_argument("--dataset", default="cifar_like",
                     choices=["cifar_like", "mnist_like", "lm"])
-    ap.add_argument("--aggregator", default="fedtest",
-                    choices=["fedtest", "fedavg", "accuracy_based"])
-    ap.add_argument("--users", type=int, default=20)
-    ap.add_argument("--testers", type=int, default=5)
-    ap.add_argument("--malicious", type=int, default=0)
-    ap.add_argument("--attack", default="random_weights")
-    ap.add_argument("--rounds", type=int, default=40)
-    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--scenario", default=None, choices=list_scenarios(),
+                    help="named FedConfig preset; flags set explicitly "
+                         "on the CLI override preset fields")
+    ap.add_argument("--aggregator", default=None,
+                    choices=list(AGGREGATORS.names()))
+    ap.add_argument("--agg-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the aggregator ctor")
+    ap.add_argument("--users", type=int, default=None)
+    ap.add_argument("--testers", type=int, default=None)
+    ap.add_argument("--malicious", type=int, default=None)
+    ap.add_argument("--attack", default=None,
+                    choices=list(ATTACKS.names()))
+    ap.add_argument("--attack-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the attack ctor, e.g. "
+                         '\'{"placement": "first"}\'')
+    ap.add_argument("--attack-scale", type=float, default=None)
+    ap.add_argument("--selector", default=None,
+                    choices=list(SELECTORS.names()))
+    ap.add_argument("--selector-kwargs", default=None, type=json.loads)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--local-steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--optimizer", default="sgd")
-    ap.add_argument("--score-power", type=float, default=4.0)
-    ap.add_argument("--score-decay", type=float, default=0.5)
+    ap.add_argument("--score-power", type=float, default=None)
+    ap.add_argument("--score-decay", type=float, default=None)
     ap.add_argument("--samples", type=int, default=20000)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -100,39 +138,52 @@ def main():
         cfg = reduce_for_smoke(cfg).replace(dtype="float32")
     model = build_model(cfg)
 
-    fed = FedConfig(num_users=args.users, num_testers=args.testers,
-                    num_malicious=args.malicious, rounds=args.rounds,
-                    local_steps=args.local_steps,
-                    score_power=args.score_power,
-                    score_decay=args.score_decay,
-                    aggregator=args.aggregator, attack=args.attack,
-                    seed=args.seed)
+    passed = dict(num_users=args.users, num_testers=args.testers,
+                  num_malicious=args.malicious, rounds=args.rounds,
+                  local_steps=args.local_steps,
+                  score_power=args.score_power,
+                  score_decay=args.score_decay,
+                  aggregator=args.aggregator,
+                  aggregator_kwargs=args.agg_kwargs,
+                  attack=args.attack, attack_kwargs=args.attack_kwargs,
+                  attack_scale=args.attack_scale,
+                  selector=args.selector,
+                  selector_kwargs=args.selector_kwargs,
+                  seed=args.seed)
+    passed = {f: v for f, v in passed.items() if v is not None}
+    if args.scenario:
+        # preset first; every explicitly-passed flag overrides it
+        fed = dataclasses.replace(get_scenario(args.scenario), **passed)
+    else:
+        fed = FedConfig(**{**_FED_CLI_DEFAULTS, **passed})
     tc = TrainConfig(optimizer=args.optimizer, lr=args.lr,
                      schedule="constant", batch_size=args.batch,
                      grad_clip=0.0, remat=False)
 
     if args.dataset == "lm":
-        data = make_lm_federated_dataset(cfg.vocab_size, args.users,
-                                         seed=args.seed)
+        data = make_lm_federated_dataset(cfg.vocab_size, fed.num_users,
+                                         seed=fed.seed)
     else:
         spec = CIFAR_LIKE if args.dataset == "cifar_like" else MNIST_LIKE
-        data = make_federated_image_dataset(spec, args.users,
+        data = make_federated_image_dataset(spec, fed.num_users,
                                             num_samples=args.samples,
-                                            seed=args.seed)
+                                            seed=fed.seed)
 
     trainer = FederatedTrainer(model, fed, tc)
     t0 = time.time()
-    state, history = trainer.run(jax.random.PRNGKey(args.seed), data,
+    state, history = trainer.run(jax.random.PRNGKey(fed.seed), data,
                                  verbose=True)
     history["wall_s"] = time.time() - t0
     history["config"] = {"arch": cfg.name, "dataset": args.dataset,
-                         "aggregator": args.aggregator,
-                         "users": args.users, "testers": args.testers,
-                         "malicious": args.malicious}
+                         "aggregator": fed.aggregator,
+                         "attack": fed.attack, "selector": fed.selector,
+                         "scenario": args.scenario,
+                         "users": fed.num_users, "testers": fed.num_testers,
+                         "malicious": fed.num_malicious}
 
     os.makedirs(args.out, exist_ok=True)
-    tag = (f"{cfg.name}__{args.dataset}__{args.aggregator}"
-           f"__m{args.malicious}")
+    tag = (f"{cfg.name}__{args.dataset}__{fed.aggregator}"
+           f"__{fed.attack}__m{fed.num_malicious}")
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(history, f, indent=1)
     print(f"final accuracy: {history['global_accuracy'][-1]:.4f} "
@@ -140,7 +191,7 @@ def main():
 
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
-        mgr.save(args.rounds, state.global_params)
+        mgr.save(fed.rounds, state.global_params)
 
 
 if __name__ == "__main__":

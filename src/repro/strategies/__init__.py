@@ -1,0 +1,40 @@
+"""Pluggable strategy registries for the FedTest round engine.
+
+The round engine (:mod:`repro.core.round`) is parameterised by three
+strategy families, each selected **by name** through :class:`FedConfig`
+and resolved to plain Python objects before jit tracing:
+
+* :data:`AGGREGATORS` — how tester reports / client updates become the
+  ``[N]`` aggregation-weight simplex (``fedtest``, ``fedavg``,
+  ``accuracy_based``, ``krum``, ``trimmed_mean``, ``median``,
+  ``uniform``).
+* :data:`ATTACKS` — how malicious clients corrupt their models
+  (``none``, ``random_weights``, ``sign_flip``, ``label_flip_proxy``,
+  ``scaled_update``), with arbitrary placement of the malicious set.
+* :data:`SELECTORS` — which K clients tester each round (``rotating``,
+  ``round_robin``, ``fixed``).
+
+Adding a strategy is one file anywhere that runs::
+
+    from repro.strategies import AGGREGATORS, Aggregator, register
+
+    @register(AGGREGATORS, "mine")
+    class Mine(Aggregator):
+        def weights(self, ctx):
+            ...
+
+See README.md §"Writing a strategy".
+"""
+from repro.strategies.base import (
+    AGGREGATORS, ATTACKS, SELECTORS,
+    Aggregator, Attack, Registry, RoundContext, Selector, register)
+# importing the submodules populates the registries
+from repro.strategies import aggregators as _aggregators  # noqa: F401
+from repro.strategies import attacks as _attacks          # noqa: F401
+from repro.strategies import selectors as _selectors      # noqa: F401
+
+__all__ = [
+    "AGGREGATORS", "ATTACKS", "SELECTORS",
+    "Aggregator", "Attack", "Selector",
+    "Registry", "RoundContext", "register",
+]

@@ -1,0 +1,90 @@
+"""Registered malicious-client strategies.
+
+Each attack corrupts the models of its malicious index set after local
+training (round engine step 3). The corruption primitives are shared with
+:mod:`repro.core.attacks`; the registry layer adds arbitrary *placement*
+of the malicious set (``placement='last'|'first'|'spread'`` or explicit
+``indices=(...)``) so nothing in the engine assumes attackers sit in the
+last client slots.
+
+* ``none``             — honest run (also what ``num_malicious=0`` means).
+* ``random_weights``   — the paper's attack (Sec. IV): send random weights
+  with the trained model's per-leaf magnitude statistics.
+* ``sign_flip``        — gradient-ascent update ``g - scale*(t - g)``.
+* ``label_flip_proxy`` — update-space proxy for label-flipping data
+  poisoning: training on flipped labels drives the model *against* the
+  true loss, which to first order is the sign-flipped update, sent at
+  unit scale so magnitude statistics look honest.
+* ``scaled_update``    — model-replacement magnification
+  ``g + scale*(t - g)`` [Bagdasaryan et al.].
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.attacks import _random_weights, _scaled_update, _sign_flip
+from repro.strategies.base import ATTACKS, Attack, register
+
+
+@register(ATTACKS, "none")
+class NoAttack(Attack):
+    """Honest federation — identity on the stacked models.
+
+    Reports an empty malicious set even when ``num_malicious`` is set, so
+    the engine's ``malicious_weight`` metric reads 0 for honest runs.
+    """
+
+    def malicious_indices(self, num_users):
+        return ()
+
+    def apply(self, key, stacked_params, global_params):
+        return stacked_params
+
+    def corrupt(self, key, trained, global_params):
+        return trained
+
+
+@register(ATTACKS, "random_weights")
+class RandomWeights(Attack):
+    """Paper Sec. IV: malicious users send random weights."""
+
+    def corrupt(self, key, trained, global_params):
+        return _random_weights(key, trained, global_params, self.scale)
+
+
+@register(ATTACKS, "sign_flip")
+class SignFlip(Attack):
+    """Gradient-ascent update: ``global - scale * (trained - global)``."""
+
+    def corrupt(self, key, trained, global_params):
+        return _sign_flip(key, trained, global_params, self.scale)
+
+
+@register(ATTACKS, "label_flip_proxy")
+class LabelFlipProxy(Attack):
+    """Label-flipping poisoning, approximated in update space.
+
+    A client training on permuted labels ascends the true loss, so its
+    update points opposite the honest direction with honest magnitude —
+    i.e. a sign-flipped update at fixed unit scale (``scale`` is ignored
+    to keep the magnitude statistics indistinguishable from honest
+    clients, which is what makes label flipping hard for norm-based
+    defences to spot).
+    """
+
+    def __init__(self, *, num_malicious: int = 0, scale: float = 1.0,
+                 placement: str = "last", indices=None):
+        super().__init__(num_malicious=num_malicious, scale=1.0,
+                         placement=placement, indices=indices)
+
+    def corrupt(self, key, trained, global_params):
+        return _sign_flip(key, trained, global_params, 1.0)
+
+
+@register(ATTACKS, "scaled_update")
+class ScaledUpdate(Attack):
+    """Model replacement: magnify the local update by ``scale``
+    (``FedConfig.attack_scale``; >1 to actually attack)."""
+
+    def corrupt(self, key, trained, global_params):
+        return _scaled_update(key, trained, global_params, self.scale)

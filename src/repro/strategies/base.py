@@ -1,0 +1,252 @@
+"""Strategy registry machinery + the round-context protocol.
+
+The FedTest round engine is a single fused, jitted program; everything a
+strategy could vary — how aggregation weights are produced, how malicious
+clients corrupt their models, how testers are selected — is resolved to a
+plain Python object *before* tracing, so jit closes over static callables
+and the round never branches on strategy names at trace time.
+
+Three registries live in :mod:`repro.strategies`:
+
+* ``AGGREGATORS`` — :class:`Aggregator`: ``weights(ctx) -> [N]`` simplex.
+* ``ATTACKS``     — :class:`Attack`: corrupt malicious clients' models.
+* ``SELECTORS``   — :class:`Selector`: pick the K tester ids per round.
+
+Register a new strategy with the decorator::
+
+    from repro.strategies import AGGREGATORS, Aggregator, register
+
+    @register(AGGREGATORS, "uniform")
+    class Uniform(Aggregator):
+        def weights(self, ctx):
+            n = ctx.counts.shape[0]
+            return jnp.full((n,), 1.0 / n)
+
+and select it by name: ``FedConfig(aggregator="uniform")``.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class RoundContext(NamedTuple):
+    """Frozen per-round view handed to aggregation strategies.
+
+    Built inside the traced round, so array fields are tracers; the
+    closures are bound at trace time. Unused fields cost nothing — XLA
+    dead-code-eliminates whatever a strategy does not touch.
+    """
+
+    acc_matrix: jnp.ndarray            # [K, N] tester-measured accuracies
+    tester_ids: jnp.ndarray            # [K] ids of this round's testers
+    scores: Any                        # ScoreState (moving-average scores)
+    counts: jnp.ndarray                # [N] per-client sample counts
+    round_idx: jnp.ndarray             # scalar i32
+    key: jnp.ndarray                   # per-round PRNG key for the strategy
+    # [N, D] float32 flattened client updates (trained - global), present
+    # only when the resolved aggregator sets ``needs_updates``.
+    updates: Optional[jnp.ndarray] = None
+    # () -> [N] accuracies of every client model on the *server's* held-out
+    # set; present only when the aggregator sets ``needs_server_eval``.
+    server_eval: Optional[Callable[[], jnp.ndarray]] = None
+
+    @property
+    def num_users(self) -> int:
+        return self.counts.shape[0]
+
+
+class Registry:
+    """Name -> strategy-class registry with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Callable] = {}
+
+    def register(self, name: str, entry: Callable) -> Callable:
+        if name in self._entries:
+            raise ValueError(
+                f"{self.kind} {name!r} is already registered "
+                f"({self._entries[name]!r})")
+        self._entries[name] = entry
+        return entry
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered {self.kind}s: "
+                f"{list(self.names())}") from None
+
+    def build(self, name: str, kwargs: Optional[Dict[str, Any]] = None,
+              defaults: Optional[Dict[str, Any]] = None) -> Any:
+        """Instantiate ``name`` with ``kwargs`` (strict) + ``defaults``.
+
+        ``defaults`` are engine-derived (FedConfig fields) and silently
+        dropped when the strategy does not accept them; ``kwargs`` come
+        from the user and must all be accepted.
+        """
+        cls = self.get(name)
+        kwargs = dict(kwargs or {})
+        params = inspect.signature(cls).parameters
+        has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                         for p in params.values())
+        merged = dict(kwargs)
+        for k, v in (defaults or {}).items():
+            if k not in merged and (has_var_kw or k in params):
+                merged[k] = v
+        if not has_var_kw:
+            bad = [k for k in kwargs if k not in params]
+            if bad:
+                raise TypeError(
+                    f"{self.kind} {name!r} got unexpected kwargs {bad}; "
+                    f"accepted: {sorted(p for p in params if p != 'self')}")
+        return cls(**merged)
+
+
+def register(registry: Registry, name: str) -> Callable:
+    """``@register(AGGREGATORS, "my_agg")`` class/function decorator."""
+    def deco(entry: Callable) -> Callable:
+        registry.register(name, entry)
+        if hasattr(entry, "name") or inspect.isclass(entry):
+            try:
+                entry.name = name
+            except (AttributeError, TypeError):
+                pass
+        return entry
+    return deco
+
+
+class Aggregator:
+    """Turns a :class:`RoundContext` into aggregation weights.
+
+    ``weights(ctx)`` must return a ``[N]`` simplex vector (non-negative,
+    sums to 1) — the fused weighted-sum aggregation (the Pallas
+    ``weighted_aggregate`` kernel on TPU) consumes it unchanged, so every
+    aggregator keeps the one-jitted-round property for free.
+
+    ``update_scores(ctx)`` lets stateful schemes (FedTest's moving
+    average) evolve the ``ScoreState`` carried in the round state; the
+    engine calls it first and hands the *updated* scores back via
+    ``ctx.scores`` before calling ``weights``.
+    """
+
+    name = "base"
+    needs_updates = False       # engine materialises ctx.updates [N, D]
+    needs_server_eval = False   # engine binds ctx.server_eval closure
+
+    def update_scores(self, ctx: RoundContext):
+        return ctx.scores
+
+    def weights(self, ctx: RoundContext) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<aggregator {self.name}>"
+
+
+class Attack:
+    """Corrupts the malicious clients' models after local training.
+
+    The malicious *index set* is static Python data (``malicious_indices``)
+    so both the corruption and the ``malicious_weight`` metric stay correct
+    for any placement — last slots, first slots, or an explicit set.
+    """
+
+    name = "base"
+
+    def __init__(self, *, num_malicious: int = 0, scale: float = 1.0,
+                 placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None):
+        if indices is not None:
+            indices = tuple(int(i) for i in indices)
+            num_malicious = len(indices)
+        if placement not in ("last", "first", "spread"):
+            raise ValueError(
+                f"placement must be 'last'|'first'|'spread', got "
+                f"{placement!r}")
+        self.num_malicious = int(num_malicious)
+        self.scale = float(scale)
+        self.placement = placement
+        self._indices = indices
+
+    def malicious_indices(self, num_users: int) -> Tuple[int, ...]:
+        """Static malicious id set (evaluation-side knowledge only)."""
+        m = self.num_malicious
+        if m == 0:
+            return ()
+        if self._indices is not None:
+            return self._indices
+        if self.placement == "first":
+            return tuple(range(m))
+        if self.placement == "spread":
+            stride = max(1, num_users // m)
+            return tuple(sorted(set(
+                min(i * stride, num_users - 1) for i in range(m))))
+        return tuple(range(num_users - m, num_users))
+
+    def malicious_mask(self, num_users: int) -> jnp.ndarray:
+        mask = [0.0] * num_users
+        for i in self.malicious_indices(num_users):
+            mask[i] = 1.0
+        return jnp.asarray(mask, jnp.float32)
+
+    def corrupt(self, key, trained, global_params):
+        """Produce one malicious client's model (pytree -> pytree)."""
+        raise NotImplementedError
+
+    def apply(self, key, stacked_params, global_params):
+        """Swap corrupted models into the malicious slots of the stack."""
+        import jax
+        from repro.utils.prng import key_iter
+        leaves = jax.tree_util.tree_leaves(stacked_params)
+        if not leaves:
+            return stacked_params
+        num_users = leaves[0].shape[0]
+        idx = self.malicious_indices(num_users)
+        if not idx:
+            return stacked_params
+        bad = []
+        ks = key_iter(key)      # same stream as the legacy apply_attacks
+        for c in idx:
+            trained = jax.tree_util.tree_map(lambda a, _c=c: a[_c],
+                                             stacked_params)
+            bad.append(self.corrupt(next(ks), trained, global_params))
+
+        def merge(stack, *bad_leaves):
+            for c, bl in zip(idx, bad_leaves):
+                stack = stack.at[c].set(bl)
+            return stack
+
+        return jax.tree_util.tree_map(merge, stacked_params, *bad)
+
+    def __repr__(self) -> str:
+        return (f"<attack {self.name} m={self.num_malicious} "
+                f"placement={self.placement}>")
+
+
+class Selector:
+    """Picks the K tester ids for a round."""
+
+    name = "base"
+
+    def select(self, key, num_users: int, num_testers: int,
+               round_idx) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<selector {self.name}>"
+
+
+AGGREGATORS = Registry("aggregator")
+ATTACKS = Registry("attack")
+SELECTORS = Registry("selector")

@@ -1,0 +1,56 @@
+"""Registered tester-selection policies (Algorithm 1 line 16).
+
+* ``rotating``    — independent random K-subset per round (the paper's
+  scheme; a fresh draw keyed on the round index).
+* ``round_robin`` — deterministic contiguous blocks walking the client
+  ring, so every client testers exactly once per N/K rounds (the
+  orthogonal-RB schedule's deterministic analogue, DESIGN.md §3).
+* ``fixed``       — a pinned tester committee (defaults to clients
+  0..K-1, or an explicit ``indices`` tuple) — the ablation where
+  compromised fixed testers matter most.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import select_testers
+from repro.strategies.base import SELECTORS, Selector, register
+
+
+@register(SELECTORS, "rotating")
+class Rotating(Selector):
+    """Random K-subset, redrawn each round (Alg. 1 line 16)."""
+
+    def select(self, key, num_users, num_testers, round_idx):
+        return select_testers(key, num_users, num_testers, round_idx)
+
+
+@register(SELECTORS, "round_robin")
+class RoundRobin(Selector):
+    """Deterministic block rotation: round r tests clients
+    ``(r*K + 0..K-1) mod N``."""
+
+    def select(self, key, num_users, num_testers, round_idx):
+        start = (round_idx * num_testers) % num_users
+        return (start + jnp.arange(num_testers)) % num_users
+
+
+@register(SELECTORS, "fixed")
+class Fixed(Selector):
+    """A pinned tester committee."""
+
+    def __init__(self, *, indices: Optional[Tuple[int, ...]] = None):
+        self.indices = (tuple(int(i) for i in indices)
+                        if indices is not None else None)
+
+    def select(self, key, num_users, num_testers, round_idx):
+        if self.indices is not None:
+            if len(self.indices) != num_testers:
+                raise ValueError(
+                    f"fixed selector got {len(self.indices)} indices but "
+                    f"num_testers={num_testers}")
+            return jnp.asarray(self.indices, jnp.int32)
+        return jnp.arange(num_testers, dtype=jnp.int32)

@@ -1,0 +1,98 @@
+"""Fallback for the optional ``hypothesis`` test dependency.
+
+``hypothesis`` is listed as an optional extra (requirements.txt); when it
+is absent the property tests still run against a deterministic sample of
+each strategy's domain instead of erroring at collection. Import from
+here instead of from ``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, st
+
+The fallback implements just the strategy surface this suite uses
+(``floats``, ``integers``, ``sampled_from``, ``lists``); real hypothesis
+is preferred automatically when installed.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _St:
+        """Deterministic stand-ins for the strategies the suite uses."""
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            lo, hi = float(min_value), float(max_value)
+
+            def sample(rng):
+                # bias toward the boundaries, where the bugs live
+                r = rng.random()
+                if r < 0.15:
+                    return lo
+                if r < 0.3:
+                    return hi
+                return lo + (hi - lo) * rng.random()
+            return _Strategy(sample)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            lo, hi = int(min_value), int(max_value)
+
+            def sample(rng):
+                r = rng.random()
+                if r < 0.15:
+                    return lo
+                if r < 0.3:
+                    return hi
+                return rng.randint(lo, hi)
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+    st = _St()
+
+    def settings(max_examples: int = 20, **_ignored):
+        """Records the example budget for the paired ``@given``."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: pytest must see run's (empty) signature,
+            # not the strategy params, or it hunts for fixtures
+            def run(*args, **kwargs):
+                # @settings sits above @given, so it stamps `run`
+                n = getattr(run, "_max_examples", 20)
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(min(n, 20)):
+                    drawn = {k: s.example(rng)
+                             for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+        return deco

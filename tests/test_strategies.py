@@ -1,0 +1,229 @@
+"""The pluggable strategy registry: aggregators x attacks x selectors.
+
+Covers the registry contract (helpful KeyError, simplex invariant under
+jit for every registered aggregator), the robust baselines down-weighting
+an attacker end-to-end, attack placement correctness of the
+``malicious_weight`` metric, and the no-retrace guarantee of pre-trace
+strategy resolution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config, list_scenarios, get_scenario
+from repro.core import FederatedTrainer
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.models import build_model
+from repro.strategies import (
+    AGGREGATORS, ATTACKS, SELECTORS, Aggregator, RoundContext, register)
+
+N_USERS = 8
+
+
+# ----------------------------------------------------------------- registry
+def test_unknown_names_raise_keyerror_listing_registered():
+    for registry, known in ((AGGREGATORS, "fedtest"),
+                            (ATTACKS, "random_weights"),
+                            (SELECTORS, "rotating")):
+        with pytest.raises(KeyError) as e:
+            registry.get("definitely_not_registered")
+        msg = str(e.value)
+        assert "definitely_not_registered" in msg
+        assert known in msg          # the error lists what *is* registered
+
+
+def test_fedconfig_validates_names_against_registries():
+    with pytest.raises(KeyError, match="fedavg"):
+        FedConfig(aggregator="nope")
+    with pytest.raises(KeyError, match="sign_flip"):
+        FedConfig(attack="nope")
+    with pytest.raises(KeyError, match="round_robin"):
+        FedConfig(selector="nope")
+
+
+def test_unknown_user_kwargs_raise_typeerror():
+    with pytest.raises(TypeError, match="bogus"):
+        AGGREGATORS.build("krum", {"bogus": 1})
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register(AGGREGATORS, "fedtest")(object)
+
+
+def test_custom_aggregator_via_decorator_resolves_from_config():
+    name = "test_only_uniformish"
+    if name not in AGGREGATORS:
+        @register(AGGREGATORS, name)
+        class Uniformish(Aggregator):
+            def weights(self, ctx):
+                n = ctx.num_users
+                return jnp.full((n,), 1.0 / n)
+
+    agg = AGGREGATORS.build(FedConfig(aggregator=name).aggregator)
+    ctx = _synthetic_ctx(jax.random.PRNGKey(0), 5)
+    np.testing.assert_allclose(np.asarray(agg.weights(ctx)),
+                               np.full(5, 0.2), atol=1e-6)
+
+
+def _synthetic_ctx(key, n, k=3, d=64):
+    ks = jax.random.split(key, 3)
+    return RoundContext(
+        acc_matrix=jax.random.uniform(ks[0], (k, n)),
+        tester_ids=jnp.arange(k),
+        scores=init_scores(n),
+        counts=jnp.arange(1.0, n + 1.0),
+        round_idx=jnp.zeros((), jnp.int32),
+        key=ks[1],
+        updates=jax.random.normal(ks[2], (n, d)),
+        server_eval=lambda: jax.random.uniform(ks[0], (n,)))
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATORS.names()))
+def test_every_registered_aggregator_returns_simplex_under_jit(name):
+    agg = AGGREGATORS.build(name, defaults={"num_byzantine": 1})
+
+    @jax.jit
+    def weights_of(key):
+        ctx = _synthetic_ctx(key, N_USERS)
+        scores = agg.update_scores(ctx)
+        return agg.weights(ctx._replace(scores=scores))
+
+    for seed in (0, 1):
+        w = np.asarray(weights_of(jax.random.PRNGKey(seed)))
+        assert w.shape == (N_USERS,)
+        assert (w >= -1e-6).all(), f"{name}: negative weight"
+        np.testing.assert_allclose(w.sum(), 1.0, atol=1e-4,
+                                   err_msg=f"{name}: not a simplex")
+
+
+# ------------------------------------------------------- attacks / placement
+def test_attack_placement_drives_malicious_mask():
+    atk = ATTACKS.build("random_weights",
+                        {"placement": "first"},
+                        {"num_malicious": 2, "scale": 1.0})
+    assert atk.malicious_indices(6) == (0, 1)
+    atk = ATTACKS.build("random_weights", {"indices": (1, 4)})
+    assert atk.malicious_indices(6) == (1, 4)
+    np.testing.assert_allclose(np.asarray(atk.malicious_mask(6)),
+                               [0, 1, 0, 0, 1, 0])
+    atk = ATTACKS.build("sign_flip", {}, {"num_malicious": 2})
+    assert atk.malicious_indices(6) == (4, 5)
+    # the no-op attack corrupts nobody, whatever num_malicious says
+    atk = ATTACKS.build("none", {}, {"num_malicious": 3})
+    assert atk.malicious_indices(6) == ()
+
+
+def test_attack_apply_corrupts_exactly_the_malicious_set():
+    stacked = {"p": jax.random.normal(jax.random.PRNGKey(0), (6, 4, 3))}
+    gp = {"p": jnp.zeros((4, 3))}
+    atk = ATTACKS.build("random_weights", {"indices": (0, 3)})
+    out = atk.apply(jax.random.PRNGKey(1), stacked, gp)
+    changed = [bool(np.abs(np.asarray(out["p"][c] - stacked["p"][c])).max()
+                    > 1e-4) for c in range(6)]
+    assert changed == [True, False, False, True, False, False]
+
+
+# --------------------------------------------------------------- selectors
+def test_selectors_return_valid_ids():
+    key = jax.random.PRNGKey(0)
+    for name in SELECTORS.names():
+        sel = SELECTORS.build(name)
+        ids = np.asarray(sel.select(key, 10, 4, jnp.asarray(2)))
+        assert ids.shape == (4,)
+        assert len(set(ids.tolist())) == 4
+        assert ((ids >= 0) & (ids < 10)).all(), name
+
+
+def test_round_robin_walks_the_ring():
+    sel = SELECTORS.build("round_robin")
+    key = jax.random.PRNGKey(0)
+    seen = []
+    for r in range(5):
+        seen += np.asarray(sel.select(key, 10, 2, jnp.asarray(r))).tolist()
+    assert seen == [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]
+
+
+# ---------------------------------------------------------------- end-to-end
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("fedtest-cnn-mnist").replace(
+        cnn_channels=(8, 16, 16), cnn_hidden=32)
+    model = build_model(cfg)
+    data = make_federated_image_dataset(MNIST_LIKE, N_USERS,
+                                        num_samples=2400, global_test=300,
+                                        seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=16, grad_clip=0.0, remat=False)
+    return model, data, tc
+
+
+@pytest.mark.parametrize("aggregator", ["krum", "trimmed_mean", "median"])
+def test_robust_aggregators_down_weight_random_attacker(smoke_setup,
+                                                        aggregator):
+    model, data, tc = smoke_setup
+    fed = FedConfig(num_users=N_USERS, num_testers=3, num_malicious=2,
+                    local_steps=2, aggregator=aggregator,
+                    attack="random_weights")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(2):
+        state, metrics = trainer.run_round(state, data)
+    # 2/8 malicious; uniform would give them 0.25 of the weight
+    assert float(metrics["malicious_weight"]) < 0.05, aggregator
+
+
+@pytest.mark.parametrize("attack,scale", [("label_flip_proxy", 1.0),
+                                          ("scaled_update", 10.0)])
+def test_new_attacks_run_jitted_and_fedtest_suppresses(smoke_setup, attack,
+                                                       scale):
+    model, data, tc = smoke_setup
+    fed = FedConfig(num_users=N_USERS, num_testers=3, num_malicious=2,
+                    local_steps=4, aggregator="fedtest", attack=attack,
+                    attack_scale=scale)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        state, metrics = trainer.run_round(state, data)
+    assert np.isfinite(float(metrics["local_loss"]))
+    assert float(metrics["malicious_weight"]) < 0.25
+    assert trainer.num_traces == 1
+
+
+def test_malicious_weight_metric_respects_placement(smoke_setup):
+    """The metric must track the attack's index set, not 'the last M'."""
+    model, data, tc = smoke_setup
+    fed = FedConfig(num_users=N_USERS, num_testers=3, num_malicious=2,
+                    local_steps=2, aggregator="uniform",
+                    attack="random_weights",
+                    attack_kwargs={"placement": "first"})
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    assert trainer.attack.malicious_indices(N_USERS) == (0, 1)
+    state = trainer.init(jax.random.PRNGKey(0))
+    state, metrics = trainer.run_round(state, data)
+    # uniform aggregation: the 2 attackers hold exactly 2/8 of the weight
+    np.testing.assert_allclose(float(metrics["malicious_weight"]),
+                               2.0 / N_USERS, atol=1e-5)
+
+
+def test_no_retrace_across_rounds(smoke_setup):
+    """Strategy resolution is pre-trace: N rounds -> one trace."""
+    model, data, tc = smoke_setup
+    fed = FedConfig(num_users=N_USERS, num_testers=3, num_malicious=2,
+                    local_steps=2, aggregator="krum",
+                    attack="random_weights")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        state, _ = trainer.run_round(state, data)
+    assert trainer.num_traces == 1
+
+
+def test_scenarios_resolve():
+    from repro.core.round import resolve_strategies
+    for name in list_scenarios():
+        agg, atk, sel = resolve_strategies(get_scenario(name))
+        assert agg is not None and atk is not None and sel is not None
