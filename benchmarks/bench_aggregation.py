@@ -6,6 +6,15 @@ Also sweeps **every registered aggregation strategy** by name: builds a
 synthetic :class:`RoundContext` and times the jitted
 ``update_scores + weights`` computation, so any strategy added through
 ``repro.strategies`` gets per-round latency numbers for free.
+
+The ``combine`` section benchmarks the second aggregation fast path —
+the per-coordinate ``robust_combine`` sorting network — against both the
+``jnp.sort`` oracle it must beat and the ``weighted_aggregate`` roofline
+it should approach: the network reads the same ``C * M * 4`` bytes as
+the weighted sum and does only ~C^2/2 row min/max ops on top, so its
+effective bandwidth should land within ~2x of the weighted sum
+(``roofline_frac`` in the emitted rows / ``BENCH_aggregation.json``),
+while the general-sort path falls far behind.
 """
 from __future__ import annotations
 
@@ -14,6 +23,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import FAST, emit, timeit
 from repro.core.scoring import init_scores
+from repro.kernels.robust_combine.ops import robust_combine
 from repro.kernels.weighted_aggregate.ops import weighted_aggregate
 from repro.strategies import AGGREGATORS, RoundContext
 from repro.utils import tree_weighted_sum
@@ -55,8 +65,52 @@ def sweep_strategies(fast: bool = FAST):
             emit(f"aggregate/strategy_{name}_N{N}_D{D}", us, f"K={K}")
 
 
+def sweep_robust_combine(fast: bool = FAST):
+    """Coordinate-wise combine path vs sort oracle vs weighted-sum roofline.
+
+    The acceptance sizes (C=16, M=2^22) run in both modes — they are the
+    numbers the perf trajectory tracks in BENCH_aggregation.json.
+    """
+    sizes = [(8, 1 << 18), (16, 1 << 22)] if fast else \
+        [(8, 1 << 20), (16, 1 << 22), (32, 1 << 22)]
+    robust_impl = "pallas" if jax.default_backend() == "tpu" else "network"
+    for C, M in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (C, M), jnp.float32)
+        w = jax.random.uniform(jax.random.PRNGKey(1), (C,))
+        read_bytes = C * M * 4
+
+        fn = jax.jit(lambda x, w: weighted_aggregate(x, w, impl="auto"))
+        wagg_us = timeit(fn, x, w)
+        wagg_gbps = read_bytes / (wagg_us / 1e6) / 1e9
+        emit(f"aggregate/wagg_roofline_C{C}_M{M}", wagg_us,
+             f"read_GBps={wagg_gbps:.2f}", gbps=round(wagg_gbps, 2),
+             roofline_frac=1.0)
+
+        for mode in ("trimmed_mean", "median"):
+            fn = jax.jit(lambda x, _m=mode: robust_combine(
+                x, mode=_m, trim_fraction=0.25, impl=robust_impl))
+            us = timeit(fn, x)
+            gbps = read_bytes / (us / 1e6) / 1e9
+            frac = gbps / wagg_gbps
+            emit(f"aggregate/robust_{mode}_{robust_impl}_C{C}_M{M}", us,
+                 f"read_GBps={gbps:.2f} roofline_frac={frac:.2f}",
+                 gbps=round(gbps, 2), roofline_frac=round(frac, 3))
+
+        # the per-leaf jnp.sort baseline the network path must beat
+        fn = jax.jit(lambda x: robust_combine(x, mode="trimmed_mean",
+                                              trim_fraction=0.25,
+                                              impl="sort"))
+        us = timeit(fn, x, iters=3)
+        gbps = read_bytes / (us / 1e6) / 1e9
+        emit(f"aggregate/robust_trimmed_mean_sort_C{C}_M{M}", us,
+             f"read_GBps={gbps:.2f} roofline_frac={gbps / wagg_gbps:.2f}",
+             gbps=round(gbps, 2),
+             roofline_frac=round(gbps / wagg_gbps, 3))
+
+
 def main(fast: bool = FAST):
     sweep_strategies(fast)
+    sweep_robust_combine(fast)
     sizes = [(8, 1 << 18), (20, 1 << 20)] if fast else \
         [(8, 1 << 20), (20, 1 << 22), (64, 1 << 22)]
     for C, M in sizes:
@@ -65,7 +119,8 @@ def main(fast: bool = FAST):
         fn = jax.jit(lambda x, w: weighted_aggregate(x, w, impl="naive"))
         us = timeit(fn, x, w)
         gbps = C * M * 4 / (us / 1e6) / 1e9
-        emit(f"aggregate/xla_C{C}_M{M}", us, f"read_GBps={gbps:.2f}")
+        emit(f"aggregate/xla_C{C}_M{M}", us, f"read_GBps={gbps:.2f}",
+             gbps=round(gbps, 2))
 
     # pytree path (stacked CNN-scale model)
     tree = {f"l{i}": jax.random.normal(jax.random.PRNGKey(i), (12, 64, 64))

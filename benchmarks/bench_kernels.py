@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from benchmarks.common import FAST, emit, timeit
 from repro.kernels.decode_attention.ops import _decode_xla
 from repro.kernels.flash_attention.ops import attention_xla
+from repro.kernels.robust_combine.ops import robust_combine
 from repro.kernels.ssd_scan.ops import _ssd_xla
 
 
@@ -50,6 +51,19 @@ def main(fast: bool = FAST):
     fn = jax.jit(lambda *a: _ssd_xla(*a, chunk=128)[0])
     us = timeit(fn, x, dt, A, Bm, Cm, Dv)
     emit(f"ssd_scan/xla_S{S2}", us, f"heads={H} state={N}")
+
+    # robust combine (per-coordinate trimmed mean via sorting network vs
+    # the jnp.sort oracle; the Pallas kernel targets TPU, validated by the
+    # interpret-mode parity sweep in tests/test_kernels_robust.py)
+    C, M = (16, 1 << 20) if fast else (16, 1 << 22)
+    xr = jax.random.normal(jax.random.PRNGKey(2), (C, M), jnp.float32)
+    for impl in ("network", "sort"):
+        fn = jax.jit(lambda x, _i=impl: robust_combine(
+            x, mode="trimmed_mean", trim_fraction=0.25, impl=_i))
+        us = timeit(fn, xr, iters=3)
+        gbps = C * M * 4 / (us / 1e6) / 1e9
+        emit(f"robust_combine/{impl}_C{C}_M{M}", us,
+             f"read_GBps={gbps:.2f}", gbps=round(gbps, 2))
 
 
 if __name__ == "__main__":

@@ -3,10 +3,15 @@ from __future__ import annotations
 
 import os
 import time
+from typing import List
 
 import jax
 
 FAST = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+# structured copy of every emitted row, for JSON artifacts
+# (benchmarks/run.py drains this per suite into BENCH_<suite>.json)
+ROWS: List[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5):
@@ -22,5 +27,12 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 5):
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str, **fields) -> None:
+    """Print one CSV row and record it for the JSON artifact.
+
+    ``fields`` are optional machine-readable extras (e.g. ``gbps=...``,
+    ``roofline_frac=...``) carried into ``BENCH_<suite>.json``.
+    """
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    ROWS.append(dict(name=name, us_per_call=round(us_per_call, 1),
+                     derived=derived, **fields))

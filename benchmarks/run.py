@@ -5,9 +5,17 @@ Prints ``name,us_per_call,derived`` CSV rows. Fast mode is the default
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run kernels    # one suite
+
+Suites listed in ``JSON_SUITES`` additionally dump their rows as
+``BENCH_<suite>.json`` (machine-readable: name, us_per_call, and any
+structured extras such as GB/s and roofline fraction) — the perf
+trajectory artifact CI uploads per commit.
 """
+import json
 import sys
 import time
+
+from benchmarks import common
 
 SUITES = [
     ("kernels", "benchmarks.bench_kernels"),          # kernel micro
@@ -19,6 +27,8 @@ SUITES = [
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 
+JSON_SUITES = {"aggregation"}
+
 
 def main() -> None:
     want = set(sys.argv[1:])
@@ -26,12 +36,18 @@ def main() -> None:
     for name, module in SUITES:
         if want and name not in want:
             continue
+        common.ROWS.clear()
         t0 = time.time()
         mod = __import__(module, fromlist=["main"])
         try:
             mod.main()
         except Exception as e:  # keep the harness alive per-suite
             print(f"{name}/ERROR,0,{e!r}", flush=True)
+        if name in JSON_SUITES and common.ROWS:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(common.ROWS, f, indent=1)
+            print(f"# wrote {path} ({len(common.ROWS)} rows)", flush=True)
         print(f"# suite {name} done in {time.time() - t0:.0f}s", flush=True)
 
 

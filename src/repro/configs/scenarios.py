@@ -37,6 +37,20 @@ SCENARIOS: Dict[str, FedConfig] = {
     "fixed_testers": FedConfig(
         num_users=20, num_testers=5, num_malicious=3,
         attack="random_weights", selector="fixed", rounds=60),
+    # per-coordinate defences on the combine() fast path
+    "coord_trimmed_mean_vs_scaled_update": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        aggregator="trimmed_mean_coord",
+        aggregator_kwargs={"trim_fraction": 0.25},
+        attack="scaled_update", attack_scale=10.0, rounds=60),
+    "coord_median_score_gated": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        aggregator="median_coord", aggregator_kwargs={"score_gate": 0.2},
+        attack="random_weights", rounds=60),
+    # client sampling (participation R/N < 1, Sec. III notation)
+    "partial_participation": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="random_weights", participation=0.5, rounds=60),
 }
 
 

@@ -13,12 +13,22 @@ strategy (``repro.strategies.AGGREGATORS``). The paper's three schemes:
 
 The reduction itself runs through the ``weighted_aggregate`` Pallas kernel
 on TPU (``impl='pallas'``) or its jnp oracle elsewhere.
+
+A second fast path exists for aggregators that cannot be expressed as a
+weighted sum: a ``combine_fn`` mapping the ``[N, D]`` flattened client
+update matrix to one ``[D]`` combined update (per-coordinate trimmed
+mean / median via the ``robust_combine`` sorting-network kernel). The
+combined update is scattered back onto the global param pytree in one
+fused unflatten-and-add.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
 from repro.kernels.weighted_aggregate import aggregate_pytree
+from repro.utils.pytree import tree_add_vector
 
 
 def fedavg_weights(sample_counts: jnp.ndarray) -> jnp.ndarray:
@@ -36,9 +46,26 @@ def accuracy_based_weights(server_accuracies: jnp.ndarray,
 
 
 def aggregate_models(stacked_params, weights: jnp.ndarray, *,
-                     impl: str = "auto"):
-    """Algorithm 1 line 14: score-weighted model aggregation.
+                     impl: str = "auto",
+                     combine_fn: Optional[Callable] = None,
+                     updates: Optional[jnp.ndarray] = None,
+                     global_params=None):
+    """Algorithm 1 line 14: server-side model aggregation.
 
     ``stacked_params``: pytree whose leaves have a leading client axis.
+
+    Default (``combine_fn is None``): the weighted-sum fast path —
+    reduce ``stacked_params`` with the ``[N]`` ``weights`` simplex.
+
+    Combine path: ``combine_fn`` maps the already-flattened ``[N, D]``
+    ``updates`` matrix (trained - global, the engine computes it at most
+    once per round) to a ``[D]`` combined update, which is unflattened
+    onto ``global_params`` in one pass; ``weights`` is ignored.
     """
-    return aggregate_pytree(stacked_params, weights, impl=impl)
+    if combine_fn is None:
+        return aggregate_pytree(stacked_params, weights, impl=impl)
+    if updates is None or global_params is None:
+        raise ValueError(
+            "combine_fn aggregation needs the [N, D] updates matrix and "
+            "the global params pytree")
+    return tree_add_vector(global_params, combine_fn(updates))

@@ -31,7 +31,8 @@ from repro.config import FedConfig, TrainConfig
 from repro.core.cross_testing import make_eval_fn
 from repro.core.scoring import ScoreState
 from repro.optim import make_optimizer
-from repro.strategies.base import Aggregator, RoundContext
+from repro.strategies.base import Aggregator, RoundContext, uses_combine
+from repro.utils.pytree import tree_add_vector
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -45,6 +46,11 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
 
 
 def _resolve_aggregator(fed: FedConfig, aggregator) -> Aggregator:
+    if fed.participation < 1.0:
+        raise ValueError(
+            "participation < 1 (client sampling) is only implemented on "
+            "the single-host engine; the pod path trains every client — "
+            "see ROADMAP open items")
     if isinstance(aggregator, Aggregator):
         agg = aggregator
     else:
@@ -66,14 +72,18 @@ def _strategy_weights(agg: Aggregator, acc, scores, params, global_params,
 
     ``acc`` is the already-combined [N] accuracy vector, so the context
     carries it as a single-tester matrix. Aggregators that need client
-    updates (krum / trimmed_mean / median) trigger one all-gather of the
-    *flattened* update — the same N-x memory cost as the all-gather
-    exchange, so prefer those aggregators with ``--exchange allgather``.
-    ``counts`` are the per-client sample counts (static host data, closed
-    over); without them fedavg degenerates to uniform weighting.
+    updates (krum / trimmed_mean / median, and every ``combine()``
+    aggregator) trigger one all-gather of the *flattened* update — the
+    same N-x memory cost as the all-gather exchange, so prefer those
+    aggregators with ``--exchange allgather``. ``counts`` are the
+    per-client sample counts (static host data, closed over); without
+    them fedavg degenerates to uniform weighting.
+
+    Returns ``(weights, new_scores, ctx)`` — the context carries the
+    all-gathered ``[N, D]`` updates (replicated) for the combine path.
     """
     updates = None
-    if agg.needs_updates:
+    if agg.needs_updates or uses_combine(agg):
         flat = jnp.concatenate([
             (p.astype(jnp.float32) - g.astype(jnp.float32)).ravel()
             for p, g in zip(jax.tree_util.tree_leaves(params),
@@ -90,13 +100,32 @@ def _strategy_weights(agg: Aggregator, acc, scores, params, global_params,
         key=jax.random.fold_in(jax.random.PRNGKey(0), scores.rounds_seen),
         updates=updates)
     new_scores = agg.update_scores(ctx)
-    weights = agg.weights(ctx._replace(scores=new_scores))
+    ctx = ctx._replace(scores=new_scores)
+    weights = agg.weights(ctx)
     # stateless aggregators leave ScoreState untouched; advance the round
     # counter for them so ctx.round_idx / ctx.key vary across rounds
     if type(agg).update_scores is Aggregator.update_scores:
         new_scores = new_scores._replace(
             rounds_seen=new_scores.rounds_seen + 1)
-    return weights, new_scores
+    return weights, new_scores, ctx
+
+
+def _aggregate_on_pod(agg: Aggregator, ctx: RoundContext, params,
+                      global_params, weights, axis: str):
+    """New global model: weighted psum, or the combine fast path.
+
+    Combine aggregators run on the all-gathered ``[N, D]`` update matrix,
+    which is replicated across the client axis after the gather — every
+    device computes the identical combined update (the reduction-host
+    computation, replicated), so the result needs no further collective.
+    """
+    if uses_combine(agg):
+        return tree_add_vector(global_params, agg.combine(ctx, ctx.updates))
+    my_w = weights[jax.lax.axis_index(axis)]
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(
+            (x.astype(jnp.float32) * my_w), axis).astype(x.dtype),
+        params)
 
 
 def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
@@ -178,7 +207,6 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
         bx, by = bx[0], by[0]
         tx, ty = tx[0], ty[0]
         my_mask = tester_mask[0]
-        my_idx = jax.lax.axis_index(axis)
 
         # 1-2. local training on my shard
         params, local_loss = local_train(global_params, bx, by)
@@ -192,16 +220,13 @@ def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
         acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
 
         # 6. replicated strategy weights (reports already masked)
-        weights, new_scores = _strategy_weights(
+        weights, new_scores, ctx = _strategy_weights(
             agg, acc, scores, params, global_params, axis, num_clients,
             counts=counts)
 
-        # 7. weighted aggregation = one psum over the client axis
-        my_w = weights[my_idx]
-        new_global = jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(
-                (x.astype(jnp.float32) * my_w), axis).astype(x.dtype),
-            params)
+        # 7. weighted psum over the client axis, or the combine fast path
+        new_global = _aggregate_on_pod(agg, ctx, params, global_params,
+                                       weights, axis)
 
         metrics = {"local_loss": jax.lax.pmean(local_loss, axis),
                    "acc_mean": jnp.mean(acc),
@@ -236,7 +261,6 @@ def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
         bx, by = bx[0], by[0]
         tx, ty = tx[0], ty[0]
         my_mask = tester_mask[0]
-        my_idx = jax.lax.axis_index(axis)
 
         opt_state = opt.init(global_params)
 
@@ -258,13 +282,11 @@ def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
 
         k_total = jax.lax.psum(my_mask, axis)
         acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
-        weights, new_scores = _strategy_weights(
+        weights, new_scores, ctx = _strategy_weights(
             agg, acc, scores, params, global_params, axis, num_clients,
             counts=counts)
-        new_global = jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(
-                x.astype(jnp.float32) * weights[my_idx], axis).astype(x.dtype),
-            params)
+        new_global = _aggregate_on_pod(agg, ctx, params, global_params,
+                                       weights, axis)
         metrics = {"local_loss": jax.lax.pmean(jnp.mean(losses), axis),
                    "acc_mean": jnp.mean(acc),
                    "weights": weights}

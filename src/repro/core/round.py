@@ -37,7 +37,7 @@ from repro.core.cross_testing import cross_test_accuracies, make_eval_fn
 from repro.core.scoring import ScoreState, init_scores
 from repro.data.pipeline import FederatedDataset, sample_client_batches
 from repro.optim import make_optimizer
-from repro.strategies.base import RoundContext
+from repro.strategies.base import RoundContext, uses_combine
 
 
 class RoundState(NamedTuple):
@@ -93,6 +93,12 @@ class FederatedTrainer:
         # closes over these objects as static callables.
         self.aggregator, self.attack, self.selector = resolve_strategies(
             self.fed, self.use_trust)
+        # a non-None combine hook routes aggregation through the
+        # per-coordinate fast path; both checks are static Python, so the
+        # jitted round never branches on them at trace time.
+        self._uses_combine = uses_combine(self.aggregator)
+        self._needs_updates = (self.aggregator.needs_updates
+                               or self._uses_combine)
         self._malicious_idx = self.attack.malicious_indices(
             self.fed.num_users)
         self._malicious_mask = self.attack.malicious_mask(self.fed.num_users)
@@ -150,6 +156,18 @@ class FederatedTrainer:
         key = jax.random.fold_in(state.key, state.round_idx)
         k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
         k_agg = jax.random.fold_in(key, 5)
+        k_part = jax.random.fold_in(key, 6)
+
+        # 0. client sampling (participation R/N < 1): Bernoulli per client,
+        # falling back to everyone in the zero-participant corner so the
+        # round is always well defined. Non-participants still train under
+        # vmap (uniform lockstep) but get exactly zero aggregation weight.
+        part_mask = None
+        if fed.participation < 1.0:
+            bern = jax.random.bernoulli(k_part, fed.participation,
+                                        (fed.num_users,))
+            part_mask = jnp.where(jnp.any(bern), bern.astype(jnp.float32),
+                                  jnp.ones((fed.num_users,), jnp.float32))
 
         # 1-2. broadcast + vectorised local training
         stacked = jax.tree_util.tree_map(
@@ -186,18 +204,33 @@ class FederatedTrainer:
             sy = data.server_y[:self.eval_batch]
             server_eval = lambda: jax.vmap(                      # noqa: E731
                 lambda p: eval_fn(p, sx, sy))(trained)
+        # the [N, D] update matrix is computed at most once per round and
+        # shared between ctx.updates consumers and the combine fast path
         updates = (self._flat_updates(trained, state.global_params)
-                   if self.aggregator.needs_updates else None)
+                   if self._needs_updates else None)
         ctx = RoundContext(acc_matrix=acc, tester_ids=tester_ids,
                            scores=state.scores, counts=data.train.counts,
                            round_idx=state.round_idx, key=k_agg,
-                           updates=updates, server_eval=server_eval)
+                           updates=updates, server_eval=server_eval,
+                           participation=part_mask)
         scores = self.aggregator.update_scores(ctx)
         ctx = ctx._replace(scores=scores)
         weights = self.aggregator.weights(ctx)
+        if part_mask is not None:
+            # non-participants keep exactly zero weight; if the sampled
+            # subset got zero total weight, fall back to uniform over it
+            w = weights * part_mask
+            total = jnp.sum(w)
+            weights = jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
+                                part_mask / jnp.sum(part_mask))
 
-        # 7. score-weighted aggregation -> new global model
-        new_global = aggregate_models(trained, weights, impl=self.agg_impl)
+        # 7. aggregation -> new global model: score-weighted sum, or the
+        # per-coordinate combine fast path when the aggregator defines it
+        combine_fn = ((lambda u: self.aggregator.combine(ctx, u))
+                      if self._uses_combine else None)
+        new_global = aggregate_models(trained, weights, impl=self.agg_impl,
+                                      combine_fn=combine_fn, updates=updates,
+                                      global_params=state.global_params)
 
         # the malicious index set comes from the attack strategy, so the
         # metric stays correct for any placement of the attackers.
@@ -209,6 +242,9 @@ class FederatedTrainer:
             "weights": weights,
             "malicious_weight": mal_w,
             "scores": scores.scores,
+            "participation_rate": (jnp.mean(part_mask)
+                                   if part_mask is not None
+                                   else jnp.ones(())),
         }
         new_state = RoundState(global_params=new_global, scores=scores,
                                round_idx=state.round_idx + 1, key=state.key)

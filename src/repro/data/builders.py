@@ -1,6 +1,8 @@
 """One-call builders assembling FederatedDataset objects."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -13,10 +15,14 @@ from repro.data.synthetic import ImageSpec, make_image_dataset
 def make_federated_image_dataset(spec: ImageSpec, num_users: int,
                                  num_samples: int = 20_000,
                                  partition: str = "paper",
+                                 partition_kwargs: Optional[dict] = None,
                                  holdout_frac: float = 0.2,
                                  server_frac: float = 0.1,
                                  global_test: int = 2_000,
                                  seed: int = 0) -> FederatedDataset:
+    """``partition_kwargs`` are forwarded to the partitioner — e.g.
+    ``{"min_classes": 8}`` for milder paper-style skew, or
+    ``{"alpha": 0.1}`` for a sharper Dirichlet split."""
     x, y = make_image_dataset(spec, num_samples + global_test, seed=seed)
     gx, gy = x[num_samples:], y[num_samples:]
     x, y = x[:num_samples], y[:num_samples]
@@ -26,10 +32,11 @@ def make_federated_image_dataset(spec: ImageSpec, num_users: int,
     sx, sy = x[:n_server], y[:n_server]
     x, y = x[n_server:], y[n_server:]
 
+    pkw = dict(partition_kwargs or {})
     if partition == "paper":
-        parts = paper_noniid_partition(y, num_users, seed=seed + 1)
+        parts = paper_noniid_partition(y, num_users, seed=seed + 1, **pkw)
     elif partition == "dirichlet":
-        parts = dirichlet_partition(y, num_users, seed=seed + 1)
+        parts = dirichlet_partition(y, num_users, seed=seed + 1, **pkw)
     elif partition == "iid":
         idx = np.random.default_rng(seed + 1).permutation(len(y))
         parts = np.array_split(idx, num_users)

@@ -16,4 +16,7 @@ Kernels:
   sequential chunk grid dimension in VMEM scratch).
 * ``weighted_aggregate`` — the FedTest server's score-weighted N-way model
   reduction.
+* ``robust_combine``     — per-coordinate trimmed-mean / median over the
+  client axis via a fixed-C odd-even sorting network (the
+  ``Aggregator.combine()`` fast path), with an optional client mask.
 """

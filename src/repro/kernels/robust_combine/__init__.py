@@ -1,0 +1,4 @@
+from repro.kernels.robust_combine.ops import (
+    robust_combine, row_select_weights)
+
+__all__ = ["robust_combine", "row_select_weights"]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for per-coordinate robust aggregation (trimmed mean /
+median over the client axis).
+
+The server holds C client updates stacked as ``[C, M]`` (flattened params)
+and needs an *order statistic* per coordinate — the defence evaluated by
+the poisoning literature — instead of a weighted sum. Grid is 1-D over
+``M // block_m``; each step streams a ``[C, block_m]`` tile through VMEM
+and sorts the C rows on the VPU with a fixed-C **Batcher odd-even
+mergesort network**: ``O(C log^2 C)`` compare-exchanges (63 at C=16, 191
+at C=32), each a single ``minimum``/``maximum`` row op. That is a
+handful of VPU cycles per element, so the kernel stays
+memory-bandwidth-bound like the ``weighted_aggregate`` reduction — the
+cheaper odd-even *transposition* schedule (C^2/2 exchanges) measurably
+falls off the roofline already at C=16.
+
+Masked clients (``mask[c] == 0``) are pushed past every finite value
+before the sort, so they land in the tail rows of the sorted stack; the
+caller encodes *which order statistics to keep* as a ``[C]`` row-weight
+vector over sorted positions (``ops.row_select_weights``) and the kernel
+finishes with one weighted reduction of the sorted rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Larger than any finite fp32 update coordinate, small enough that
+# 0 * _MASKED_SENTINEL == 0 stays exact (never inf, so no 0*inf NaNs).
+_MASKED_SENTINEL = 3.0e38
+
+
+def oddeven_merge_pairs(c: int) -> List[Tuple[int, int]]:
+    """Compare-exchange schedule of Batcher's odd-even mergesort.
+
+    Sorts any ``c`` rows with ``O(c log^2 c)`` comparators (the arbitrary-n
+    iterative form, validated against the 0-1 principle in the tests). The
+    schedule is static Python, so both the Pallas kernel and the XLA
+    fallback unroll it at trace time.
+    """
+    pairs = []
+    p = 1
+    while p < c:
+        k = p
+        while k >= 1:
+            for j in range(k % p, c - k, 2 * k):
+                for i in range(min(k, c - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return pairs
+
+
+def _sort_rows(rows: List[jnp.ndarray], c: int) -> List[jnp.ndarray]:
+    """Sorting network over a list of c row vectors (any trailing shape);
+    shared by the Pallas kernel ([1, block_m] rows) and the XLA fallback
+    ([M] rows) so the two paths cannot diverge."""
+    for i, j in oddeven_merge_pairs(c):
+        a, b = rows[i], rows[j]
+        rows[i] = jnp.minimum(a, b)
+        rows[j] = jnp.maximum(a, b)
+    return rows
+
+
+def _robust_kernel(mask_ref, wrow_ref, x_ref, o_ref):
+    c = x_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)            # [C, block_m]
+    mask = mask_ref[...]                          # [C, 1]
+    x = jnp.where(mask > 0.0, x, _MASKED_SENTINEL)
+    rows = _sort_rows([x[i:i + 1] for i in range(c)], c)
+    w = wrow_ref[...]                             # [C, 1] sorted-position wts
+    acc = rows[0] * w[0:1]
+    for i in range(1, c):
+        acc = acc + rows[i] * w[i:i + 1]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def robust_combine_pallas(x: jnp.ndarray, mask: jnp.ndarray,
+                          w_row: jnp.ndarray, *, block_m: int = 4096,
+                          interpret: bool = False) -> jnp.ndarray:
+    """x [C, M] (M % block_m == 0); mask [C]; w_row [C] -> [M].
+
+    ``w_row`` weighs *sorted positions* (ascending, masked rows last) —
+    the trimmed-mean / median selection computed by the caller.
+    """
+    C, M = x.shape
+    block_m = min(block_m, M)
+    assert M % block_m == 0, (M, block_m)
+    out = pl.pallas_call(
+        _robust_kernel,
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((C, 1), lambda mi: (0, 0)),
+            pl.BlockSpec((C, 1), lambda mi: (0, 0)),
+            pl.BlockSpec((C, block_m), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((1, M), x.dtype),
+        interpret=interpret,
+    )(mask.astype(jnp.float32).reshape(C, 1),
+      w_row.astype(jnp.float32).reshape(C, 1), x)
+    return out[0]

@@ -1,0 +1,24 @@
+"""Oracle for per-coordinate robust aggregation: jnp.sort + selection.
+
+``robust_combine_ref`` is the ground truth the Pallas sorting-network
+kernel (and its XLA fallback) are tested against: sort each coordinate's
+C client values with ``jnp.sort`` (masked clients pushed past every
+finite value) and reduce the sorted stack with the caller's
+sorted-position weights. It is also the ``impl='sort'`` path — the
+baseline the network implementations must beat.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.robust_combine.kernel import _MASKED_SENTINEL
+
+
+def robust_combine_ref(x: jnp.ndarray, mask: jnp.ndarray,
+                       w_row: jnp.ndarray) -> jnp.ndarray:
+    """x [C, M]; mask [C]; w_row [C] (sorted-position weights) -> [M]."""
+    xm = jnp.where(mask.astype(jnp.float32)[:, None] > 0.0,
+                   x.astype(jnp.float32), _MASKED_SENTINEL)
+    xs = jnp.sort(xm, axis=0)
+    out = jnp.einsum("c,cm->m", w_row.astype(jnp.float32), xs)
+    return out.astype(x.dtype)

@@ -32,7 +32,10 @@ def main():
                     help="cross-testing model exchange schedule")
     ap.add_argument("--aggregator", default="fedtest",
                     help="repro.strategies.AGGREGATORS name (krum / "
-                         "trimmed_mean / median all-gather flat updates)")
+                         "trimmed_mean / median all-gather flat updates; "
+                         "trimmed_mean_coord / median_coord additionally "
+                         "combine() them per-coordinate on the gathered "
+                         "matrix, replicated across the pod)")
     ap.add_argument("--selector", default="rotating",
                     help="repro.strategies.SELECTORS name for the per-"
                          "round tester mask")

@@ -27,7 +27,8 @@ See README.md §"Writing a strategy".
 """
 from repro.strategies.base import (
     AGGREGATORS, ATTACKS, SELECTORS,
-    Aggregator, Attack, Registry, RoundContext, Selector, register)
+    Aggregator, Attack, Registry, RoundContext, Selector, register,
+    uses_combine)
 # importing the submodules populates the registries
 from repro.strategies import aggregators as _aggregators  # noqa: F401
 from repro.strategies import attacks as _attacks          # noqa: F401
@@ -36,5 +37,5 @@ from repro.strategies import selectors as _selectors      # noqa: F401
 __all__ = [
     "AGGREGATORS", "ATTACKS", "SELECTORS",
     "Aggregator", "Attack", "Selector",
-    "Registry", "RoundContext", "register",
+    "Registry", "RoundContext", "register", "uses_combine",
 ]

@@ -21,9 +21,23 @@ kernel). The paper's three schemes plus three standard robust baselines:
   (a smooth stand-in for coordinate-wise median that stays a weighted
   sum, so the one fused aggregation kernel is preserved).
 
+Plus the true *per-coordinate* defences of the poisoning literature,
+which cannot be expressed as a client weight simplex at all — they ride
+the ``Aggregator.combine()`` fast path (the ``robust_combine``
+sorting-network kernel) instead of the weighted sum:
+
+* ``trimmed_mean_coord`` — [Yin et al., ICML'18] coordinate-wise
+  beta-trimmed mean of the client updates.
+* ``median_coord``       — coordinate-wise median of the client updates.
+
+Both take an optional ``score_gate``: clients whose FedTest
+moving-average score falls below ``score_gate * max(scores)`` are masked
+out of the order statistic, composing the paper's cross-testing signal
+with the update-space defence.
+
 The robust baselines operate on ``ctx.updates`` — the ``[N, D]`` float32
 matrix of flattened client updates — which the engine materialises only
-when ``needs_updates`` is set.
+when ``needs_updates`` is set (or ``combine`` is defined).
 """
 from __future__ import annotations
 
@@ -32,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.scoring import (
     score_weights, update_scores, update_tester_trust)
+from repro.kernels.robust_combine import robust_combine
 from repro.strategies.base import (
     AGGREGATORS, Aggregator, RoundContext, register)
 
@@ -194,6 +209,88 @@ class GeometricMedian(Aggregator):
             w = 1.0 / (dist + self.eps)
             w = w / jnp.maximum(w.sum(), 1e-12)
         return w
+
+
+class _CoordRobust(Aggregator):
+    """Shared machinery of the per-coordinate combine aggregators.
+
+    The client *gate mask* decides who enters the per-coordinate order
+    statistic: everyone by default, optionally filtered by the FedTest
+    moving-average scores (``score_gate``) and always intersected with
+    the round's participation mask. ``weights()`` returns the normalised
+    gate — used only for reporting (``malicious_weight``), never for the
+    reduction itself.
+
+    These aggregators maintain the FedTest moving-average scores
+    themselves (same ``update_scores`` as the ``fedtest`` scheme) so the
+    gate has a live cross-testing signal to act on — without it the
+    scores would sit at their all-zero init and the gate would never
+    engage.
+    """
+
+    needs_updates = True
+
+    def __init__(self, *, trim_fraction: float = 0.2,
+                 score_gate: float = 0.0, impl: str = "auto",
+                 score_power: float = 4.0, score_decay: float = 0.5,
+                 power_warmup_rounds: int = 2):
+        if not 0.0 <= trim_fraction < 1.0:
+            raise ValueError(f"trim_fraction in [0, 1), got {trim_fraction}")
+        if not 0.0 <= score_gate <= 1.0:
+            raise ValueError(f"score_gate in [0, 1], got {score_gate}")
+        self.trim_fraction = float(trim_fraction)
+        self.score_gate = float(score_gate)
+        self.impl = impl
+        self.score_power = float(score_power)
+        self.score_decay = float(score_decay)
+        self.power_warmup_rounds = int(power_warmup_rounds)
+
+    _mode = "trimmed_mean"
+
+    def update_scores(self, ctx: RoundContext):
+        return update_scores(ctx.scores, ctx.acc_matrix, ctx.tester_ids,
+                             power=self.score_power,
+                             decay=self.score_decay,
+                             power_warmup_rounds=self.power_warmup_rounds)
+
+    def gate_mask(self, ctx: RoundContext) -> jnp.ndarray:
+        mask = jnp.ones((ctx.num_users,), jnp.float32)
+        if self.score_gate > 0.0:
+            s = jnp.maximum(ctx.scores.scores, 0.0)
+            gated = (s >= self.score_gate * jnp.max(s)).astype(jnp.float32)
+            # before any scores exist (round 0) the gate would be
+            # degenerate — keep everyone until the signal is non-zero
+            mask = jnp.where(jnp.max(s) > 0.0, gated, mask)
+        if ctx.participation is not None:
+            mask = mask * ctx.participation
+        # the statistic needs at least one client; an empty gate falls
+        # back to the full participation set
+        return jnp.where(mask.sum() > 0.0, mask,
+                         ctx.participation if ctx.participation is not None
+                         else jnp.ones_like(mask))
+
+    def weights(self, ctx: RoundContext) -> jnp.ndarray:
+        return _mask_to_simplex(self.gate_mask(ctx))
+
+    def combine(self, ctx: RoundContext, updates: jnp.ndarray) -> jnp.ndarray:
+        return robust_combine(updates, mask=self.gate_mask(ctx),
+                              mode=self._mode,
+                              trim_fraction=self.trim_fraction,
+                              impl=self.impl)
+
+
+@register(AGGREGATORS, "trimmed_mean_coord")
+class CoordTrimmedMean(_CoordRobust):
+    """Coordinate-wise beta-trimmed mean [Yin et al., ICML'18]."""
+
+    _mode = "trimmed_mean"
+
+
+@register(AGGREGATORS, "median_coord")
+class CoordMedian(_CoordRobust):
+    """Coordinate-wise median [Yin et al., ICML'18]."""
+
+    _mode = "median"
 
 
 @register(AGGREGATORS, "uniform")

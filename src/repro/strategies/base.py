@@ -47,11 +47,15 @@ class RoundContext(NamedTuple):
     round_idx: jnp.ndarray             # scalar i32
     key: jnp.ndarray                   # per-round PRNG key for the strategy
     # [N, D] float32 flattened client updates (trained - global), present
-    # only when the resolved aggregator sets ``needs_updates``.
+    # only when the resolved aggregator sets ``needs_updates`` or defines
+    # ``combine`` (the engine materialises the matrix at most once).
     updates: Optional[jnp.ndarray] = None
     # () -> [N] accuracies of every client model on the *server's* held-out
     # set; present only when the aggregator sets ``needs_server_eval``.
     server_eval: Optional[Callable[[], jnp.ndarray]] = None
+    # [N] 0/1 participation mask when FedConfig.participation < 1 samples
+    # a client subset this round; None means everyone participates.
+    participation: Optional[jnp.ndarray] = None
 
     @property
     def num_users(self) -> int:
@@ -127,22 +131,37 @@ def register(registry: Registry, name: str) -> Callable:
 
 
 class Aggregator:
-    """Turns a :class:`RoundContext` into aggregation weights.
+    """Turns a :class:`RoundContext` into an aggregated model update.
 
-    ``weights(ctx)`` must return a ``[N]`` simplex vector (non-negative,
-    sums to 1) — the fused weighted-sum aggregation (the Pallas
-    ``weighted_aggregate`` kernel on TPU) consumes it unchanged, so every
-    aggregator keeps the one-jitted-round property for free.
+    Two aggregation fast paths, both one fused jitted program:
+
+    * **weights path** (default): ``weights(ctx)`` returns a ``[N]``
+      simplex vector (non-negative, sums to 1) — the fused weighted-sum
+      aggregation (the Pallas ``weighted_aggregate`` kernel on TPU)
+      consumes it unchanged.
+    * **combine path**: aggregators that cannot be expressed as a weighted
+      sum (per-coordinate trimmed mean / median) override
+      ``combine(ctx, updates)`` — ``updates`` is the ``[N, D]`` float32
+      matrix of flattened client updates and the return value is the
+      ``[D]`` combined update, applied as ``global + unflatten(combined)``
+      (the Pallas ``robust_combine`` kernel on TPU). ``combine`` left as
+      ``None`` keeps the weights path. Combine aggregators must still
+      implement ``weights`` (the engine uses it only for reporting, e.g.
+      the ``malicious_weight`` metric — typically the normalised client
+      gate mask).
 
     ``update_scores(ctx)`` lets stateful schemes (FedTest's moving
     average) evolve the ``ScoreState`` carried in the round state; the
     engine calls it first and hands the *updated* scores back via
-    ``ctx.scores`` before calling ``weights``.
+    ``ctx.scores`` before calling ``weights`` / ``combine``.
     """
 
     name = "base"
     needs_updates = False       # engine materialises ctx.updates [N, D]
     needs_server_eval = False   # engine binds ctx.server_eval closure
+    # optional hook: (ctx, updates [N, D]) -> [D] combined update; a
+    # non-None value routes the round through the combine fast path.
+    combine = None
 
     def update_scores(self, ctx: RoundContext):
         return ctx.scores
@@ -152,6 +171,16 @@ class Aggregator:
 
     def __repr__(self) -> str:
         return f"<aggregator {self.name}>"
+
+
+def uses_combine(aggregator: "Aggregator") -> bool:
+    """True when ``aggregator`` routes through the combine fast path.
+
+    The one place the ``combine is None`` convention is inspected — both
+    round engines (single-host and pod) call this, so the two paths
+    cannot drift on what counts as a combine aggregator.
+    """
+    return getattr(aggregator, "combine", None) is not None
 
 
 class Attack:

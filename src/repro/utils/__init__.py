@@ -4,6 +4,7 @@ from repro.utils.pytree import (
     tree_zeros_like,
     tree_weighted_sum,
     tree_add,
+    tree_add_vector,
     tree_scale,
     tree_l2_norm,
     tree_cast,
@@ -16,6 +17,7 @@ __all__ = [
     "tree_zeros_like",
     "tree_weighted_sum",
     "tree_add",
+    "tree_add_vector",
     "tree_scale",
     "tree_l2_norm",
     "tree_cast",

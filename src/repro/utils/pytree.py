@@ -49,6 +49,23 @@ def tree_weighted_sum(trees: Sequence[Pytree], weights) -> Pytree:
     return jax.tree_util.tree_map(_comb, stacked)
 
 
+def tree_add_vector(tree: Pytree, vec: jnp.ndarray) -> Pytree:
+    """``tree + unflatten(vec)``: scatter a flat [D] update onto leaves.
+
+    ``vec`` follows ``tree_leaves`` order with each leaf flattened — the
+    layout produced by the round engine's ``[N, D]`` update matrix — so
+    this is the inverse of that flattening, fused with the add. Offsets
+    are static, so the split is free under jit.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for leaf in leaves:
+        part = vec[off:off + leaf.size].reshape(leaf.shape)
+        out.append((leaf.astype(jnp.float32) + part).astype(leaf.dtype))
+        off += leaf.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def tree_l2_norm(tree: Pytree):
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree_util.tree_leaves(tree)]

@@ -80,6 +80,15 @@ print(json.dumps({"max_w_err": max_w_err, "leaf_err": leaf_err,
 """
 
 
+def test_pod_path_rejects_participation_sampling():
+    """Client sampling is single-host-only; the pod path must refuse the
+    config loudly instead of silently training everyone."""
+    from repro.config import FedConfig
+    from repro.core.distributed import _resolve_aggregator
+    with pytest.raises(ValueError, match="participation"):
+        _resolve_aggregator(FedConfig(participation=0.5), None)
+
+
 @pytest.mark.slow
 def test_distributed_round_matches_allgather_and_trains(tmp_path):
     env = dict(os.environ)

