@@ -5,7 +5,9 @@ hyper-parameters, citing its source. ``get_config(arch_id)`` resolves the
 CLI ``--arch`` id (dashes allowed) to the config.
 """
 from repro.configs.registry import ARCH_IDS, get_config, list_configs
-from repro.configs.scenarios import SCENARIOS, get_scenario, list_scenarios
+from repro.configs.scenarios import (
+    SCENARIOS, get_scenario, list_scenarios, scenario_for_pod)
 
 __all__ = ["get_config", "list_configs", "ARCH_IDS",
-           "get_scenario", "list_scenarios", "SCENARIOS"]
+           "get_scenario", "list_scenarios", "scenario_for_pod",
+           "SCENARIOS"]

@@ -3,10 +3,15 @@
 A scenario is a fully-specified :class:`FedConfig` — the strategy
 registry's analogue of the arch registry. ``--scenario`` in
 ``repro.launch.train`` resolves these by name; individual CLI flags still
-override single fields on top of the preset.
+override single fields on top of the preset. The pod driver
+(``repro.launch.federated``) resolves the same presets through
+:func:`scenario_for_pod`, which refits the client-count-dependent fields
+to the device count, so every scenario runs on either engine
+(EXPERIMENTS.md §Scenarios).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
 from repro.config import FedConfig
@@ -51,6 +56,11 @@ SCENARIOS: Dict[str, FedConfig] = {
     "partial_participation": FedConfig(
         num_users=20, num_testers=5, num_malicious=3,
         attack="random_weights", participation=0.5, rounds=60),
+    # the combined adversarial + sampling setting both engines must agree
+    # on (the pod parity test's configuration, EXPERIMENTS.md §Scenarios)
+    "sign_flip_partial_participation": FedConfig(
+        num_users=20, num_testers=5, num_malicious=1, attack="sign_flip",
+        participation=0.75, rounds=60),
 }
 
 
@@ -63,3 +73,21 @@ def get_scenario(name: str) -> FedConfig:
 
 def list_scenarios() -> List[str]:
     return sorted(SCENARIOS)
+
+
+def scenario_for_pod(name: str, num_clients: int) -> FedConfig:
+    """Refit a named preset onto a pod with ``num_clients`` devices.
+
+    The pod path pins one client per device along the ``clients`` mesh
+    axis, so ``num_users`` must equal the device count; the tester count
+    and malicious count are clamped to stay valid at that size (a 20-user
+    preset with 3 attackers becomes 3 attackers on 8 devices, 1 on 2).
+    Every other knob — aggregator, attack, scales, participation,
+    selector — carries over unchanged, so the scenario means the same
+    thing on either engine.
+    """
+    fed = get_scenario(name)
+    return dataclasses.replace(
+        fed, num_users=num_clients,
+        num_testers=min(fed.num_testers, num_clients),
+        num_malicious=min(fed.num_malicious, max(num_clients - 1, 0)))

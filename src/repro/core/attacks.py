@@ -10,9 +10,17 @@ handled in the round engine.
 clients are the *last M* client slots (a fixed, known set for evaluation —
 the defence, of course, does not use this knowledge).
 
-The round engine goes through ``repro.strategies.ATTACKS``, which wraps
+Both round engines go through ``repro.strategies.ATTACKS``, which wraps
 the per-client corruption primitives below and supports arbitrary
 placement of the malicious set; this module stays the primitive layer.
+The single-host engine applies them across the stacked ``[N, ...]``
+client axis (``Attack.apply``); the pod path applies the same primitives
+per shard_map shard, each device corrupting its own trained params before
+the ring / all-gather exchange (``Attack.apply_local``, DESIGN.md §3) —
+so a given key-free (attack, placement, scale) corrupts identically on
+either engine; key-consuming attacks (``random_weights``) draw from
+engine-specific key schedules, so their corruptions agree in
+distribution but not bitwise.
 """
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
 """The FedTest round engine (Algorithm 1).
 
-One fused, jitted round:
+One fused, jitted round (the step numbering below is the one DESIGN.md §2
+documents and the pod path in :mod:`repro.core.distributed` mirrors):
 
   1.  broadcast the global model to all N users            (line 15 of prev round)
   2.  every user runs ``local_steps`` optimizer steps on its own shard (line 5)
@@ -45,6 +46,34 @@ class RoundState(NamedTuple):
     scores: ScoreState
     round_idx: jnp.ndarray
     key: jnp.ndarray
+
+
+def participation_mask(key, num_users: int, participation: float
+                       ) -> jnp.ndarray:
+    """Per-round Bernoulli client-sampling mask ``[N]`` (1 = sampled).
+
+    Falls back to everyone in the zero-participant corner so a round is
+    always well defined. Both engines (and the pod driver / parity tests)
+    share this one formula so the sampled subsets agree for equal keys.
+    """
+    bern = jax.random.bernoulli(key, participation, (num_users,))
+    return jnp.where(jnp.any(bern), bern.astype(jnp.float32),
+                     jnp.ones((num_users,), jnp.float32))
+
+
+def renormalize_over_subset(weights: jnp.ndarray, part_mask: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Zero non-participants and renormalise the simplex over the subset.
+
+    If the sampled subset got zero total weight, fall back to uniform
+    over it. One formula, shared by both engines, so the sampled-subset
+    renormalisation cannot drift between them (the parity test pins the
+    resulting zero pattern and sums).
+    """
+    w = weights * part_mask
+    total = jnp.sum(w)
+    return jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
+                     part_mask / jnp.sum(part_mask))
 
 
 def aggregator_defaults(fed: FedConfig, use_trust: bool = False
@@ -158,16 +187,14 @@ class FederatedTrainer:
         k_agg = jax.random.fold_in(key, 5)
         k_part = jax.random.fold_in(key, 6)
 
-        # 0. client sampling (participation R/N < 1): Bernoulli per client,
-        # falling back to everyone in the zero-participant corner so the
-        # round is always well defined. Non-participants still train under
-        # vmap (uniform lockstep) but get exactly zero aggregation weight.
+        # 0. client sampling (participation R/N < 1): Bernoulli per client.
+        # Non-participants still train under vmap (uniform lockstep, SPMD
+        # cannot skip them) but send nothing: their slot reverts to the
+        # global model below and they get exactly zero aggregation weight.
         part_mask = None
         if fed.participation < 1.0:
-            bern = jax.random.bernoulli(k_part, fed.participation,
-                                        (fed.num_users,))
-            part_mask = jnp.where(jnp.any(bern), bern.astype(jnp.float32),
-                                  jnp.ones((fed.num_users,), jnp.float32))
+            part_mask = participation_mask(k_part, fed.num_users,
+                                           fed.participation)
 
         # 1-2. broadcast + vectorised local training
         stacked = jax.tree_util.tree_map(
@@ -180,6 +207,17 @@ class FederatedTrainer:
 
         # 3. adversaries act (strategy; malicious set can live anywhere)
         trained = self.attack.apply(k_attack, trained, state.global_params)
+
+        # 3b. non-participants transmit nothing this round: whoever
+        # evaluates their slot sees the stale global copy, exactly like
+        # the pod path's masked training scan (DESIGN.md §3) — attacked
+        # or not, an unsampled client's model never leaves the device.
+        if part_mask is not None:
+            trained = jax.tree_util.tree_map(
+                lambda t, g: jnp.where(
+                    part_mask.reshape((-1,) + (1,) * (t.ndim - 1)) > 0,
+                    t, g[None].astype(t.dtype)),
+                trained, state.global_params)
 
         # 4. selected testers measure accuracies on their own data
         tester_ids = self.selector.select(k_test, fed.num_users,
@@ -212,17 +250,14 @@ class FederatedTrainer:
                            scores=state.scores, counts=data.train.counts,
                            round_idx=state.round_idx, key=k_agg,
                            updates=updates, server_eval=server_eval,
-                           participation=part_mask)
+                           participation=part_mask,
+                           report_mask=(part_mask[tester_ids]
+                                        if part_mask is not None else None))
         scores = self.aggregator.update_scores(ctx)
         ctx = ctx._replace(scores=scores)
         weights = self.aggregator.weights(ctx)
         if part_mask is not None:
-            # non-participants keep exactly zero weight; if the sampled
-            # subset got zero total weight, fall back to uniform over it
-            w = weights * part_mask
-            total = jnp.sum(w)
-            weights = jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
-                                part_mask / jnp.sum(part_mask))
+            weights = renormalize_over_subset(weights, part_mask)
 
         # 7. aggregation -> new global model: score-weighted sum, or the
         # per-coordinate combine fast path when the aggregator defines it
@@ -236,8 +271,14 @@ class FederatedTrainer:
         # metric stays correct for any placement of the attackers.
         mal_w = (jnp.sum(weights * self._malicious_mask)
                  if self._malicious_idx else jnp.zeros(()))
+        # losses of non-participants are discarded work (their training
+        # never left the device) — the mean runs over the sampled subset,
+        # matching the pod round's masked psum
         metrics = {
-            "local_loss": jnp.mean(local_loss),
+            "local_loss": (jnp.sum(local_loss * part_mask)
+                           / jnp.maximum(jnp.sum(part_mask), 1)
+                           if part_mask is not None
+                           else jnp.mean(local_loss)),
             "acc_matrix_mean": jnp.mean(acc),
             "weights": weights,
             "malicious_weight": mal_w,

@@ -34,34 +34,63 @@ def init_scores(num_users: int) -> ScoreState:
 
 def combine_tester_reports(acc_matrix: jnp.ndarray,
                            tester_ids: jnp.ndarray,
-                           trust: Optional[jnp.ndarray] = None
+                           trust: Optional[jnp.ndarray] = None,
+                           row_mask: Optional[jnp.ndarray] = None
                            ) -> jnp.ndarray:
     """acc_matrix [K, N] (accuracy of client c measured by tester k) ->
-    per-client accuracy [N]. Optionally trust-weighted (Sec. V-C)."""
-    if trust is None:
+    per-client accuracy [N]. Optionally trust-weighted (Sec. V-C).
+
+    ``row_mask`` [K] zeroes reports from testers that did not participate
+    this round (client sampling): the mean runs over the reporting subset
+    only — the single-host analogue of the pod path's participation-masked
+    tester ``psum`` — and degrades to all-zero accuracies when nobody
+    reported (matching the pod's ``0 / max(k, 1)`` convention)."""
+    if trust is None and row_mask is None:
         return jnp.mean(acc_matrix, axis=0)
-    w = trust[tester_ids]
-    w = w / jnp.maximum(w.sum(), 1e-9)
-    return jnp.einsum("k,kn->n", w, acc_matrix)
+    k = acc_matrix.shape[0]
+    w = jnp.ones((k,), jnp.float32) if trust is None else trust[tester_ids]
+    if row_mask is not None:
+        w = w * row_mask
+    total = jnp.sum(w)
+    combined = jnp.einsum("k,kn->n", w / jnp.maximum(total, 1e-9),
+                          acc_matrix)
+    return jnp.where(total > 0.0, combined, jnp.zeros_like(combined))
 
 
 def update_tester_trust(state: ScoreState, acc_matrix: jnp.ndarray,
                         tester_ids: jnp.ndarray,
-                        decay: float = 0.8) -> ScoreState:
+                        decay: float = 0.8,
+                        row_mask: Optional[jnp.ndarray] = None
+                        ) -> ScoreState:
     """Research direction V-C: testers whose reports deviate from the
-    consensus median lose trust, so lying testers get down-weighted."""
-    median = jnp.median(acc_matrix, axis=0)                 # [N]
+    consensus median lose trust, so lying testers get down-weighted.
+
+    ``row_mask`` [K] excludes non-reporting testers (client sampling)
+    from both the consensus median and the trust update — a report that
+    was never sent can neither shift the consensus nor move its sender's
+    trust."""
+    if row_mask is None:
+        median = jnp.median(acc_matrix, axis=0)             # [N]
+    else:
+        median = jnp.nanmedian(
+            jnp.where(row_mask[:, None] > 0, acc_matrix, jnp.nan), axis=0)
     dev = jnp.mean(jnp.abs(acc_matrix - median[None, :]), axis=1)  # [K]
     agreement = jnp.exp(-4.0 * dev)
-    new_trust = state.tester_trust.at[tester_ids].set(
-        decay * state.tester_trust[tester_ids] + (1 - decay) * agreement)
+    updated = (decay * state.tester_trust[tester_ids]
+               + (1 - decay) * agreement)
+    if row_mask is not None:
+        updated = jnp.where(row_mask > 0, updated,
+                            state.tester_trust[tester_ids])
+    new_trust = state.tester_trust.at[tester_ids].set(updated)
     return state._replace(tester_trust=new_trust)
 
 
 def update_scores(state: ScoreState, acc_matrix: jnp.ndarray,
                   tester_ids: jnp.ndarray, *, power: float = 4.0,
                   decay: float = 0.5, use_trust: bool = False,
-                  power_warmup_rounds: int = 2) -> ScoreState:
+                  power_warmup_rounds: int = 2,
+                  row_mask: Optional[jnp.ndarray] = None,
+                  client_mask: Optional[jnp.ndarray] = None) -> ScoreState:
     """One round of Algorithm 1 line 13: ``FL server calculates the scores``.
 
     ``power_warmup_rounds``: rounds scored with exponent 1 before switching
@@ -71,16 +100,26 @@ def update_scores(state: ScoreState, acc_matrix: jnp.ndarray,
     federation into a degenerate fixed point (observed on the MNIST-like
     set; EXPERIMENTS.md §Paper-validation). The paper itself proposes
     treating the exponent as "a variable, subject to periodic adjustments"
-    (Sec. V-B); this is the minimal such schedule."""
+    (Sec. V-B); this is the minimal such schedule.
+
+    ``client_mask`` [N] freezes the moving average of unmasked clients:
+    under client sampling a non-participant transmits nothing, so what the
+    testers measured in its slot is the stale global copy — no evidence
+    about the client itself. Its score carries over unchanged (in
+    particular, a suppressed attacker stays suppressed while it sits
+    out). Both engines pass the round's participation mask here."""
     acc = combine_tester_reports(
         acc_matrix, tester_ids,
-        trust=state.tester_trust if use_trust else None)
+        trust=state.tester_trust if use_trust else None,
+        row_mask=row_mask)
     eff_power = jnp.where(state.rounds_seen < power_warmup_rounds,
                           1.0, power)
     powered = jnp.clip(acc, 0.0, 1.0) ** eff_power
     first = state.rounds_seen == 0
     new = jnp.where(first, powered,
                     decay * state.scores + (1.0 - decay) * powered)
+    if client_mask is not None:
+        new = jnp.where(client_mask > 0, new, state.scores)
     return state._replace(scores=new, rounds_seen=state.rounds_seen + 1)
 
 

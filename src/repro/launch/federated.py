@@ -2,41 +2,78 @@
 per device along the ``clients`` mesh axis.
 
 This is the datacenter deployment path of DESIGN.md §3 (the single-host
-``launch/train.py`` engine is the simulation path). On real hardware the
-mesh axis maps onto TPU chips; in this container it runs on host-platform
-placeholder devices:
+``launch/train.py`` engine is the simulation path). The full adversarial
+scenario matrix runs here: ``--attack`` / ``--malicious`` /
+``--attack-scale`` resolve against the ``ATTACKS`` registry (corruption
+happens per device, before the model exchange) and ``--participation``
+samples a client subset per round. On real hardware the mesh axis maps
+onto TPU chips; in this container it runs on host-platform placeholder
+devices:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m repro.launch.federated --clients 8 --rounds 4 \\
-      --exchange ring
+      --exchange ring --attack sign_flip --malicious 1 \\
+      --participation 0.75
+
+Named presets from ``repro.configs.scenarios`` run on the pod too —
+``--scenario`` refits the preset to the device count
+(``scenario_for_pod``); explicitly passed flags still override preset
+fields, mirroring ``repro.launch.train``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
 
 import numpy as np
 
+# FedConfig fields the CLI leaves unset fall back to these (argparse
+# defaults are None so --scenario can tell "explicitly passed" apart)
+_FED_CLI_DEFAULTS = dict(
+    num_malicious=0, attack="none", attack_kwargs={}, attack_scale=1.0,
+    aggregator="fedtest", selector="rotating", participation=1.0,
+    local_steps=6)
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=4)
-    ap.add_argument("--local-steps", type=int, default=6)
+    ap.add_argument("--local-steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--exchange", default="ring",
                     choices=["ring", "allgather"],
-                    help="cross-testing model exchange schedule")
-    ap.add_argument("--aggregator", default="fedtest",
+                    help="cross-testing model exchange schedule "
+                         "(EXPERIMENTS.md §Perf compares the two)")
+    ap.add_argument("--scenario", default=None,
+                    help="named FedConfig preset (repro.configs."
+                         "scenarios), refitted to --clients devices; "
+                         "explicit flags override preset fields")
+    ap.add_argument("--aggregator", default=None,
                     help="repro.strategies.AGGREGATORS name (krum / "
                          "trimmed_mean / median all-gather flat updates; "
                          "trimmed_mean_coord / median_coord additionally "
                          "combine() them per-coordinate on the gathered "
                          "matrix, replicated across the pod)")
-    ap.add_argument("--selector", default="rotating",
+    ap.add_argument("--attack", default=None,
+                    help="repro.strategies.ATTACKS name; corruption runs "
+                         "per device before the model exchange")
+    ap.add_argument("--malicious", type=int, default=None,
+                    help="number of malicious clients (placement via "
+                         "--attack-kwargs)")
+    ap.add_argument("--attack-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the attack ctor, e.g. "
+                         '\'{"placement": "first"}\'')
+    ap.add_argument("--attack-scale", type=float, default=None)
+    ap.add_argument("--participation", type=float, default=None,
+                    help="per-round Bernoulli client-sampling fraction "
+                         "R/N; non-sampled clients train nothing, report "
+                         "nothing and get zero aggregation weight")
+    ap.add_argument("--selector", default=None,
                     help="repro.strategies.SELECTORS name for the per-"
                          "round tester mask")
     ap.add_argument("--testers", type=int, default=None,
@@ -59,9 +96,10 @@ def main():
     from jax.sharding import Mesh
 
     from repro.config import FedConfig, TrainConfig
-    from repro.configs import get_config
+    from repro.configs import get_config, scenario_for_pod
     from repro.core.distributed import (
         make_allgather_round, make_distributed_round)
+    from repro.core.round import participation_mask
     from repro.core.scoring import init_scores
     from repro.data import (CIFAR_LIKE, MNIST_LIKE,
                             make_federated_image_dataset,
@@ -78,10 +116,22 @@ def main():
             else "fedtest-cnn")
     cfg = get_config(arch).replace(cnn_channels=(8, 16, 16), cnn_hidden=32)
     model = build_model(cfg)
-    K = args.testers or N
-    fed = FedConfig(num_users=N, num_testers=K, num_malicious=0,
-                    aggregator=args.aggregator, selector=args.selector,
-                    local_steps=args.local_steps)
+
+    passed = dict(num_testers=args.testers, num_malicious=args.malicious,
+                  local_steps=args.local_steps,
+                  aggregator=args.aggregator,
+                  attack=args.attack, attack_kwargs=args.attack_kwargs,
+                  attack_scale=args.attack_scale,
+                  participation=args.participation,
+                  selector=args.selector, seed=args.seed)
+    passed = {f: v for f, v in passed.items() if v is not None}
+    if args.scenario:
+        # preset refitted to the device count; explicit flags override
+        fed = dataclasses.replace(scenario_for_pod(args.scenario, N),
+                                  **passed)
+    else:
+        defaults = dict(_FED_CLI_DEFAULTS, num_testers=N)
+        fed = FedConfig(num_users=N, **{**defaults, **passed})
     tc = TrainConfig(optimizer="sgd", lr=args.lr, schedule="constant",
                      batch_size=args.batch, grad_clip=0.0, remat=False)
     spec = MNIST_LIKE if args.dataset == "mnist_like" else CIFAR_LIKE
@@ -91,7 +141,9 @@ def main():
     make = (make_distributed_round if args.exchange == "ring"
             else make_allgather_round)
     round_fn = jax.jit(make(model, fed, tc, mesh,
-                            counts=data.train.counts))
+                            counts=data.train.counts,
+                            server_data=(data.server_x[:256],
+                                         data.server_y[:256])))
     from repro.strategies import SELECTORS
     selector = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
 
@@ -99,28 +151,48 @@ def main():
     scores = init_scores(N)
     tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
 
-    history = {"round": [], "acc": [], "local_loss": []}
+    history = {"round": [], "acc": [], "local_loss": [],
+               "malicious_weight": [], "participation_rate": []}
     t0 = time.time()
     for r in range(args.rounds):
         tester_ids = selector.select(
             jax.random.fold_in(jax.random.PRNGKey(args.seed + 2), r),
-            N, K, r)
+            N, fed.num_testers, r)
         mask = jnp.zeros((N,), jnp.float32).at[tester_ids].set(1.0)
+        if fed.participation < 1.0:
+            pmask = participation_mask(
+                jax.random.fold_in(jax.random.PRNGKey(args.seed + 3), r),
+                N, fed.participation)
+        else:
+            pmask = jnp.ones((N,), jnp.float32)
         bx, by = sample_client_batches(
             jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), r),
             data.train, fed.local_steps, tc.batch_size)
         params, scores, metrics = round_fn(params, scores, bx, by, tx, ty,
-                                           mask)
+                                           mask, pmask)
         logits, _ = model.forward_train(params,
                                         {"images": data.global_x[:400]})
         acc = float((jnp.argmax(logits, -1) == data.global_y[:400]).mean())
         history["round"].append(r + 1)
         history["acc"].append(acc)
         history["local_loss"].append(float(metrics["local_loss"]))
+        history["malicious_weight"].append(
+            float(metrics["malicious_weight"]))
+        history["participation_rate"].append(
+            float(metrics["participation_rate"]))
         print(f"round {r + 1}: global_acc={acc:.4f} "
               f"local_loss={float(metrics['local_loss']):.4f} "
+              f"mal_w={float(metrics['malicious_weight']):.4f} "
+              f"part={float(metrics['participation_rate']):.2f} "
               f"({args.exchange} exchange)", flush=True)
     history["wall_s"] = time.time() - t0
+    history["config"] = {"clients": N, "aggregator": fed.aggregator,
+                         "attack": fed.attack,
+                         "malicious": fed.num_malicious,
+                         "attack_scale": fed.attack_scale,
+                         "participation": fed.participation,
+                         "scenario": args.scenario,
+                         "exchange": args.exchange}
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out,

@@ -37,7 +37,11 @@ with the update-space defence.
 
 The robust baselines operate on ``ctx.updates`` — the ``[N, D]`` float32
 matrix of flattened client updates — which the engine materialises only
-when ``needs_updates`` is set (or ``combine`` is defined).
+when ``needs_updates`` is set (or ``combine`` is defined). Under client
+sampling every one of them confines its statistic to the sampled subset
+(``ctx.participation``): a non-participant's slot holds the reverted
+stale-global update — an all-zero row whose mutual distance of 0 would
+otherwise *win* Krum and drag the median toward the origin.
 """
 from __future__ import annotations
 
@@ -75,12 +79,15 @@ class FedTest(Aggregator):
         scores = ctx.scores
         if self.use_trust:
             scores = update_tester_trust(scores, ctx.acc_matrix,
-                                         ctx.tester_ids)
+                                         ctx.tester_ids,
+                                         row_mask=ctx.report_mask)
         return update_scores(scores, ctx.acc_matrix, ctx.tester_ids,
                              power=self.score_power,
                              decay=self.score_decay,
                              use_trust=self.use_trust,
-                             power_warmup_rounds=self.power_warmup_rounds)
+                             power_warmup_rounds=self.power_warmup_rounds,
+                             row_mask=ctx.report_mask,
+                             client_mask=ctx.participation)
 
     def weights(self, ctx: RoundContext) -> jnp.ndarray:
         return score_weights(ctx.scores)
@@ -120,14 +127,34 @@ def _pairwise_sq_dists(u: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(d2, 0.0)
 
 
-def _krum_scores(u: jnp.ndarray, num_byzantine: int) -> jnp.ndarray:
-    """Krum score per client: sum of sq-dists to its n-f-2 nearest peers."""
+# non-participant exclusion distance: finite (inf would poison the
+# neighbour sums when k exceeds the sampled-subset size) but far above
+# any real update distance, so excluded pairs are always ranked last
+_FAR = 1e12
+
+
+def _krum_scores(u: jnp.ndarray, num_byzantine: int,
+                 part=None) -> jnp.ndarray:
+    """Krum score per client: sum of sq-dists to its n-f-2 nearest peers.
+
+    ``part`` [N] excludes non-participants (client sampling): their slot
+    holds a reverted stale-global update (a zero row — mutual distance 0,
+    which would otherwise *win* Krum), so pairs touching a non-participant
+    are pushed beyond any honest distance and non-participants' own
+    scores are +inf, keeping the selection inside the sampled subset.
+    """
     n = u.shape[0]
     d2 = _pairwise_sq_dists(u)
-    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)   # exclude self
+    d2 = jnp.where(jnp.eye(n, dtype=bool), _FAR, d2)      # exclude self
+    if part is not None:
+        excl = (part[:, None] <= 0) | (part[None, :] <= 0)
+        d2 = jnp.where(excl, _FAR, d2)
     k = max(1, min(n - 1, n - num_byzantine - 2))
     nearest = -jax.lax.top_k(-d2, k)[0]     # [N, k] smallest per row
-    return jnp.sum(nearest, axis=1)
+    scores = jnp.sum(nearest, axis=1)
+    if part is not None:
+        scores = jnp.where(part > 0, scores, jnp.inf)
+    return scores
 
 
 @register(AGGREGATORS, "krum")
@@ -147,11 +174,14 @@ class Krum(Aggregator):
         self.multi = max(1, int(multi))
 
     def weights(self, ctx: RoundContext) -> jnp.ndarray:
-        scores = _krum_scores(ctx.updates, self.num_byzantine)
+        scores = _krum_scores(ctx.updates, self.num_byzantine,
+                              part=ctx.participation)
         n = scores.shape[0]
         m = min(self.multi, n)
         _, best = jax.lax.top_k(-scores, m)
         mask = jnp.zeros((n,), jnp.float32).at[best].set(1.0)
+        if ctx.participation is not None:
+            mask = mask * ctx.participation
         return _mask_to_simplex(mask)
 
 
@@ -175,11 +205,22 @@ class TrimmedMean(Aggregator):
     def weights(self, ctx: RoundContext) -> jnp.ndarray:
         u = ctx.updates
         n = u.shape[0]
-        med = jnp.median(u, axis=0)
+        part = ctx.participation
+        if part is None:
+            med = jnp.median(u, axis=0)
+        else:
+            # consensus over the sampled subset only: non-participants'
+            # slots are reverted zero rows that would drag the median
+            med = jnp.nanmedian(
+                jnp.where(part[:, None] > 0, u, jnp.nan), axis=0)
         dist = jnp.linalg.norm(u - med[None, :], axis=1)
+        if part is not None:
+            dist = jnp.where(part > 0, dist, jnp.inf)
         keep = max(1, n - int(round(self.trim_fraction * n)))
         _, kept = jax.lax.top_k(-dist, keep)
         mask = jnp.zeros((n,), jnp.float32).at[kept].set(1.0)
+        if part is not None:
+            mask = mask * part
         return _mask_to_simplex(mask)
 
 
@@ -202,11 +243,15 @@ class GeometricMedian(Aggregator):
     def weights(self, ctx: RoundContext) -> jnp.ndarray:
         u = ctx.updates
         n = u.shape[0]
-        w = _uniform(n)
+        # the fixed point runs over the sampled subset: non-participants'
+        # reverted zero rows would pull the median toward the origin
+        gate = (jnp.ones((n,), jnp.float32) if ctx.participation is None
+                else ctx.participation)
+        w = gate / jnp.maximum(gate.sum(), 1e-9)
         for _ in range(self.iters):
             mu = w @ u
             dist = jnp.linalg.norm(u - mu[None, :], axis=1)
-            w = 1.0 / (dist + self.eps)
+            w = gate / (dist + self.eps)
             w = w / jnp.maximum(w.sum(), 1e-12)
         return w
 
@@ -251,7 +296,9 @@ class _CoordRobust(Aggregator):
         return update_scores(ctx.scores, ctx.acc_matrix, ctx.tester_ids,
                              power=self.score_power,
                              decay=self.score_decay,
-                             power_warmup_rounds=self.power_warmup_rounds)
+                             power_warmup_rounds=self.power_warmup_rounds,
+                             row_mask=ctx.report_mask,
+                             client_mask=ctx.participation)
 
     def gate_mask(self, ctx: RoundContext) -> jnp.ndarray:
         mask = jnp.ones((ctx.num_users,), jnp.float32)

@@ -56,6 +56,13 @@ class RoundContext(NamedTuple):
     # [N] 0/1 participation mask when FedConfig.participation < 1 samples
     # a client subset this round; None means everyone participates.
     participation: Optional[jnp.ndarray] = None
+    # [K] 0/1 mask over the *rows* of ``acc_matrix``: which of this
+    # round's testers actually reported (non-sampled testers transmit
+    # nothing). The single-host engine sets it to
+    # ``participation[tester_ids]``; the pod path leaves it ``None``
+    # because its tester ``psum`` is already participation-masked before
+    # the context is built (DESIGN.md §3).
+    report_mask: Optional[jnp.ndarray] = None
 
     @property
     def num_users(self) -> int:
@@ -257,6 +264,29 @@ class Attack:
             return stack
 
         return jax.tree_util.tree_map(merge, stacked_params, *bad)
+
+    def apply_local(self, key, params, global_params, client_idx,
+                    num_users: int):
+        """Per-shard attack application — the pod path's step 3.
+
+        ``params`` is ONE client's pytree (no stacked client axis, the
+        layout inside a ``shard_map`` body) and ``client_idx`` the traced
+        mesh position along the clients axis. The malicious set is still
+        the static ``malicious_indices`` placement, but *which device* is
+        malicious is only known as a traced index under SPMD, so the
+        corrupted model is computed unconditionally and selected with
+        ``where`` — honest devices pay one corruption's worth of (cheap,
+        elementwise) compute and keep their trained params bit-exactly.
+        """
+        idx = self.malicious_indices(num_users)
+        if not idx:
+            return params
+        import jax
+        is_mal = self.malicious_mask(num_users)[client_idx] > 0
+        bad = self.corrupt(key, params, global_params)
+        return jax.tree_util.tree_map(
+            lambda t, b: jnp.where(is_mal, b.astype(t.dtype), t),
+            params, bad)
 
     def __repr__(self) -> str:
         return (f"<attack {self.name} m={self.num_malicious} "

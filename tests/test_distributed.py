@@ -31,7 +31,8 @@ mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
 cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
                                               cnn_hidden=16)
 model = build_model(cfg)
-fed = FedConfig(num_users=N, num_testers=N, num_malicious=0, local_steps=6)
+fed = FedConfig(num_users=N, num_testers=N, num_malicious=0, attack="none",
+                local_steps=6)
 tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
                  batch_size=8, grad_clip=0.0, remat=False)
 data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
@@ -47,11 +48,12 @@ bx, by = sample_client_batches(jax.random.PRNGKey(1), data.train,
 tx = data.test.xs[:, :64]
 ty = data.test.ys[:, :64]
 mask = jnp.ones((N,), jnp.float32)
+pmask = jnp.ones((N,), jnp.float32)
 
 new_global, new_scores, metrics = jax.jit(round_fn)(
-    params, scores, bx, by, tx, ty, mask)
+    params, scores, bx, by, tx, ty, mask, pmask)
 ag_global, ag_scores, ag_metrics = jax.jit(ag_round_fn)(
-    params, scores, bx, by, tx, ty, mask)
+    params, scores, bx, by, tx, ty, mask, pmask)
 
 # ring and all-gather paths must agree exactly (same math, diff schedule)
 ring_w = np.asarray(metrics["weights"])
@@ -70,27 +72,106 @@ s = new_scores
 for r in range(2, 7):
     bx, by = sample_client_batches(jax.random.PRNGKey(r), data.train,
                                    fed.local_steps, tc.batch_size)
-    g, s, metrics = jax.jit(round_fn)(g, s, bx, by, tx, ty, mask)
+    g, s, metrics = jax.jit(round_fn)(g, s, bx, by, tx, ty, mask, pmask)
 
 logits, _ = model.forward_train(g, {"images": data.global_x[:256]})
 acc = float((jnp.argmax(logits, -1) == data.global_y[:256]).mean())
 
+# --- adversarial pod round: a sign_flip attacker must be suppressed ----
+# milder skew so the accuracy matrix separates honest from malicious
+# (the ROADMAP-diagnosed remedy from the single-host dynamics tests)
+adv_data = make_federated_image_dataset(
+    MNIST_LIKE, N, num_samples=1600, global_test=200, seed=0,
+    partition_kwargs={"min_classes": 8, "max_classes": 10})
+adv_fed = FedConfig(num_users=N, num_testers=N, num_malicious=1,
+                    attack="sign_flip", attack_scale=4.0, local_steps=6)
+adv_round = jax.jit(make_distributed_round(model, adv_fed, tc, mesh,
+                                           counts=adv_data.train.counts))
+g = model.init(jax.random.PRNGKey(0))
+s = init_scores(N)
+atx = adv_data.test.xs[:, :64]
+aty = adv_data.test.ys[:, :64]
+mal_w = []
+for r in range(8):
+    bx, by = sample_client_batches(jax.random.PRNGKey(100 + r),
+                                   adv_data.train, adv_fed.local_steps,
+                                   tc.batch_size)
+    g, s, m = adv_round(g, s, bx, by, atx, aty, mask, pmask)
+    mal_w.append(float(m["malicious_weight"]))
+
 print(json.dumps({"max_w_err": max_w_err, "leaf_err": leaf_err,
-                  "weights_sum": float(ring_w.sum()), "acc": acc}))
+                  "weights_sum": float(ring_w.sum()), "acc": acc,
+                  "mal_w": mal_w}))
 """
 
 
-def test_pod_path_rejects_participation_sampling():
-    """Client sampling is single-host-only; the pod path must refuse the
-    config loudly instead of silently training everyone."""
+def test_pod_path_accepts_participation_and_resolves_attacks():
+    """PR 3 removed the single-host-only guards: client sampling and any
+    registered attack now resolve on the pod path too."""
     from repro.config import FedConfig
-    from repro.core.distributed import _resolve_aggregator
-    with pytest.raises(ValueError, match="participation"):
-        _resolve_aggregator(FedConfig(participation=0.5), None)
+    from repro.core.distributed import _resolve_aggregator, _resolve_attack
+    agg = _resolve_aggregator(FedConfig(participation=0.5), None)
+    assert agg.name == "fedtest"
+    atk = _resolve_attack(FedConfig(attack="sign_flip", num_malicious=2,
+                                    num_users=8))
+    assert atk.name == "sign_flip"
+    assert atk.malicious_indices(8) == (6, 7)
+
+
+def test_pod_builder_requires_server_data_for_server_eval():
+    """Server-eval aggregators run on the pod only when the builder gets
+    the replicated server set to close over."""
+    import numpy as np
+    import pytest as _pytest
+    from repro.config import FedConfig, TrainConfig
+    from repro.configs import get_config
+    from repro.core.distributed import _make_pod_round
+    from repro.models import build_model
+
+    class FakeMesh:
+        shape = {"clients": 4}
+
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                                  cnn_hidden=16)
+    model = build_model(cfg)
+    fed = FedConfig(num_users=4, num_testers=4, aggregator="accuracy_based")
+    with _pytest.raises(ValueError, match="server"):
+        _make_pod_round(model, fed, TrainConfig(), FakeMesh(), "clients",
+                        None, None, None, "ring")
+
+
+def test_apply_local_matches_stacked_apply():
+    """Per-shard attack application selects exactly the stacked apply's
+    corruption for malicious slots and is the identity elsewhere."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.strategies import ATTACKS
+
+    atk = ATTACKS.build("sign_flip", {"placement": "first"},
+                        {"num_malicious": 2, "scale": 1.5})
+    g = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+         "b": jnp.ones((3,), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    trained = jax.tree_util.tree_map(
+        lambda x: x + 0.1 * jax.random.normal(key, x.shape), g)
+    n = 5
+    for c in range(n):
+        local = atk.apply_local(key, trained, g, jnp.asarray(c), n)
+        expect = atk.corrupt(key, trained, g) if c in (0, 1) else trained
+        for a, b in zip(jax.tree_util.tree_leaves(local),
+                        jax.tree_util.tree_leaves(expect)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+    none = ATTACKS.build("none", {}, {"num_malicious": 3})
+    local = none.apply_local(key, trained, g, jnp.asarray(0), n)
+    assert all((np.asarray(a) == np.asarray(b)).all() for a, b in
+               zip(jax.tree_util.tree_leaves(local),
+                   jax.tree_util.tree_leaves(trained)))
 
 
 @pytest.mark.slow
-def test_distributed_round_matches_allgather_and_trains(tmp_path):
+def test_distributed_round_matches_allgather_trains_and_suppresses(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
@@ -101,3 +182,7 @@ def test_distributed_round_matches_allgather_and_trains(tmp_path):
     assert out["leaf_err"] < 1e-4
     assert abs(out["weights_sum"] - 1.0) < 1e-4
     assert out["acc"] > 0.25
+    # the fedtest aggregator must squeeze the sign_flip attacker's weight
+    # below the paper's 5% bar once the score power kicks in
+    assert out["mal_w"][-1] < 0.05, out["mal_w"]
+    assert out["mal_w"][-1] < out["mal_w"][1]

@@ -1,0 +1,133 @@
+"""Single-host engine vs pod (shard_map) round parity.
+
+The tentpole contract of the adversarial pod path (DESIGN.md §3): under
+``sign_flip`` + ``participation=0.75`` both engines, driven by the same
+seeds, must produce matching malicious-weight suppression and matching
+sampled-subset renormalisation. The pod subprocess replays the
+single-host engine's exact per-round key schedule (``fold_in(state.key,
+round)`` then ``split(·, 4)`` / ``fold_in(·, 6)``) so both see identical
+batches, tester sets and participation masks; sign_flip is key-free, so
+the only remaining divergence is floating-point reassociation between the
+vmap'd stack and the per-device psum — hence tight-but-not-bitwise
+tolerances on the dynamics and a loose one on accuracy.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROUNDS = 8
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.core.distributed import make_distributed_round
+from repro.core.round import participation_mask
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset, \
+    sample_client_batches
+from repro.models import build_model
+from repro.strategies import SELECTORS
+
+N = 4
+ROUNDS = %(rounds)d
+cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                              cnn_hidden=16)
+model = build_model(cfg)
+fed = FedConfig(num_users=N, num_testers=N, num_malicious=1,
+                attack="sign_flip", attack_scale=4.0, participation=0.75,
+                local_steps=6, seed=0)
+tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                 batch_size=8, grad_clip=0.0, remat=False)
+data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
+                                    global_test=256, seed=0,
+                                    partition_kwargs={"min_classes": 8,
+                                                      "max_classes": 10})
+
+# ---- single-host engine -------------------------------------------------
+trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+state = trainer.init(jax.random.PRNGKey(0))
+host = {"w": [], "mal_w": [], "rate": []}
+for r in range(ROUNDS):
+    state, m = trainer.run_round(state, data)
+    host["w"].append(np.asarray(m["weights"]).tolist())
+    host["mal_w"].append(float(m["malicious_weight"]))
+    host["rate"].append(float(m["participation_rate"]))
+host_acc = trainer.global_accuracy(state, data, max_samples=256)
+
+# ---- pod engine, replaying the identical key schedule -------------------
+mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+round_fn = jax.jit(make_distributed_round(model, fed, tc, mesh,
+                                          counts=data.train.counts))
+selector = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
+
+pk, rk = jax.random.split(jax.random.PRNGKey(0))
+g = model.init(pk)                      # same init as trainer.init
+s = init_scores(N)
+tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
+pod = {"w": [], "mal_w": [], "rate": [], "pmask": []}
+for r in range(ROUNDS):
+    key = jax.random.fold_in(rk, r)     # _round's fold_in(state.key, idx)
+    k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
+    k_part = jax.random.fold_in(key, 6)
+    bx, by = sample_client_batches(k_batch, data.train, fed.local_steps,
+                                   tc.batch_size)
+    tester_ids = selector.select(k_test, N, fed.num_testers, r)
+    mask = jnp.zeros((N,), jnp.float32).at[tester_ids].set(1.0)
+    pmask = participation_mask(k_part, N, fed.participation)
+    g, s, m = round_fn(g, s, bx, by, tx, ty, mask, pmask)
+    pod["w"].append(np.asarray(m["weights"]).tolist())
+    pod["mal_w"].append(float(m["malicious_weight"]))
+    pod["rate"].append(float(m["participation_rate"]))
+    pod["pmask"].append(np.asarray(pmask).tolist())
+
+logits, _ = model.forward_train(g, {"images": data.global_x[:256]})
+pod_acc = float((jnp.argmax(logits, -1) == data.global_y[:256]).mean())
+
+print(json.dumps({"host": host, "pod": pod,
+                  "host_acc": host_acc, "pod_acc": pod_acc}))
+""" % {"rounds": ROUNDS}
+
+
+@pytest.mark.slow
+def test_pod_round_matches_single_host_under_attack_and_sampling():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    host, pod = out["host"], out["pod"]
+
+    for r in range(ROUNDS):
+        hw = np.asarray(host["w"][r])
+        pw = np.asarray(pod["w"][r])
+        pmask = np.asarray(pod["pmask"][r])
+        # identical sampled subsets (same participation_mask key schedule)
+        assert host["rate"][r] == pytest.approx(pod["rate"][r], abs=1e-6)
+        # sampled-subset renormalisation: non-participants get *exactly*
+        # zero weight on both engines, the rest renormalise to a simplex
+        np.testing.assert_array_equal(pw[pmask == 0.0], 0.0)
+        np.testing.assert_array_equal(hw[pmask == 0.0], 0.0)
+        assert abs(pw.sum() - 1.0) < 1e-4
+        assert abs(hw.sum() - 1.0) < 1e-4
+        # matching round dynamics (float reassociation only)
+        assert np.abs(pw - hw).max() < 0.08, (r, hw.tolist(), pw.tolist())
+        assert abs(host["mal_w"][r] - pod["mal_w"][r]) < 0.08, r
+
+    # matching malicious-weight suppression under the fedtest aggregator
+    assert host["mal_w"][-1] < 0.05, host["mal_w"]
+    assert pod["mal_w"][-1] < 0.05, pod["mal_w"]
+    # and the trained global models land at comparable accuracy
+    assert abs(out["host_acc"] - out["pod_acc"]) < 0.15, out

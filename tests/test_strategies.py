@@ -100,6 +100,29 @@ def test_every_registered_aggregator_returns_simplex_under_jit(name):
                                    err_msg=f"{name}: not a simplex")
 
 
+def test_update_aggregators_exclude_non_participants():
+    """Client sampling reverts non-participants' slots to the global
+    model, i.e. all-zero update rows. Zero rows have mutual distance 0 —
+    left unmasked they would *win* Krum and drag the trimmed-mean /
+    geometric-median consensus toward the origin. Every update-based
+    aggregator must confine its statistic to ctx.participation."""
+    n, d = 8, 16
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, (n, d)) + 3.0     # honest cluster, off-origin
+    part = jnp.asarray([1, 1, 0, 0, 1, 1, 1, 1], jnp.float32)
+    u = u * part[:, None]                        # reverted slots: zero rows
+    ctx = _synthetic_ctx(key, n)._replace(updates=u, participation=part)
+    for name in ("krum", "trimmed_mean", "median"):
+        agg = AGGREGATORS.build(name, defaults={"num_byzantine": 1})
+        w = np.asarray(agg.weights(ctx))
+        assert w[2] < 1e-6 and w[3] < 1e-6, (name, w)
+        assert w[np.asarray(part) > 0].sum() > 0.99, (name, w)
+    # krum in particular must not hand its one-hot to a zero row
+    krum_w = np.asarray(AGGREGATORS.build(
+        "krum", defaults={"num_byzantine": 1}).weights(ctx))
+    assert krum_w.argmax() not in (2, 3)
+
+
 # ------------------------------------------------------- attacks / placement
 def test_attack_placement_drives_malicious_mask():
     atk = ATTACKS.build("random_weights",

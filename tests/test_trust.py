@@ -43,6 +43,29 @@ def test_trust_weighted_reports_ignore_liar():
                                atol=1e-2)
 
 
+def test_trust_ignores_non_reporting_testers():
+    """Client sampling: a report that was never sent can neither shift
+    the consensus median nor move its sender's trust."""
+    n = 4
+    state = init_scores(n)
+    tester_ids = jnp.array([0, 1])
+    acc = jnp.array([[0.0, 1.0, 0.0, 1.0],    # tester 0 unsampled (noise)
+                     [0.8, 0.2, 0.5, 0.6]])   # tester 1 honest
+    row_mask = jnp.array([0.0, 1.0])
+    new = update_tester_trust(state, acc, tester_ids, row_mask=row_mask)
+    trust = np.asarray(new.tester_trust)
+    # unsampled tester's trust is frozen at its prior value...
+    assert trust[0] == pytest.approx(1.0)
+    # ...its wild row is out of the consensus, so the sole reporting
+    # tester agrees with itself perfectly
+    assert trust[1] > 0.99
+    # with no mask the phantom row drags the consensus midway and the
+    # honest tester would lose trust for a report it fully agreed with
+    unmasked = np.asarray(
+        update_tester_trust(state, acc, tester_ids).tester_trust)
+    assert unmasked[1] < trust[1] - 0.02
+
+
 def test_trust_scores_update_uses_trust():
     n = 3
     state = init_scores(n)._replace(

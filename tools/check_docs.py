@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs-consistency checker: no dangling cross-references.
+
+Scans ``src/``, ``tests/``, ``benchmarks/``, ``README.md`` and the
+top-level docs for references of the form
+
+    DESIGN.md §3            EXPERIMENTS.md §Perf
+    §Dry-run and §Roofline of EXPERIMENTS.md     (reversed order)
+    SOMEFILE.md             (bare file reference)
+
+and fails (exit 1) when a referenced ``.md`` file does not exist at the
+repo root, or a referenced ``§`` section has no matching heading. A
+section token resolves iff some heading line (``#``-prefixed) of the
+target file contains ``§<token>`` — e.g. ``## §3 · The pod mapping``
+resolves ``DESIGN.md §3``. Run from anywhere:
+
+    python tools/check_docs.py
+
+CI runs this as the docs-consistency step; ``tests/test_docs.py`` runs it
+in tier-1.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py"]
+SCAN_FILES = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"]
+
+# forward: "DESIGN.md §3" / "EXPERIMENTS.md §Perf iteration A3" -> (file, tok)
+FORWARD = re.compile(r"\b([A-Z][A-Z_]+\.md)(?:\s*§\s*([A-Za-z0-9][\w-]*))?")
+# backward: "§Dry-run and §Roofline of EXPERIMENTS.md" (may span lines)
+BACKWARD = re.compile(
+    r"((?:§[\w-]+(?:\s+and\s+)?\s*)+)of\s+([A-Z][A-Z_]+\.md)")
+SECTION_TOKEN = re.compile(r"§\s*([A-Za-z0-9][\w-]*)")
+
+
+def headings(md_path: Path):
+    """Set of §-tokens declared by the file's headings."""
+    toks = set()
+    for line in md_path.read_text().splitlines():
+        if line.lstrip().startswith("#"):
+            toks.update(SECTION_TOKEN.findall(line))
+    return toks
+
+
+def references(text: str):
+    """Yield (md_name, token_or_None) for every cross-reference."""
+    for m in BACKWARD.finditer(text):
+        for tok in SECTION_TOKEN.findall(m.group(1)):
+            yield m.group(2), tok
+    for m in FORWARD.finditer(text):
+        yield m.group(1), m.group(2)
+
+
+def main() -> int:
+    files = [ROOT / f for f in SCAN_FILES if (ROOT / f).exists()]
+    for g in SCAN_GLOBS:
+        files.extend(sorted(ROOT.glob(g)))
+    section_cache = {}
+    errors = []
+    for f in files:
+        text = f.read_text()
+        for md_name, tok in references(text):
+            target = ROOT / md_name
+            rel = f.relative_to(ROOT)
+            if not target.exists():
+                errors.append(f"{rel}: reference to missing file {md_name}")
+                continue
+            if tok is None:
+                continue
+            if md_name not in section_cache:
+                section_cache[md_name] = headings(target)
+            if tok not in section_cache[md_name]:
+                errors.append(
+                    f"{rel}: {md_name} §{tok} — no heading in {md_name} "
+                    f"contains §{tok}")
+    if errors:
+        print("docs-consistency check FAILED:")
+        for e in sorted(set(errors)):
+            print("  " + e)
+        return 1
+    print(f"docs-consistency check passed "
+          f"({len(files)} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
