@@ -5,6 +5,12 @@ MNIST-like synthetic data.
 Emits one CSV row per (dataset, aggregator, malicious) curve; the derived
 column carries the accuracy trajectory summary. Full curves are written to
 experiments/convergence/*.json for EXPERIMENTS.md.
+
+Also measures the **scanned multi-round driver's dispatch amortisation**
+(DESIGN.md §2): per-round wall clock of ``rounds_per_call=8`` (one fused
+``lax.scan`` program per 8-round chunk, donated state buffers) against
+per-round dispatch, on a deliberately tiny round where the Python/XLA
+dispatch overhead is visible next to the compute.
 """
 from __future__ import annotations
 
@@ -22,6 +28,50 @@ from repro.data import CIFAR_LIKE, MNIST_LIKE, make_federated_image_dataset
 from repro.models import build_model
 
 OUT = "experiments/convergence"
+
+
+def scan_amortisation(fast: bool = FAST, rounds_per_call: int = 8):
+    """Per-round wall clock: scanned driver vs one dispatch per round."""
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(2, 2, 2),
+                                                  cnn_hidden=4)
+    model = build_model(cfg)
+    users = 2
+    data = make_federated_image_dataset(MNIST_LIKE, users, num_samples=200,
+                                        global_test=64, seed=0)
+    fed = FedConfig(num_users=users, num_testers=1, local_steps=1,
+                    attack="none")
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=2, grad_clip=0.0, remat=False)
+    chunks = 8 if fast else 32
+    rounds = chunks * rounds_per_call
+
+    single = FederatedTrainer(model, fed, tc, eval_batch=16)
+    state = single.init(jax.random.PRNGKey(0))
+    state, m = single.run_round(state, data)            # compile
+    jax.block_until_ready(m["local_loss"])
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state, m = single.run_round(state, data)
+    jax.block_until_ready(m["local_loss"])
+    us_single = (time.perf_counter() - t0) / rounds * 1e6
+
+    scanned = FederatedTrainer(model, fed, tc, eval_batch=16,
+                               rounds_per_call=rounds_per_call)
+    state = scanned.init(jax.random.PRNGKey(0))
+    state, m = scanned._scan_fn(state, data)            # compile
+    jax.block_until_ready(m["local_loss"])
+    t0 = time.perf_counter()
+    for _ in range(chunks):
+        state, m = scanned._scan_fn(state, data)
+    jax.block_until_ready(m["local_loss"])
+    us_scan = (time.perf_counter() - t0) / rounds * 1e6
+    assert scanned.num_traces == 1, scanned.num_traces
+
+    emit("convergence/scan_dispatch_rpc1", us_single, "per-round dispatch")
+    emit(f"convergence/scan_dispatch_rpc{rounds_per_call}", us_scan,
+         f"speedup_vs_rpc1={us_single / us_scan:.2f}x",
+         speedup=round(us_single / us_scan, 3))
+    return us_single, us_scan
 
 
 def _setup(dataset: str, fast: bool):
@@ -72,6 +122,7 @@ def rounds_to_reach(hist, target: float):
 
 def main(fast: bool = FAST):
     os.makedirs(OUT, exist_ok=True)
+    scan_amortisation(fast)
     rounds = 12 if fast else 60
     scenarios = []
     for dataset, mal in [("cifar_like", 0), ("cifar_like", 3),

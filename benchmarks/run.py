@@ -27,29 +27,37 @@ SUITES = [
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 
-JSON_SUITES = {"aggregation"}
+JSON_SUITES = {"aggregation", "kernels"}
 
 
-def main() -> None:
+def main() -> int:
     want = set(sys.argv[1:])
+    failed = []
     print("name,us_per_call,derived")
     for name, module in SUITES:
         if want and name not in want:
             continue
         common.ROWS.clear()
         t0 = time.time()
-        mod = __import__(module, fromlist=["main"])
         try:
+            mod = __import__(module, fromlist=["main"])
             mod.main()
-        except Exception as e:  # keep the harness alive per-suite
+        except Exception as e:  # keep the harness alive per-suite...
             print(f"{name}/ERROR,0,{e!r}", flush=True)
+            failed.append(name)
         if name in JSON_SUITES and common.ROWS:
             path = f"BENCH_{name}.json"
             with open(path, "w") as f:
                 json.dump(common.ROWS, f, indent=1)
             print(f"# wrote {path} ({len(common.ROWS)} rows)", flush=True)
         print(f"# suite {name} done in {time.time() - t0:.0f}s", flush=True)
+    if failed:
+        # ...but never exit 0: a crashed JSON suite would leave the
+        # committed BENCH_*.json in the worktree and the perf gate
+        # would silently compare the baseline against itself
+        print(f"# FAILED suites: {failed}", flush=True)
+    return 1 if failed else 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

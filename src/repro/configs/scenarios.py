@@ -56,11 +56,19 @@ SCENARIOS: Dict[str, FedConfig] = {
     "partial_participation": FedConfig(
         num_users=20, num_testers=5, num_malicious=3,
         attack="random_weights", participation=0.5, rounds=60),
-    # the combined adversarial + sampling setting both engines must agree
-    # on (the pod parity test's configuration, EXPERIMENTS.md §Scenarios)
+    # the combined adversarial + sampling setting every exchange backend
+    # must agree on (the equivalence matrix's configuration,
+    # EXPERIMENTS.md §Scenarios)
     "sign_flip_partial_participation": FedConfig(
         num_users=20, num_testers=5, num_malicious=1, attack="sign_flip",
         participation=0.75, rounds=60),
+    # adaptive attacker reading its own weight through the AttackContext
+    # seam: corrupts only while the federation still buys its update
+    # (the ROADMAP's cross-testing-aware adversary, DESIGN.md §2)
+    "adaptive_scale_vs_fedtest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="adaptive_scale", attack_scale=4.0,
+        attack_kwargs={"weight_threshold": 0.5}, rounds=60),
 }
 
 

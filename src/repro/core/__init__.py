@@ -6,9 +6,12 @@
 * ``cross_testing`` — testers evaluate every client model on their own data.
 * ``attacks``       — malicious-user model suite (paper: random weights).
 * ``selection``     — rotating tester selection + orthogonal-RB schedule.
-* ``round``         — the federated round engine (Algorithm 1), whose
-  aggregator / attack / tester-selection seams resolve by name through
-  the ``repro.strategies`` registries.
+* ``engine``        — the unified federated round engine (Algorithm 1):
+  one backend-agnostic ``RoundProgram`` (steps 1-7, owned once) behind
+  pluggable exchange backends (local vmap / ring / allgather shard_map),
+  whose aggregator / attack / tester-selection seams resolve by name
+  through the ``repro.strategies`` registries. ``round`` and
+  ``distributed`` remain as import shims over it.
 """
 from repro.core.scoring import ScoreState, init_scores, update_scores, score_weights
 from repro.core.aggregation import (
@@ -16,7 +19,7 @@ from repro.core.aggregation import (
 from repro.core.attacks import apply_attacks, ATTACKS
 from repro.core.cross_testing import cross_test_accuracies
 from repro.core.selection import select_testers, rb_schedule
-from repro.core.round import (
+from repro.core.engine import (
     FederatedTrainer, RoundState, resolve_strategies)
 
 __all__ = [

@@ -1,10 +1,10 @@
 """Cross-testing (the heart of FedTest, Fig. 3b).
 
 Each selected tester evaluates *every* client's model on the tester's own
-local held-out data. On a single host this is a ``vmap`` over the client
-axis of the stacked params (N models evaluated in one XLA call per
-tester); on a pod the same computation is the ring schedule in
-``repro.core.distributed.ring_cross_test`` (see DESIGN.md §3).
+local held-out data. On the local exchange backend this is a ``vmap``
+over the client axis of the stacked params (N models evaluated in one
+XLA call per tester); on a pod the same computation is the ring schedule
+in ``repro.core.engine.backends.ring_cross_test`` (see DESIGN.md §3).
 """
 from __future__ import annotations
 

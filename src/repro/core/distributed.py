@@ -1,388 +1,19 @@
-"""Distributed FedTest round via ``shard_map`` — one client per mesh slice.
+"""Compatibility shim — the pod round moved to :mod:`repro.core.engine`.
 
-This is the datacenter mapping of the paper's D2D protocol (DESIGN.md §3):
-
-* the ``clients`` mesh axis carries one FL client per slice;
-* "users send models to testers over orthogonal RBs" becomes a
-  **ring schedule**: ``lax.ppermute`` rotates the stacked client models
-  around the ring, and at each of the N-1 hops every device evaluates the
-  visiting model on its *own* local test shard. Each hop uses disjoint
-  neighbour links — the ICI analogue of interference-free RB slots — and
-  the memory high-water mark is 2x one model instead of the N-x blow-up of
-  an all-gather (the paper-faithful alternative, kept for comparison in
-  EXPERIMENTS.md §Perf);
-* "testers upload accuracies, server aggregates" becomes a masked
-  ``psum``: tester rows of the accuracy matrix are averaged, scores are
-  updated replicated, and the weighted model aggregation is a single
-  ``psum`` of ``w_c * params_c``.
-
-The full adversarial scenario matrix runs here at strategy parity with
-the single-host engine (DESIGN.md §2):
-
-* **attacks** — ``FedConfig.attack`` resolves against the ``ATTACKS``
-  registry exactly like the single-host round; the malicious placement
-  mask is static host data, each device checks its own position along the
-  clients axis and corrupts its locally trained params *before* the
-  ring / all-gather exchange (``Attack.apply_local``), and the per-round
-  attack key is folded from the round counter and the device index;
-* **client sampling** — ``FedConfig.participation < 1`` masks the
-  training scan (non-sampled slots revert to the global model), the
-  tester ``psum`` (non-sampled testers report nothing) and the
-  aggregation ``psum`` (weights renormalised over the sampled subset,
-  with the same fallback formula as the single-host engine).
-
-The same ``FedConfig`` drives this and the single-host engine; the
-parity contract is exercised by ``tests/test_pod_parity.py``.
+The ``shard_map`` FedTest round (one client per mesh slice; DESIGN.md §3)
+used to be implemented here, duplicating the single-host engine's
+strategy / participation / renormalisation logic. The ring and
+all-gather exchanges are now
+:class:`~repro.core.engine.backends.RingBackend` /
+:class:`~repro.core.engine.backends.AllgatherBackend` driving the one
+shared :class:`~repro.core.engine.program.RoundProgram`; this module
+keeps the historical import surface for the pod round builders.
 """
-from __future__ import annotations
+from repro.core.engine.backends import (
+    make_allgather_round, make_distributed_round, make_pod_round,
+    ring_cross_test)
 
-import functools
-from typing import Any, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.config import FedConfig, TrainConfig
-from repro.core.cross_testing import make_eval_fn
-from repro.core.round import renormalize_over_subset
-from repro.core.scoring import ScoreState
-from repro.optim import make_optimizer
-from repro.strategies.base import Aggregator, RoundContext, uses_combine
-from repro.utils.pytree import tree_add_vector
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions (experimental pre-0.5)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False)
-
-
-def _resolve_aggregator(fed: FedConfig, aggregator) -> Aggregator:
-    if isinstance(aggregator, Aggregator):
-        return aggregator
-    from repro.core.round import aggregator_defaults
-    from repro.strategies import AGGREGATORS
-    return AGGREGATORS.build(aggregator or fed.aggregator,
-                             fed.strategy_kwargs("aggregator"),
-                             aggregator_defaults(fed))
-
-
-def _resolve_attack(fed: FedConfig):
-    from repro.strategies import ATTACKS
-    return ATTACKS.build(fed.attack, fed.strategy_kwargs("attack"),
-                         dict(num_malicious=fed.num_malicious,
-                              scale=fed.attack_scale))
-
-
-def _strategy_weights(agg: Aggregator, acc, scores, params, global_params,
-                      axis: str, num_clients: int, counts=None,
-                      part_mask=None, seed: int = 0, server_eval=None,
-                      updates=None):
-    """Replicated weight computation shared by both exchange schedules.
-
-    ``acc`` is the already-combined [N] accuracy vector (tester reports
-    masked by participation upstream), so the context carries it as a
-    single-tester matrix with ``report_mask=None``. Aggregators that need
-    client updates (krum / trimmed_mean / median, and every ``combine()``
-    aggregator) trigger one all-gather of the *flattened* update — the
-    same N-x memory cost as the all-gather exchange, so prefer those
-    aggregators with ``--exchange allgather``, whose round body derives
-    the matrix from the models it already gathered and passes it in as
-    ``updates`` so nothing is gathered twice (EXPERIMENTS.md §Perf).
-    ``counts`` are the per-client sample counts (static host data, closed
-    over); without them fedavg degenerates to uniform weighting.
-
-    The per-round strategy key is folded from ``PRNGKey(seed)`` and the
-    round counter carried in ``ScoreState.rounds_seen``, so randomised
-    strategies see a fresh key every round (and the same key for the same
-    round across the ring / all-gather schedules).
-
-    When ``part_mask`` is given ([N], replicated), non-sampled clients
-    are forced to exactly zero weight and the simplex is renormalised
-    over the sampled subset — the identical formula (including the
-    uniform-over-subset fallback) as the single-host engine, so the two
-    paths cannot drift on sampled-subset renormalisation.
-
-    Returns ``(weights, new_scores, ctx)`` — the context carries the
-    all-gathered ``[N, D]`` updates (replicated) for the combine path.
-    """
-    if updates is None and (agg.needs_updates or uses_combine(agg)):
-        flat = jnp.concatenate([
-            (p.astype(jnp.float32) - g.astype(jnp.float32)).ravel()
-            for p, g in zip(jax.tree_util.tree_leaves(params),
-                            jax.tree_util.tree_leaves(global_params))])
-        updates = jax.lax.all_gather(flat, axis)             # [N, D]
-    if counts is None:
-        counts = jnp.ones((num_clients,), jnp.float32)
-    ctx = RoundContext(
-        acc_matrix=acc[None, :],
-        tester_ids=jnp.arange(num_clients),
-        scores=scores,
-        counts=jnp.asarray(counts, jnp.float32),
-        round_idx=scores.rounds_seen,
-        key=jax.random.fold_in(jax.random.PRNGKey(seed),
-                               scores.rounds_seen),
-        updates=updates,
-        server_eval=server_eval,
-        participation=part_mask)
-    new_scores = agg.update_scores(ctx)
-    ctx = ctx._replace(scores=new_scores)
-    weights = agg.weights(ctx)
-    if part_mask is not None:
-        weights = renormalize_over_subset(weights, part_mask)
-    # stateless aggregators leave ScoreState untouched; advance the round
-    # counter for them so ctx.round_idx / ctx.key vary across rounds
-    if type(agg).update_scores is Aggregator.update_scores:
-        new_scores = new_scores._replace(
-            rounds_seen=new_scores.rounds_seen + 1)
-    return weights, new_scores, ctx
-
-
-def _aggregate_on_pod(agg: Aggregator, ctx: RoundContext, params,
-                      global_params, weights, axis: str):
-    """New global model: weighted psum, or the combine fast path.
-
-    Combine aggregators run on the all-gathered ``[N, D]`` update matrix,
-    which is replicated across the client axis after the gather — every
-    device computes the identical combined update (the reduction-host
-    computation, replicated), so the result needs no further collective.
-    Participation reaches them through ``ctx.participation``: the client
-    gate of the order statistic always intersects the sampled subset.
-    """
-    if uses_combine(agg):
-        return tree_add_vector(global_params, agg.combine(ctx, ctx.updates))
-    my_w = weights[jax.lax.axis_index(axis)]
-    return jax.tree_util.tree_map(
-        lambda x: jax.lax.psum(
-            (x.astype(jnp.float32) * my_w), axis).astype(x.dtype),
-        params)
-
-
-def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
-    """Every device measures every client's model on its own test data.
-
-    Returns acc_row [num_clients]: accuracy of client c's model on *my*
-    local test shard. Implemented as N-1 ``ppermute`` hops around the ring
-    (visiting models), so peak memory is own + visiting model.
-    """
-    my_idx = jax.lax.axis_index(axis)
-    perm = [(i, (i + 1) % num_clients) for i in range(num_clients)]
-
-    def hop(step, carry):
-        visiting, acc_row = carry
-        # who owned `visiting` before `step` hops reached me?
-        owner = (my_idx - step) % num_clients
-        acc = eval_fn(visiting, tx, ty)
-        acc_row = acc_row.at[owner].set(acc)
-        visiting = jax.lax.ppermute(visiting, axis, perm)
-        return (visiting, acc_row)
-
-    acc_row = jnp.zeros((num_clients,), jnp.float32)
-    (_, acc_row) = jax.lax.fori_loop(
-        0, num_clients, hop, (my_params, acc_row))
-    return acc_row
-
-
-def _make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
-                    axis: str, aggregator, counts, server_data,
-                    exchange: str):
-    """Shared builder behind both exchange schedules (DESIGN.md §3).
-
-    Everything strategy-shaped is resolved here, pre-trace, exactly like
-    the single-host engine: the jitted round closes over the aggregator,
-    the attack (with its static malicious placement mask) and the static
-    participation flag, so one scenario compiles to one fused program.
-    """
-    opt = make_optimizer(train_cfg)
-    eval_fn = make_eval_fn(model)
-    num_clients = mesh.shape[axis]
-    agg = _resolve_aggregator(fed, aggregator)
-    if agg.needs_server_eval and server_data is None:
-        raise ValueError(
-            f"aggregator {agg.name!r} needs a server-side eval set; pass "
-            "server_data=(sx, sy) to the round builder (e.g. the "
-            "FederatedDataset's server_x/server_y)")
-    if fed.lying_testers:
-        raise ValueError(
-            "lying_testers (Sec. V-C) is single-host-only (DESIGN.md §3); "
-            "the pod round would silently run honest testers — use "
-            "repro.launch.train for that ablation")
-    attack = _resolve_attack(fed)
-    mal_idx = attack.malicious_indices(num_clients)
-    mal_mask = attack.malicious_mask(num_clients)        # [N] static
-    use_participation = fed.participation < 1.0
-    seed = fed.seed
-
-    def batchify(bx, by):
-        if model.cfg.family == "cnn":
-            return {"images": bx, "labels": by}
-        return {"tokens": bx, "labels": by}
-
-    def local_train(params, bx, by):
-        opt_state = opt.init(params)
-
-        def step(carry, xb_yb):
-            params, opt_state = carry
-            xb, yb = xb_yb
-            (loss, _), grads = jax.value_and_grad(
-                model.loss, has_aux=True)(params, batchify(xb, yb))
-            params, opt_state = opt.update(grads, opt_state, params)
-            return (params, opt_state), loss
-
-        (params, _), losses = jax.lax.scan(step, (params, opt_state),
-                                           (bx, by))
-        return params, jnp.mean(losses)
-
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(axis),
-                  P(axis)),
-        out_specs=(P(), P(), P()))
-    def round_fn(global_params, scores: ScoreState, bx, by, tx, ty,
-                 tester_mask, part_mask):
-        # shard_map gives per-client leading axes of size 1 — drop them
-        bx, by = bx[0], by[0]
-        tx, ty = tx[0], ty[0]
-        my_mask = tester_mask[0]
-        my_part = part_mask[0]
-        my_idx = jax.lax.axis_index(axis)
-
-        # 1-2. local training on my shard
-        params, local_loss = local_train(global_params, bx, by)
-
-        # 3. adversaries act per shard, before any model leaves the
-        # device: the malicious placement mask is static, the per-round
-        # key is folded from the round counter and my mesh position
-        if mal_idx:
-            atk_key = jax.random.fold_in(
-                jax.random.fold_in(jax.random.PRNGKey(seed),
-                                   scores.rounds_seen), my_idx)
-            params = attack.apply_local(atk_key, params, global_params,
-                                        my_idx, num_clients)
-
-        # 3b. client sampling: a non-sampled client transmits nothing —
-        # its slot reverts to the global model (so the ring circulates
-        # the stale copy), it reports no accuracies (tester mask zeroed)
-        # and it will get exactly zero aggregation weight below
-        if use_participation:
-            params = jax.tree_util.tree_map(
-                lambda p, g: jnp.where(my_part > 0, p, g.astype(p.dtype)),
-                params, global_params)
-            my_mask = my_mask * my_part
-            full_part = jax.lax.all_gather(my_part, axis)    # [N] replicated
-        else:
-            full_part = None
-
-        # 4. cross-testing exchange (only tester rows count)
-        pre_updates = None
-        if exchange == "ring":
-            acc_row = ring_cross_test(eval_fn, params, tx, ty, axis,
-                                      num_clients)
-        else:
-            everyone = jax.tree_util.tree_map(
-                lambda x: jax.lax.all_gather(x, axis), params)   # [N, ...]
-            acc_row = jax.vmap(
-                lambda p: eval_fn(p, tx, ty))(everyone)          # [N]
-            if agg.needs_updates or uses_combine(agg):
-                # the update matrix is derivable from the models already
-                # gathered for cross-testing — don't all-gather twice
-                pre_updates = jnp.concatenate([
-                    (e.astype(jnp.float32)
-                     - g.astype(jnp.float32)[None]).reshape(num_clients, -1)
-                    for e, g in zip(
-                        jax.tree_util.tree_leaves(everyone),
-                        jax.tree_util.tree_leaves(global_params))], axis=1)
-
-        # 5. combine tester reports: mean over the K *reporting* testers
-        # via masked psum (participation already folded into the mask)
-        k_total = jax.lax.psum(my_mask, axis)
-        acc = jax.lax.psum(acc_row * my_mask, axis) / jnp.maximum(k_total, 1)
-
-        # server-side eval (accuracy_based baseline): every device scores
-        # its own model on the replicated server set, one all-gather
-        # turns the scalars into the [N] vector the closure promises
-        server_eval = None
-        if agg.needs_server_eval:
-            sx, sy = server_data
-            my_server_acc = eval_fn(params, jnp.asarray(sx),
-                                    jnp.asarray(sy))
-            server_eval = (lambda a=my_server_acc:
-                           jax.lax.all_gather(a, axis))
-
-        # 6. replicated strategy weights (reports already masked)
-        weights, new_scores, ctx = _strategy_weights(
-            agg, acc, scores, params, global_params, axis, num_clients,
-            counts=counts, part_mask=full_part, seed=seed,
-            server_eval=server_eval, updates=pre_updates)
-
-        # 7. weighted psum over the client axis, or the combine fast path
-        new_global = _aggregate_on_pod(agg, ctx, params, global_params,
-                                       weights, axis)
-
-        # the malicious index set comes from the attack strategy, so the
-        # metric stays correct for any placement of the attackers
-        mal_w = (jnp.sum(weights * mal_mask) if mal_idx
-                 else jnp.zeros(()))
-        if use_participation:
-            n_part = jax.lax.psum(my_part, axis)
-            loss_mean = (jax.lax.psum(local_loss * my_part, axis)
-                         / jnp.maximum(n_part, 1))
-            rate = n_part / num_clients
-        else:
-            loss_mean = jax.lax.pmean(local_loss, axis)
-            rate = jnp.ones(())
-        metrics = {"local_loss": loss_mean,
-                   "acc_mean": jnp.mean(acc),
-                   "weights": weights,
-                   "malicious_weight": mal_w,
-                   "participation_rate": rate}
-        return new_global, new_scores, metrics
-
-    return round_fn
-
-
-def make_distributed_round(model, fed: FedConfig, train_cfg: TrainConfig,
-                           mesh, axis: str = "clients", aggregator=None,
-                           counts=None, server_data=None):
-    """Builds the jitted shard_map FedTest round for ``mesh[axis]`` clients.
-
-    ``aggregator`` — registry name or :class:`Aggregator` instance;
-    defaults to ``fed.aggregator``. The attack comes from ``fed.attack``
-    (+ ``num_malicious`` / ``attack_scale`` / ``attack_kwargs``) and the
-    participation fraction from ``fed.participation`` — both resolved
-    once here, pre-trace, exactly like the single-host engine.
-    ``server_data`` — optional ``(sx, sy)`` replicated server eval set,
-    required only by ``needs_server_eval`` aggregators.
-
-    Inputs (per call):
-      global_params — replicated pytree
-      scores        — ScoreState (replicated)
-      bx, by        — [N, steps, batch, ...] client-sharded training batches
-      tx, ty        — [N, eval_batch, ...]   client-sharded local test data
-      tester_mask   — [N] f32 (K ones; rotating selection by the caller)
-      part_mask     — [N] f32 participation mask (all ones when
-                      ``fed.participation == 1``; see
-                      ``repro.core.round.participation_mask``)
-
-    Returns (new_global (replicated), new_scores, metrics).
-    """
-    return _make_pod_round(model, fed, train_cfg, mesh, axis, aggregator,
-                           counts, server_data, exchange="ring")
-
-
-def make_allgather_round(model, fed: FedConfig, train_cfg: TrainConfig,
-                         mesh, axis: str = "clients", aggregator=None,
-                         counts=None, server_data=None):
-    """Paper-faithful alternative: all-gather every model to every tester
-    (each user receives all models at once, as in the RB broadcast).
-    Memory: N x model per device — kept as the EXPERIMENTS.md §Perf
-    comparison baseline. Same signature and strategy surface as
-    :func:`make_distributed_round`.
-    """
-    return _make_pod_round(model, fed, train_cfg, mesh, axis, aggregator,
-                           counts, server_data, exchange="allgather")
+__all__ = [
+    "make_allgather_round", "make_distributed_round", "make_pod_round",
+    "ring_cross_test",
+]

@@ -1,0 +1,37 @@
+"""The unified FedTest round engine (DESIGN.md §2 and §3).
+
+One backend-agnostic :class:`RoundProgram` owns the round's semantics —
+participation mask, attack application (through :class:`AttackContext`),
+lying testers, score update, subset renormalisation, metrics — exactly
+once; three :class:`ExchangeBackend` implementations supply the
+topology-specific mechanics:
+
+* ``local``     — single-host ``vmap`` over a stacked client axis
+  (driven by :class:`FederatedTrainer`, including the scanned
+  multi-round driver);
+* ``ring``      — one client per device under ``shard_map``,
+  cross-testing via ``ppermute`` hops (``make_distributed_round``);
+* ``allgather`` — the paper-faithful broadcast exchange
+  (``make_allgather_round``).
+
+``tests/test_pod_parity.py`` pins the three backends bit-identical on
+weights, scores and malicious-weight trajectories across the
+attack x participation matrix.
+"""
+from repro.core.engine.backends import (
+    AllgatherBackend, ExchangeBackend, LocalBackend, PodBackend,
+    RingBackend, make_allgather_round, make_distributed_round,
+    make_pod_round, ring_cross_test)
+from repro.core.engine.driver import FederatedTrainer, RoundState
+from repro.core.engine.program import (
+    RoundKeys, RoundProgram, aggregator_defaults, participation_mask,
+    renormalize_over_subset, resolve_strategies, round_keys)
+
+__all__ = [
+    "AllgatherBackend", "ExchangeBackend", "FederatedTrainer",
+    "LocalBackend", "PodBackend", "RingBackend", "RoundKeys",
+    "RoundProgram", "RoundState", "aggregator_defaults",
+    "make_allgather_round", "make_distributed_round", "make_pod_round",
+    "participation_mask", "renormalize_over_subset", "resolve_strategies",
+    "ring_cross_test", "round_keys",
+]

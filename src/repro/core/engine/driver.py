@@ -1,0 +1,171 @@
+"""Single-host drivers for the unified round engine.
+
+:class:`FederatedTrainer` drives the backend-agnostic
+:class:`~repro.core.engine.program.RoundProgram` on the
+:class:`~repro.core.engine.backends.LocalBackend` (clients vectorised
+with ``vmap``). Two compiled drivers share one round body:
+
+* the **single-round driver** (``run_round``) — one jitted round per
+  call, the interactive / test path;
+* the **scanned multi-round driver** — ``lax.scan`` over
+  ``rounds_per_call`` rounds with donated state buffers, so steady-state
+  training dispatches one fused program per chunk instead of one per
+  round (``benchmarks/bench_convergence.py`` measures the per-round
+  dispatch amortisation; DESIGN.md §2 documents the driver).
+
+Both drivers trace the round body exactly once; ``num_traces`` counts
+body traces and ``run`` raises when any compiled driver retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, TrainConfig
+from repro.core.engine.backends import LocalBackend
+from repro.core.engine.program import RoundProgram, round_keys
+from repro.core.scoring import ScoreState, init_scores
+from repro.data.pipeline import FederatedDataset, sample_client_batches
+
+
+class RoundState(NamedTuple):
+    global_params: Any
+    scores: ScoreState
+    round_idx: jnp.ndarray
+    key: jnp.ndarray
+
+
+@dataclasses.dataclass
+class FederatedTrainer:
+    model: Any                      # repro.models.Model
+    fed: FedConfig
+    train: TrainConfig
+    agg_impl: str = "auto"
+    eval_batch: int = 256
+    use_trust: bool = False
+    batch_builder: Optional[Callable] = None   # (bx, by) -> model batch
+    rounds_per_call: int = 1        # >1 routes run() through lax.scan
+
+    def __post_init__(self):
+        # the program resolves every strategy once, pre-trace (the jitted
+        # drivers close over it), and builds the one shared eval fn
+        self.program = RoundProgram(
+            self.model, self.fed, self.train, use_trust=self.use_trust,
+            agg_impl=self.agg_impl, batch_builder=self.batch_builder)
+        self.backend = LocalBackend(self.fed.num_users)
+        # strategy handles (public API, also used by tests/benchmarks)
+        self.opt = self.program.opt
+        self.aggregator = self.program.aggregator
+        self.attack = self.program.attack
+        self.selector = self.program.selector
+        self.num_traces = 0
+        self._round_fn = jax.jit(self._round_body)
+        # the scanned driver donates the carried RoundState so XLA can
+        # reuse the global-model and score buffers across chunks
+        self._scan_fn = (jax.jit(self._multi_round, donate_argnums=0)
+                         if self.rounds_per_call > 1 else None)
+        self._global_eval = jax.jit(self._global_eval_impl)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> RoundState:
+        pk, rk = jax.random.split(key)
+        params = self.model.init(pk)
+        return RoundState(global_params=params,
+                          scores=init_scores(self.fed.num_users),
+                          round_idx=jnp.zeros((), jnp.int32),
+                          key=rk)
+
+    # ------------------------------------------------------------- internals
+    def _round_body(self, state: RoundState, data: FederatedDataset):
+        self.num_traces += 1        # python side-effect: runs per trace only
+        fed = self.fed
+        keys = round_keys(jax.random.fold_in(state.key, state.round_idx))
+        tester_ids, part_mask = self.program.select_round(keys,
+                                                          state.round_idx)
+        bx, by = sample_client_batches(keys.batch, data.train,
+                                       fed.local_steps,
+                                       self.train.batch_size)
+        new_global, new_scores, metrics = self.program.run(
+            self.backend, state.global_params, state.scores,
+            bx=bx, by=by,
+            tx=data.test.xs[:, :self.eval_batch],
+            ty=data.test.ys[:, :self.eval_batch],
+            tester_ids=tester_ids, part_mask=part_mask, keys=keys,
+            round_idx=state.round_idx, counts=data.train.counts,
+            server_data=(data.server_x[:self.eval_batch],
+                         data.server_y[:self.eval_batch]))
+        new_state = RoundState(global_params=new_global, scores=new_scores,
+                               round_idx=state.round_idx + 1,
+                               key=state.key)
+        return new_state, metrics
+
+    def _multi_round(self, state: RoundState, data: FederatedDataset):
+        """``rounds_per_call`` rounds as one fused scanned program."""
+        def body(s, _):
+            return self._round_body(s, data)
+        return jax.lax.scan(body, state, None,
+                            length=self.rounds_per_call)
+
+    def _global_eval_impl(self, params, gx, gy):
+        return self.program.eval_fn(params, gx, gy)
+
+    # ------------------------------------------------------------------- API
+    def run_round(self, state: RoundState, data: FederatedDataset):
+        return self._round_fn(state, data)
+
+    def global_accuracy(self, state: RoundState, data: FederatedDataset,
+                        max_samples: int = 2048) -> float:
+        return float(self._global_eval(state.global_params,
+                                       data.global_x[:max_samples],
+                                       data.global_y[:max_samples]))
+
+    def run(self, key, data: FederatedDataset, rounds: Optional[int] = None,
+            eval_every: int = 1, verbose: bool = False):
+        """Full training loop; returns (final_state, history dict).
+
+        With ``rounds_per_call > 1`` the steady state runs through the
+        scanned driver — per-round scalar metrics still cover every
+        round (the scan stacks them), global accuracy is evaluated at
+        driver-call boundaries. A remainder of ``rounds %
+        rounds_per_call`` rounds falls back to the single-round driver
+        (a second compiled program, still one trace each).
+        """
+        rounds = rounds if rounds is not None else self.fed.rounds
+        state = self.init(key)
+        history = {"round": [], "global_accuracy": [], "local_loss": [],
+                   "malicious_weight": []}
+        programs_used = set()
+        done = 0
+        while done < rounds:
+            if (self._scan_fn is not None
+                    and rounds - done >= self.rounds_per_call):
+                state, chunk = self._scan_fn(state, data)
+                programs_used.add("scan")
+                step = self.rounds_per_call
+                metrics = {k: v[-1] for k, v in chunk.items()}
+            else:
+                state, metrics = self._round_fn(state, data)
+                programs_used.add("single")
+                step = 1
+            done += step
+            if done % eval_every == 0 or done >= rounds or step > 1:
+                ga = self.global_accuracy(state, data)
+                history["round"].append(done)
+                history["global_accuracy"].append(ga)
+                history["local_loss"].append(float(metrics["local_loss"]))
+                history["malicious_weight"].append(
+                    float(metrics["malicious_weight"]))
+                if verbose:
+                    print(f"round {done:4d}  acc={ga:.4f}  "
+                          f"loss={float(metrics['local_loss']):.4f}  "
+                          f"mal_w={float(metrics['malicious_weight']):.4f}")
+        if rounds > 1 and self.num_traces > max(1, len(programs_used)):
+            raise RuntimeError(
+                f"round engine retraced: {self.num_traces} body traces "
+                f"over {rounds} rounds across {len(programs_used)} "
+                "compiled driver(s) — strategy resolution must stay "
+                "pre-trace")
+        return state, history

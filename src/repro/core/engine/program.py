@@ -1,0 +1,347 @@
+"""The backend-agnostic FedTest round program (Algorithm 1).
+
+One fused round, owned exactly once (the step numbering below is the one
+DESIGN.md §2 documents):
+
+  1.  broadcast the global model to all N users            (line 15 of prev round)
+  2.  every user runs ``local_steps`` optimizer steps on its own shard (line 5)
+  3.  malicious users swap in attacked models              (Sec. IV)
+  4.  K testers evaluate all N models on their own data    (lines 6-9)
+  5.  lying testers corrupt their reports                  (Sec. V-C ablation)
+  6.  the server computes scores / weights                 (line 13)
+  7.  score-weighted aggregation -> new global model       (line 14)
+
+:class:`RoundProgram` implements every step once and is parameterised by
+an :class:`~repro.core.engine.backends.ExchangeBackend` that supplies
+only what is genuinely topology-specific — how the N client models are
+materialised (a stacked ``[N, ...]`` pytree under ``vmap``, or one model
+per device under ``shard_map``), how testers see other clients' models
+(vmap / ring hops / all-gather), and how per-device partials reduce
+(identity / psum). Everything semantic — the participation mask, the
+attack application and its :class:`AttackContext`, lying testers, the
+score update (including score freezing for non-participants), the
+sampled-subset renormalisation, the metrics — lives here, so the three
+backends cannot drift (the equivalence matrix in
+``tests/test_pod_parity.py`` pins them bit-identical).
+
+The contract that makes this possible: the backend hands the program
+*replicated* ``[N]``- / ``[K, N]``-indexed arrays (accuracy matrix,
+per-client losses, flattened updates) and the program manipulates only
+those plus opaque model handles it routes back through backend methods.
+
+Steps 3, 4 and 6 are **pluggable**: the attack, tester-selection policy
+and aggregator are looked up by name in :mod:`repro.strategies`
+(``FedConfig.attack`` / ``.selector`` / ``.aggregator``) and resolved to
+plain Python objects in the program constructor — *before* tracing — so
+jit closes over static callables and one round compiles to one fused
+program with no trace-time branching.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, TrainConfig
+from repro.core.cross_testing import make_eval_fn
+from repro.core.scoring import score_weights
+from repro.optim import make_optimizer
+from repro.strategies.base import (
+    Aggregator, AttackContext, RoundContext, uses_combine)
+from repro.utils.pytree import tree_add_vector
+
+
+class RoundKeys(NamedTuple):
+    """The per-round PRNG key bundle, one derivation for every driver.
+
+    ``round_keys`` is the exact schedule the historical single-host
+    engine used (``split(key, 4)`` then ``fold_in(key, 5)`` /
+    ``fold_in(key, 6)``), so replaying a round on another backend — or
+    from a host loop, as the pod driver and the parity tests do — means
+    deriving this bundle from the same base key, nothing more.
+    """
+
+    batch: jnp.ndarray      # client batch sampling
+    attack: jnp.ndarray     # base attack key (per-client fold downstream)
+    test: jnp.ndarray       # tester selection
+    lie: jnp.ndarray        # lying testers' fake reports
+    agg: jnp.ndarray        # randomised aggregation strategies
+    part: jnp.ndarray       # participation (client-sampling) mask
+
+
+def round_keys(key) -> RoundKeys:
+    """Derive the :class:`RoundKeys` bundle from a round's base key."""
+    k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
+    return RoundKeys(batch=k_batch, attack=k_attack, test=k_test, lie=k_lie,
+                     agg=jax.random.fold_in(key, 5),
+                     part=jax.random.fold_in(key, 6))
+
+
+def participation_mask(key, num_users: int, participation: float
+                       ) -> jnp.ndarray:
+    """Per-round Bernoulli client-sampling mask ``[N]`` (1 = sampled).
+
+    Falls back to everyone in the zero-participant corner so a round is
+    always well defined. Every backend gets the mask from this one
+    formula via :meth:`RoundProgram.select_round`, so the sampled
+    subsets agree bit-exactly for equal keys.
+    """
+    bern = jax.random.bernoulli(key, participation, (num_users,))
+    return jnp.where(jnp.any(bern), bern.astype(jnp.float32),
+                     jnp.ones((num_users,), jnp.float32))
+
+
+def renormalize_over_subset(weights: jnp.ndarray, part_mask: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Zero non-participants and renormalise the simplex over the subset.
+
+    If the sampled subset got zero total weight, fall back to uniform
+    over it. One formula, applied once in :meth:`RoundProgram.run`, so
+    the sampled-subset renormalisation cannot drift between backends
+    (the equivalence matrix pins the resulting zero pattern and sums).
+    """
+    w = weights * part_mask
+    total = jnp.sum(w)
+    return jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
+                     part_mask / jnp.sum(part_mask))
+
+
+def aggregator_defaults(fed: FedConfig, use_trust: bool = False
+                        ) -> Dict[str, Any]:
+    """Engine-derived default kwargs offered to aggregator constructors.
+
+    Each aggregator picks up only the fields its ``__init__`` accepts
+    (``Registry.build`` filters by signature): ``fedtest`` takes the
+    scoring knobs, ``krum`` takes ``num_byzantine`` (the defender's
+    assumed f, defaulted to the scenario's ``num_malicious``), the rest
+    need nothing.
+    """
+    return dict(score_power=fed.score_power,
+                score_decay=fed.score_decay,
+                power_warmup_rounds=fed.power_warmup_rounds,
+                use_trust=use_trust,
+                num_byzantine=fed.num_malicious)
+
+
+def resolve_strategies(fed: FedConfig, use_trust: bool = False,
+                       aggregator=None):
+    """Name -> object resolution for (aggregator, attack, selector).
+
+    ``aggregator`` — optional override: a registry name or an already
+    constructed :class:`Aggregator` instance (the pod builders accept
+    both); defaults to ``fed.aggregator``.
+    """
+    # package import (not just .base) so the registries are populated
+    from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
+    if isinstance(aggregator, Aggregator):
+        agg = aggregator
+    else:
+        agg = AGGREGATORS.build(aggregator or fed.aggregator,
+                                fed.strategy_kwargs("aggregator"),
+                                aggregator_defaults(fed, use_trust))
+    atk = ATTACKS.build(fed.attack, fed.strategy_kwargs("attack"),
+                        dict(num_malicious=fed.num_malicious,
+                             scale=fed.attack_scale))
+    sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
+    return agg, atk, sel
+
+
+class RoundProgram:
+    """Steps 1-7 of the FedTest round, once, for every exchange backend.
+
+    Everything pluggable or derivable is resolved here, pre-trace: the
+    strategy objects, the optimizer, the (single, shared) eval function,
+    the static malicious placement, and the combine-fast-path flags. A
+    jitted round closes over this object; ``FederatedTrainer.num_traces``
+    and its pod analogue count retraces — steady-state training must
+    keep one trace per compiled driver.
+    """
+
+    def __init__(self, model, fed: FedConfig, train_cfg: TrainConfig, *,
+                 use_trust: bool = False, agg_impl: str = "auto",
+                 batch_builder: Optional[Callable] = None,
+                 aggregator=None):
+        self.model = model
+        self.fed = fed
+        self.train_cfg = train_cfg
+        self.agg_impl = agg_impl
+        self.batch_builder = batch_builder
+        self.opt = make_optimizer(train_cfg)
+        # one eval fn, built once, shared by cross-testing, server-side
+        # eval and the drivers' global-accuracy closures
+        self.eval_fn = make_eval_fn(model)
+        self.aggregator, self.attack, self.selector = resolve_strategies(
+            fed, use_trust, aggregator=aggregator)
+        # a non-None combine hook routes aggregation through the
+        # per-coordinate fast path; both checks are static Python, so the
+        # jitted round never branches on them at trace time.
+        self.uses_combine = uses_combine(self.aggregator)
+        self.needs_updates = (self.aggregator.needs_updates
+                              or self.uses_combine)
+        self.malicious_idx = self.attack.malicious_indices(fed.num_users)
+        self.malicious_mask = self.attack.malicious_mask(fed.num_users)
+        self.use_participation = fed.participation < 1.0
+
+    # ---------------------------------------------------------- local phase
+    def batchify(self, bx, by) -> Dict[str, jnp.ndarray]:
+        if self.batch_builder is not None:
+            return self.batch_builder(bx, by)
+        if self.model.cfg.family == "cnn":
+            return {"images": bx, "labels": by}
+        return {"tokens": bx, "labels": by}
+
+    def local_train(self, params, bx, by):
+        """One client's local phase: ``local_steps`` optimizer steps.
+
+        Backends drive this per client — ``vmap`` over the stacked axis
+        on the local backend, directly on each device's shard on the pod
+        backends — so the local-training math is shared by construction.
+        """
+        opt_state = self.opt.init(params)
+
+        def step(carry, xb_yb):
+            params, opt_state = carry
+            xb, yb = xb_yb
+            (loss, _), grads = jax.value_and_grad(
+                self.model.loss, has_aux=True)(params,
+                                               self.batchify(xb, yb))
+            params, opt_state = self.opt.update(grads, opt_state, params)
+            return (params, opt_state), loss
+
+        (params, _), losses = jax.lax.scan(step, (params, opt_state),
+                                           (bx, by))
+        return params, jnp.mean(losses)
+
+    # ------------------------------------------------------- round plumbing
+    def select_round(self, keys: RoundKeys, round_idx):
+        """Per-round tester ids [K] and participation mask [N].
+
+        Shared by every driver (traced on both engines), so tester sets
+        and sampled subsets agree bit-exactly for equal keys. The mask is
+        all-ones when ``participation == 1`` — :meth:`run` branches on
+        the static config flag, never on the mask values.
+        """
+        fed = self.fed
+        tester_ids = self.selector.select(keys.test, fed.num_users,
+                                          fed.num_testers, round_idx)
+        if self.use_participation:
+            part_mask = participation_mask(keys.part, fed.num_users,
+                                           fed.participation)
+        else:
+            part_mask = jnp.ones((fed.num_users,), jnp.float32)
+        return tester_ids, part_mask
+
+    # ------------------------------------------------------------ the round
+    def run(self, backend, global_params, scores, *, bx, by, tx, ty,
+            tester_ids, part_mask, keys: RoundKeys, round_idx, counts,
+            server_data=None):
+        """One FedTest round on ``backend``; steps 1-7, owned here.
+
+        ``bx, by`` are the round's training batches and ``tx, ty`` the
+        local test shards, in the backend's client layout (stacked
+        ``[N, ...]`` locally, per-device slices under ``shard_map``).
+        ``tester_ids`` / ``part_mask`` come from :meth:`select_round`,
+        ``keys`` from :func:`round_keys`. Returns
+        ``(new_global, new_scores, metrics)`` — all replicated.
+        """
+        fed = self.fed
+        pmask = part_mask if self.use_participation else None
+
+        # 1-2. broadcast + local training; losses come back as a
+        # replicated [N] vector whatever the backend topology
+        models, local_loss = backend.train(self.local_train, global_params,
+                                           bx, by)
+
+        # 3. adversaries act (strategy; malicious set can live anywhere).
+        # The AttackContext exposes the cross-testing signal *entering*
+        # the round — the scores and the aggregation weights they imply —
+        # so adaptive attacks can react to being suppressed.
+        actx = AttackContext(scores=scores.scores,
+                             weights=score_weights(scores),
+                             round_idx=round_idx)
+        models = backend.apply_attack(self.attack, keys.attack, models,
+                                      global_params, actx)
+
+        # 3b. non-participants transmit nothing this round: whoever
+        # evaluates their slot sees the stale global copy — attacked or
+        # not, an unsampled client's model never leaves the device.
+        if pmask is not None:
+            models = backend.mask_models(models, global_params, pmask)
+
+        # 4. the round's testers measure accuracies on their own data.
+        # The backend returns the replicated [K, N] matrix A[k, c] (and
+        # an opaque cache, e.g. the all-gathered models, that
+        # ``backend.updates`` may reuse so nothing is exchanged twice).
+        acc, cache = backend.cross_test(self.eval_fn, models, tx, ty,
+                                        tester_ids)
+
+        # 5. lying testers (Sec. V-C): users with id < lying_testers
+        # report uniform random accuracies whenever selected to test.
+        # The matrix is replicated, so this works on every backend.
+        if fed.lying_testers:
+            lies = jax.random.uniform(keys.lie, acc.shape)
+            liar_rows = (tester_ids < fed.lying_testers)[:, None]
+            acc = jnp.where(liar_rows, lies, acc)
+
+        # 6. weights via the aggregation strategy
+        server_eval = None
+        if self.aggregator.needs_server_eval:
+            if server_data is None:
+                raise ValueError(
+                    f"aggregator {self.aggregator.name!r} needs a "
+                    "server-side eval set; pass server_data=(sx, sy)")
+            sx, sy = server_data
+            server_eval = backend.server_eval(self.eval_fn, models, sx, sy)
+        # the [N, D] update matrix is materialised at most once per round
+        # and shared between ctx.updates consumers and the combine path
+        updates = (backend.updates(models, global_params, cache)
+                   if self.needs_updates else None)
+        ctx = RoundContext(acc_matrix=acc, tester_ids=tester_ids,
+                           scores=scores, counts=counts,
+                           round_idx=round_idx, key=keys.agg,
+                           updates=updates, server_eval=server_eval,
+                           participation=pmask,
+                           report_mask=(pmask[tester_ids]
+                                        if pmask is not None else None))
+        # non-sampled clients' scores freeze inside update_scores
+        # (client_mask=ctx.participation): no evidence about an absent
+        # client — a suppressed attacker stays suppressed while it sits
+        # out. One code path for every backend.
+        new_scores = self.aggregator.update_scores(ctx)
+        ctx = ctx._replace(scores=new_scores)
+        weights = self.aggregator.weights(ctx)
+        if pmask is not None:
+            weights = renormalize_over_subset(weights, pmask)
+
+        # 7. aggregation -> new global model: the per-coordinate combine
+        # fast path runs replicated on the [N, D] matrix (identical on
+        # every backend); the weights path reduces through the backend
+        # (fused weighted sum locally, one psum on the pod).
+        if self.uses_combine:
+            new_global = tree_add_vector(
+                global_params, self.aggregator.combine(ctx, updates))
+        else:
+            new_global = backend.weighted_sum(models, weights,
+                                              global_params, self.agg_impl)
+
+        # the malicious index set comes from the attack strategy, so the
+        # metric stays correct for any placement of the attackers.
+        mal_w = (jnp.sum(weights * self.malicious_mask)
+                 if self.malicious_idx else jnp.zeros(()))
+        # losses of non-participants are discarded work (their training
+        # never left the device) — the mean runs over the sampled subset
+        metrics = {
+            "local_loss": (jnp.sum(local_loss * pmask)
+                           / jnp.maximum(jnp.sum(pmask), 1)
+                           if pmask is not None
+                           else jnp.mean(local_loss)),
+            "acc_matrix_mean": jnp.mean(acc),
+            "weights": weights,
+            "malicious_weight": mal_w,
+            "scores": new_scores.scores,
+            "participation_rate": (jnp.mean(pmask)
+                                   if pmask is not None
+                                   else jnp.ones(())),
+        }
+        return new_global, new_scores, metrics

@@ -1,332 +1,16 @@
-"""The FedTest round engine (Algorithm 1).
+"""Compatibility shim — the round engine moved to :mod:`repro.core.engine`.
 
-One fused, jitted round (the step numbering below is the one DESIGN.md §2
-documents and the pod path in :mod:`repro.core.distributed` mirrors):
-
-  1.  broadcast the global model to all N users            (line 15 of prev round)
-  2.  every user runs ``local_steps`` optimizer steps on its own shard (line 5)
-  3.  malicious users swap in attacked models              (Sec. IV)
-  4.  K testers evaluate all N models on their own data    (lines 6-9)
-  5.  lying testers corrupt their reports                  (Sec. V-C ablation)
-  6.  the server computes scores / weights                 (line 13)
-  7.  score-weighted aggregation -> new global model       (line 14)
-
-Local training is vectorised across clients with ``vmap`` (client axis =
-leading axis of the stacked param pytree) — on a pod the same functions are
-driven by ``shard_map`` with the client axis laid over ``data``
-(``repro.launch.train``).
-
-Steps 3, 4 and 6 are **pluggable**: the attack, tester-selection policy
-and aggregator are looked up by name in :mod:`repro.strategies`
-(``FedConfig.attack`` / ``.selector`` / ``.aggregator``) and resolved to
-plain Python objects in ``__post_init__`` — *before* tracing — so jit
-closes over static callables and one round compiles to one fused program
-with no trace-time branching. ``FederatedTrainer.num_traces`` counts
-retraces; steady-state training must keep it at 1.
+The FedTest round (Algorithm 1) used to be implemented here as the
+single-host ``vmap`` engine, duplicating the pod path's strategy /
+participation / renormalisation logic. Both now share one
+backend-agnostic :class:`~repro.core.engine.program.RoundProgram`
+(DESIGN.md §2); this module keeps the historical import surface for the
+single-host driver only.
 """
-from __future__ import annotations
+from repro.core.engine.driver import FederatedTrainer, RoundState
+from repro.core.engine.program import aggregator_defaults, resolve_strategies
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.config import FedConfig, TrainConfig
-from repro.core.aggregation import aggregate_models
-from repro.core.cross_testing import cross_test_accuracies, make_eval_fn
-from repro.core.scoring import ScoreState, init_scores
-from repro.data.pipeline import FederatedDataset, sample_client_batches
-from repro.optim import make_optimizer
-from repro.strategies.base import RoundContext, uses_combine
-
-
-class RoundState(NamedTuple):
-    global_params: Any
-    scores: ScoreState
-    round_idx: jnp.ndarray
-    key: jnp.ndarray
-
-
-def participation_mask(key, num_users: int, participation: float
-                       ) -> jnp.ndarray:
-    """Per-round Bernoulli client-sampling mask ``[N]`` (1 = sampled).
-
-    Falls back to everyone in the zero-participant corner so a round is
-    always well defined. Both engines (and the pod driver / parity tests)
-    share this one formula so the sampled subsets agree for equal keys.
-    """
-    bern = jax.random.bernoulli(key, participation, (num_users,))
-    return jnp.where(jnp.any(bern), bern.astype(jnp.float32),
-                     jnp.ones((num_users,), jnp.float32))
-
-
-def renormalize_over_subset(weights: jnp.ndarray, part_mask: jnp.ndarray
-                            ) -> jnp.ndarray:
-    """Zero non-participants and renormalise the simplex over the subset.
-
-    If the sampled subset got zero total weight, fall back to uniform
-    over it. One formula, shared by both engines, so the sampled-subset
-    renormalisation cannot drift between them (the parity test pins the
-    resulting zero pattern and sums).
-    """
-    w = weights * part_mask
-    total = jnp.sum(w)
-    return jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
-                     part_mask / jnp.sum(part_mask))
-
-
-def aggregator_defaults(fed: FedConfig, use_trust: bool = False
-                        ) -> Dict[str, Any]:
-    """Engine-derived default kwargs offered to aggregator constructors.
-
-    Each aggregator picks up only the fields its ``__init__`` accepts
-    (``Registry.build`` filters by signature): ``fedtest`` takes the
-    scoring knobs, ``krum`` takes ``num_byzantine`` (the defender's
-    assumed f, defaulted to the scenario's ``num_malicious``), the rest
-    need nothing.
-    """
-    return dict(score_power=fed.score_power,
-                score_decay=fed.score_decay,
-                power_warmup_rounds=fed.power_warmup_rounds,
-                use_trust=use_trust,
-                num_byzantine=fed.num_malicious)
-
-
-def resolve_strategies(fed: FedConfig, use_trust: bool = False):
-    """Name -> object resolution for (aggregator, attack, selector)."""
-    # package import (not just .base) so the registries are populated
-    from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
-    agg = AGGREGATORS.build(fed.aggregator, fed.strategy_kwargs("aggregator"),
-                            aggregator_defaults(fed, use_trust))
-    atk = ATTACKS.build(fed.attack, fed.strategy_kwargs("attack"),
-                        dict(num_malicious=fed.num_malicious,
-                             scale=fed.attack_scale))
-    sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
-    return agg, atk, sel
-
-
-@dataclasses.dataclass
-class FederatedTrainer:
-    model: Any                      # repro.models.Model
-    fed: FedConfig
-    train: TrainConfig
-    agg_impl: str = "auto"
-    eval_batch: int = 256
-    use_trust: bool = False
-    batch_builder: Optional[Callable] = None   # (bx, by) -> model batch
-
-    def __post_init__(self):
-        self.opt = make_optimizer(self.train)
-        # strategy resolution happens once, pre-trace: the jitted round
-        # closes over these objects as static callables.
-        self.aggregator, self.attack, self.selector = resolve_strategies(
-            self.fed, self.use_trust)
-        # a non-None combine hook routes aggregation through the
-        # per-coordinate fast path; both checks are static Python, so the
-        # jitted round never branches on them at trace time.
-        self._uses_combine = uses_combine(self.aggregator)
-        self._needs_updates = (self.aggregator.needs_updates
-                               or self._uses_combine)
-        self._malicious_idx = self.attack.malicious_indices(
-            self.fed.num_users)
-        self._malicious_mask = self.attack.malicious_mask(self.fed.num_users)
-        self.num_traces = 0
-        self._round_fn = jax.jit(self._round)
-        self._global_eval = jax.jit(self._global_eval_impl)
-
-    # ------------------------------------------------------------------ init
-    def init(self, key) -> RoundState:
-        pk, rk = jax.random.split(key)
-        params = self.model.init(pk)
-        return RoundState(global_params=params,
-                          scores=init_scores(self.fed.num_users),
-                          round_idx=jnp.zeros((), jnp.int32),
-                          key=rk)
-
-    # ------------------------------------------------------------- internals
-    def _batch(self, bx, by) -> Dict[str, jnp.ndarray]:
-        if self.batch_builder is not None:
-            return self.batch_builder(bx, by)
-        if self.model.cfg.family == "cnn":
-            return {"images": bx, "labels": by}
-        return {"tokens": bx, "labels": by}
-
-    def _local_train(self, params, bx, by):
-        """One client's local phase: ``local_steps`` optimizer steps."""
-        opt_state = self.opt.init(params)
-
-        def step(carry, xb_yb):
-            params, opt_state = carry
-            xb, yb = xb_yb
-            (loss, _), grads = jax.value_and_grad(
-                self.model.loss, has_aux=True)(params, self._batch(xb, yb))
-            params, opt_state = self.opt.update(grads, opt_state, params)
-            return (params, opt_state), loss
-
-        (params, _), losses = jax.lax.scan(step, (params, opt_state),
-                                           (bx, by))
-        return params, jnp.mean(losses)
-
-    def _flat_updates(self, trained, global_params) -> jnp.ndarray:
-        """[N, D] float32 matrix of flattened client updates."""
-        def flat(stack, g):
-            n = stack.shape[0]
-            return (stack.astype(jnp.float32)
-                    - g.astype(jnp.float32)[None]).reshape(n, -1)
-        parts = jax.tree_util.tree_leaves(
-            jax.tree_util.tree_map(flat, trained, global_params))
-        return jnp.concatenate(parts, axis=1)
-
-    def _round(self, state: RoundState, data: FederatedDataset
-               ) -> Tuple[RoundState, Dict[str, jnp.ndarray]]:
-        self.num_traces += 1        # python side-effect: runs per trace only
-        fed = self.fed
-        key = jax.random.fold_in(state.key, state.round_idx)
-        k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
-        k_agg = jax.random.fold_in(key, 5)
-        k_part = jax.random.fold_in(key, 6)
-
-        # 0. client sampling (participation R/N < 1): Bernoulli per client.
-        # Non-participants still train under vmap (uniform lockstep, SPMD
-        # cannot skip them) but send nothing: their slot reverts to the
-        # global model below and they get exactly zero aggregation weight.
-        part_mask = None
-        if fed.participation < 1.0:
-            part_mask = participation_mask(k_part, fed.num_users,
-                                           fed.participation)
-
-        # 1-2. broadcast + vectorised local training
-        stacked = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (fed.num_users,) + x.shape),
-            state.global_params)
-        bx, by = sample_client_batches(k_batch, data.train,
-                                       fed.local_steps,
-                                       self.train.batch_size)
-        trained, local_loss = jax.vmap(self._local_train)(stacked, bx, by)
-
-        # 3. adversaries act (strategy; malicious set can live anywhere)
-        trained = self.attack.apply(k_attack, trained, state.global_params)
-
-        # 3b. non-participants transmit nothing this round: whoever
-        # evaluates their slot sees the stale global copy, exactly like
-        # the pod path's masked training scan (DESIGN.md §3) — attacked
-        # or not, an unsampled client's model never leaves the device.
-        if part_mask is not None:
-            trained = jax.tree_util.tree_map(
-                lambda t, g: jnp.where(
-                    part_mask.reshape((-1,) + (1,) * (t.ndim - 1)) > 0,
-                    t, g[None].astype(t.dtype)),
-                trained, state.global_params)
-
-        # 4. selected testers measure accuracies on their own data
-        tester_ids = self.selector.select(k_test, fed.num_users,
-                                          fed.num_testers, state.round_idx)
-        eval_fn = make_eval_fn(self.model)
-        tx = data.test.xs[tester_ids, :self.eval_batch]
-        ty = data.test.ys[tester_ids, :self.eval_batch]
-        acc = cross_test_accuracies(
-            lambda p, x, y: eval_fn(p, x, y), trained, tx, ty)   # [K, N]
-
-        # 5. lying testers (Sec. V-C): users with id < lying_testers report
-        # uniform random accuracies whenever they are selected to test.
-        if fed.lying_testers:
-            lies = jax.random.uniform(k_lie, acc.shape)
-            liar_rows = (tester_ids < fed.lying_testers)[:, None]
-            acc = jnp.where(liar_rows, lies, acc)
-
-        # 6. weights via the aggregation strategy
-        server_eval = None
-        if self.aggregator.needs_server_eval:
-            sx = data.server_x[:self.eval_batch]
-            sy = data.server_y[:self.eval_batch]
-            server_eval = lambda: jax.vmap(                      # noqa: E731
-                lambda p: eval_fn(p, sx, sy))(trained)
-        # the [N, D] update matrix is computed at most once per round and
-        # shared between ctx.updates consumers and the combine fast path
-        updates = (self._flat_updates(trained, state.global_params)
-                   if self._needs_updates else None)
-        ctx = RoundContext(acc_matrix=acc, tester_ids=tester_ids,
-                           scores=state.scores, counts=data.train.counts,
-                           round_idx=state.round_idx, key=k_agg,
-                           updates=updates, server_eval=server_eval,
-                           participation=part_mask,
-                           report_mask=(part_mask[tester_ids]
-                                        if part_mask is not None else None))
-        scores = self.aggregator.update_scores(ctx)
-        ctx = ctx._replace(scores=scores)
-        weights = self.aggregator.weights(ctx)
-        if part_mask is not None:
-            weights = renormalize_over_subset(weights, part_mask)
-
-        # 7. aggregation -> new global model: score-weighted sum, or the
-        # per-coordinate combine fast path when the aggregator defines it
-        combine_fn = ((lambda u: self.aggregator.combine(ctx, u))
-                      if self._uses_combine else None)
-        new_global = aggregate_models(trained, weights, impl=self.agg_impl,
-                                      combine_fn=combine_fn, updates=updates,
-                                      global_params=state.global_params)
-
-        # the malicious index set comes from the attack strategy, so the
-        # metric stays correct for any placement of the attackers.
-        mal_w = (jnp.sum(weights * self._malicious_mask)
-                 if self._malicious_idx else jnp.zeros(()))
-        # losses of non-participants are discarded work (their training
-        # never left the device) — the mean runs over the sampled subset,
-        # matching the pod round's masked psum
-        metrics = {
-            "local_loss": (jnp.sum(local_loss * part_mask)
-                           / jnp.maximum(jnp.sum(part_mask), 1)
-                           if part_mask is not None
-                           else jnp.mean(local_loss)),
-            "acc_matrix_mean": jnp.mean(acc),
-            "weights": weights,
-            "malicious_weight": mal_w,
-            "scores": scores.scores,
-            "participation_rate": (jnp.mean(part_mask)
-                                   if part_mask is not None
-                                   else jnp.ones(())),
-        }
-        new_state = RoundState(global_params=new_global, scores=scores,
-                               round_idx=state.round_idx + 1, key=state.key)
-        return new_state, metrics
-
-    def _global_eval_impl(self, params, gx, gy):
-        eval_fn = make_eval_fn(self.model)
-        return eval_fn(params, gx, gy)
-
-    # ------------------------------------------------------------------- API
-    def run_round(self, state: RoundState, data: FederatedDataset):
-        return self._round_fn(state, data)
-
-    def global_accuracy(self, state: RoundState, data: FederatedDataset,
-                        max_samples: int = 2048) -> float:
-        return float(self._global_eval(state.global_params,
-                                       data.global_x[:max_samples],
-                                       data.global_y[:max_samples]))
-
-    def run(self, key, data: FederatedDataset, rounds: Optional[int] = None,
-            eval_every: int = 1, verbose: bool = False):
-        """Full training loop; returns (final_state, history dict)."""
-        rounds = rounds if rounds is not None else self.fed.rounds
-        state = self.init(key)
-        history = {"round": [], "global_accuracy": [], "local_loss": [],
-                   "malicious_weight": []}
-        for r in range(rounds):
-            state, metrics = self.run_round(state, data)
-            if (r + 1) % eval_every == 0 or r == rounds - 1:
-                ga = self.global_accuracy(state, data)
-                history["round"].append(r + 1)
-                history["global_accuracy"].append(ga)
-                history["local_loss"].append(float(metrics["local_loss"]))
-                history["malicious_weight"].append(
-                    float(metrics["malicious_weight"]))
-                if verbose:
-                    print(f"round {r+1:4d}  acc={ga:.4f}  "
-                          f"loss={float(metrics['local_loss']):.4f}  "
-                          f"mal_w={float(metrics['malicious_weight']):.4f}")
-        if rounds > 1 and self.num_traces > 1:
-            raise RuntimeError(
-                f"round engine retraced {self.num_traces}x over {rounds} "
-                "rounds — strategy resolution must stay pre-trace")
-        return state, history
+__all__ = [
+    "FederatedTrainer", "RoundState", "aggregator_defaults",
+    "resolve_strategies",
+]

@@ -2,11 +2,13 @@
 per device along the ``clients`` mesh axis.
 
 This is the datacenter deployment path of DESIGN.md §3 (the single-host
-``launch/train.py`` engine is the simulation path). The full adversarial
-scenario matrix runs here: ``--attack`` / ``--malicious`` /
-``--attack-scale`` resolve against the ``ATTACKS`` registry (corruption
-happens per device, before the model exchange) and ``--participation``
-samples a client subset per round. On real hardware the mesh axis maps
+``launch/train.py`` driver is the simulation path); both routes drive
+the *same* ``repro.core.engine.RoundProgram``, on the ring / allgather
+exchange backends here and on the local vmap backend there. The full
+adversarial scenario matrix runs on either: ``--attack`` /
+``--malicious`` / ``--attack-scale`` resolve against the ``ATTACKS``
+registry (corruption happens per device, before the model exchange) and
+``--participation`` samples a client subset per round. On real hardware the mesh axis maps
 onto TPU chips; in this container it runs on host-platform placeholder
 devices:
 
@@ -97,9 +99,8 @@ def main():
 
     from repro.config import FedConfig, TrainConfig
     from repro.configs import get_config, scenario_for_pod
-    from repro.core.distributed import (
-        make_allgather_round, make_distributed_round)
-    from repro.core.round import participation_mask
+    from repro.core.engine import (
+        make_allgather_round, make_distributed_round, round_keys)
     from repro.core.scoring import init_scores
     from repro.data import (CIFAR_LIKE, MNIST_LIKE,
                             make_federated_image_dataset,
@@ -144,32 +145,24 @@ def main():
                             counts=data.train.counts,
                             server_data=(data.server_x[:256],
                                          data.server_y[:256])))
-    from repro.strategies import SELECTORS
-    selector = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
 
     params = model.init(jax.random.PRNGKey(args.seed))
     scores = init_scores(N)
     tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
+    run_key = jax.random.PRNGKey(args.seed + 1)
 
     history = {"round": [], "acc": [], "local_loss": [],
                "malicious_weight": [], "participation_rate": []}
     t0 = time.time()
     for r in range(args.rounds):
-        tester_ids = selector.select(
-            jax.random.fold_in(jax.random.PRNGKey(args.seed + 2), r),
-            N, fed.num_testers, r)
-        mask = jnp.zeros((N,), jnp.float32).at[tester_ids].set(1.0)
-        if fed.participation < 1.0:
-            pmask = participation_mask(
-                jax.random.fold_in(jax.random.PRNGKey(args.seed + 3), r),
-                N, fed.participation)
-        else:
-            pmask = jnp.ones((N,), jnp.float32)
-        bx, by = sample_client_batches(
-            jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), r),
-            data.train, fed.local_steps, tc.batch_size)
+        # the engine derives the tester set and the participation mask
+        # from the round key itself (repro.core.engine.round_keys); the
+        # host only samples the training batches from the same bundle
+        key = jax.random.fold_in(run_key, r)
+        bx, by = sample_client_batches(round_keys(key).batch, data.train,
+                                       fed.local_steps, tc.batch_size)
         params, scores, metrics = round_fn(params, scores, bx, by, tx, ty,
-                                           mask, pmask)
+                                           key, jnp.asarray(r, jnp.int32))
         logits, _ = model.forward_train(params,
                                         {"images": data.global_x[:400]})
         acc = float((jnp.argmax(logits, -1) == data.global_y[:400]).mean())

@@ -119,6 +119,12 @@ def main():
                     choices=list(SELECTORS.names()))
     ap.add_argument("--selector-kwargs", default=None, type=json.loads)
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help=">1 routes steady-state training through the "
+                         "scanned multi-round driver (lax.scan over this "
+                         "many rounds per dispatch, donated state "
+                         "buffers); global accuracy is evaluated at "
+                         "chunk boundaries")
     ap.add_argument("--local-steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
@@ -169,7 +175,8 @@ def main():
                                             num_samples=args.samples,
                                             seed=fed.seed)
 
-    trainer = FederatedTrainer(model, fed, tc)
+    trainer = FederatedTrainer(model, fed, tc,
+                               rounds_per_call=args.rounds_per_call)
     t0 = time.time()
     state, history = trainer.run(jax.random.PRNGKey(fed.seed), data,
                                  verbose=True)

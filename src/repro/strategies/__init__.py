@@ -1,6 +1,6 @@
 """Pluggable strategy registries for the FedTest round engine.
 
-The round engine (:mod:`repro.core.round`) is parameterised by three
+The round engine (:mod:`repro.core.engine`) is parameterised by three
 strategy families, each selected **by name** through :class:`FedConfig`
 and resolved to plain Python objects before jit tracing:
 
@@ -10,7 +10,10 @@ and resolved to plain Python objects before jit tracing:
   ``uniform``).
 * :data:`ATTACKS` — how malicious clients corrupt their models
   (``none``, ``random_weights``, ``sign_flip``, ``label_flip_proxy``,
-  ``scaled_update``), with arbitrary placement of the malicious set.
+  ``scaled_update``, ``adaptive_scale``), with arbitrary placement of
+  the malicious set; each corruption receives the round's
+  :class:`AttackContext` so adaptive attacks can read the
+  cross-testing signal.
 * :data:`SELECTORS` — which K clients tester each round (``rotating``,
   ``round_robin``, ``fixed``).
 
@@ -27,8 +30,8 @@ See README.md §"Writing a strategy".
 """
 from repro.strategies.base import (
     AGGREGATORS, ATTACKS, SELECTORS,
-    Aggregator, Attack, Registry, RoundContext, Selector, register,
-    uses_combine)
+    Aggregator, Attack, AttackContext, Registry, RoundContext, Selector,
+    register, uses_combine)
 # importing the submodules populates the registries
 from repro.strategies import aggregators as _aggregators  # noqa: F401
 from repro.strategies import attacks as _attacks          # noqa: F401
@@ -36,6 +39,6 @@ from repro.strategies import selectors as _selectors      # noqa: F401
 
 __all__ = [
     "AGGREGATORS", "ATTACKS", "SELECTORS",
-    "Aggregator", "Attack", "Selector",
+    "Aggregator", "Attack", "AttackContext", "Selector",
     "Registry", "RoundContext", "register", "uses_combine",
 ]

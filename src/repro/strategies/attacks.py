@@ -17,10 +17,16 @@ last client slots.
   unit scale so magnitude statistics look honest.
 * ``scaled_update``    — model-replacement magnification
   ``g + scale*(t - g)`` [Bagdasaryan et al.].
+* ``adaptive_scale``   — adaptive attacker exploiting the cross-testing
+  signal: corrupts (sign-flip at ``scale``) only while its *own*
+  aggregation weight — read from the round's :class:`AttackContext` —
+  stays above ``weight_threshold / N``; once FedTest suppresses it, it
+  sends the honest update to farm its score back up, then re-attacks.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.attacks import _random_weights, _scaled_update, _sign_flip
 from repro.strategies.base import ATTACKS, Attack, register
@@ -37,10 +43,11 @@ class NoAttack(Attack):
     def malicious_indices(self, num_users):
         return ()
 
-    def apply(self, key, stacked_params, global_params):
+    def apply(self, key, stacked_params, global_params, ctx=None):
         return stacked_params
 
-    def corrupt(self, key, trained, global_params):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
         return trained
 
 
@@ -48,7 +55,8 @@ class NoAttack(Attack):
 class RandomWeights(Attack):
     """Paper Sec. IV: malicious users send random weights."""
 
-    def corrupt(self, key, trained, global_params):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
         return _random_weights(key, trained, global_params, self.scale)
 
 
@@ -56,7 +64,8 @@ class RandomWeights(Attack):
 class SignFlip(Attack):
     """Gradient-ascent update: ``global - scale * (trained - global)``."""
 
-    def corrupt(self, key, trained, global_params):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
         return _sign_flip(key, trained, global_params, self.scale)
 
 
@@ -77,8 +86,50 @@ class LabelFlipProxy(Attack):
         super().__init__(num_malicious=num_malicious, scale=1.0,
                          placement=placement, indices=indices)
 
-    def corrupt(self, key, trained, global_params):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
         return _sign_flip(key, trained, global_params, 1.0)
+
+
+@register(ATTACKS, "adaptive_scale")
+class AdaptiveScale(Attack):
+    """Adaptive attacker that exploits the cross-testing signal.
+
+    The FedTest defence pays a client by its moving-average score; a
+    rational attacker therefore corrupts only while the federation is
+    still buying its update. Each round the malicious client reads its
+    own implied aggregation weight from the :class:`AttackContext`
+    (``ctx.weights[client_idx]``): at or above ``weight_threshold / N``
+    (i.e. the given fraction of the uniform share) it sends the
+    sign-flipped update at ``scale``; below it, it sends the *honest*
+    trained update so the testers rebuild its score — then strikes
+    again. This is the ROADMAP's "adaptive attacks that exploit the
+    cross-testing signal" beachhead, expressed once through the unified
+    engine seam (DESIGN.md §2) so it runs identically on every exchange
+    backend. Without a context (legacy callers) it degrades to an
+    unconditional sign-flip.
+    """
+
+    def __init__(self, *, num_malicious: int = 0, scale: float = 4.0,
+                 weight_threshold: float = 0.5, placement: str = "last",
+                 indices=None):
+        super().__init__(num_malicious=num_malicious, scale=scale,
+                         placement=placement, indices=indices)
+        if not 0.0 <= weight_threshold:
+            raise ValueError(
+                f"weight_threshold must be >= 0, got {weight_threshold}")
+        self.weight_threshold = float(weight_threshold)
+
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        bad = _sign_flip(key, trained, global_params, self.scale)
+        if ctx is None or client_idx is None:
+            return bad
+        my_weight = ctx.weights[client_idx]
+        engaged = my_weight >= self.weight_threshold / ctx.num_users
+        return jax.tree_util.tree_map(
+            lambda t, b: jnp.where(engaged, b.astype(t.dtype), t),
+            trained, bad)
 
 
 @register(ATTACKS, "scaled_update")
@@ -86,5 +137,6 @@ class ScaledUpdate(Attack):
     """Model replacement: magnify the local update by ``scale``
     (``FedConfig.attack_scale``; >1 to actually attack)."""
 
-    def corrupt(self, key, trained, global_params):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
         return _scaled_update(key, trained, global_params, self.scale)

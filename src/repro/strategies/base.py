@@ -32,6 +32,28 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax.numpy as jnp
 
 
+class AttackContext(NamedTuple):
+    """Frozen per-round view handed to attack strategies (step 3).
+
+    Built by the round engine *before* corruption so adaptive attacks can
+    react to the cross-testing signal: ``scores`` are the moving-average
+    scores entering the round and ``weights`` the aggregation weights
+    those scores imply (``score_weights``), i.e. what each client would
+    have been paid had the round ended now. A malicious client reads its
+    own entry (``weights[client_idx]``) to decide whether its corruption
+    is still being bought. All fields are traced arrays; ``None`` context
+    (legacy callers) must keep every attack functional.
+    """
+
+    scores: jnp.ndarray                # [N] moving-average scores (pre-round)
+    weights: jnp.ndarray               # [N] implied aggregation weights
+    round_idx: jnp.ndarray             # scalar i32
+
+    @property
+    def num_users(self) -> int:
+        return self.weights.shape[0]
+
+
 class RoundContext(NamedTuple):
     """Frozen per-round view handed to aggregation strategies.
 
@@ -58,10 +80,10 @@ class RoundContext(NamedTuple):
     participation: Optional[jnp.ndarray] = None
     # [K] 0/1 mask over the *rows* of ``acc_matrix``: which of this
     # round's testers actually reported (non-sampled testers transmit
-    # nothing). The single-host engine sets it to
-    # ``participation[tester_ids]``; the pod path leaves it ``None``
-    # because its tester ``psum`` is already participation-masked before
-    # the context is built (DESIGN.md §3).
+    # nothing). The engine sets it to ``participation[tester_ids]`` on
+    # every backend — the accuracy matrix is replicated before the
+    # context is built, never pre-masked (DESIGN.md §2) — and leaves it
+    # ``None`` under full participation.
     report_mask: Optional[jnp.ndarray] = None
 
     @property
@@ -236,14 +258,27 @@ class Attack:
             mask[i] = 1.0
         return jnp.asarray(mask, jnp.float32)
 
-    def corrupt(self, key, trained, global_params):
-        """Produce one malicious client's model (pytree -> pytree)."""
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        """Produce one malicious client's model (pytree -> pytree).
+
+        ``ctx`` is the round's :class:`AttackContext` (``None`` from
+        legacy callers) and ``client_idx`` the corrupting client's index
+        (static int on the stacked path, traced under SPMD) — adaptive
+        attacks read their own score / weight through them; oblivious
+        attacks ignore both.
+        """
         raise NotImplementedError
 
-    def apply(self, key, stacked_params, global_params):
-        """Swap corrupted models into the malicious slots of the stack."""
+    def apply(self, key, stacked_params, global_params, ctx=None):
+        """Swap corrupted models into the malicious slots of the stack.
+
+        The per-client key is ``fold_in(key, client_idx)`` — the same
+        derivation :meth:`apply_local` uses per shard, so a key-consuming
+        attack corrupts client ``c`` bit-identically on every exchange
+        backend given the same round key.
+        """
         import jax
-        from repro.utils.prng import key_iter
         leaves = jax.tree_util.tree_leaves(stacked_params)
         if not leaves:
             return stacked_params
@@ -252,11 +287,11 @@ class Attack:
         if not idx:
             return stacked_params
         bad = []
-        ks = key_iter(key)      # same stream as the legacy apply_attacks
         for c in idx:
             trained = jax.tree_util.tree_map(lambda a, _c=c: a[_c],
                                              stacked_params)
-            bad.append(self.corrupt(next(ks), trained, global_params))
+            bad.append(self.corrupt(jax.random.fold_in(key, c), trained,
+                                    global_params, ctx, c))
 
         def merge(stack, *bad_leaves):
             for c, bl in zip(idx, bad_leaves):
@@ -266,8 +301,8 @@ class Attack:
         return jax.tree_util.tree_map(merge, stacked_params, *bad)
 
     def apply_local(self, key, params, global_params, client_idx,
-                    num_users: int):
-        """Per-shard attack application — the pod path's step 3.
+                    num_users: int, ctx=None):
+        """Per-shard attack application — the pod backends' step 3.
 
         ``params`` is ONE client's pytree (no stacked client axis, the
         layout inside a ``shard_map`` body) and ``client_idx`` the traced
@@ -277,13 +312,16 @@ class Attack:
         corrupted model is computed unconditionally and selected with
         ``where`` — honest devices pay one corruption's worth of (cheap,
         elementwise) compute and keep their trained params bit-exactly.
+        The per-client key folds ``client_idx`` exactly like :meth:`apply`
+        folds the stacked slot, so the two paths corrupt bit-identically.
         """
         idx = self.malicious_indices(num_users)
         if not idx:
             return params
         import jax
         is_mal = self.malicious_mask(num_users)[client_idx] > 0
-        bad = self.corrupt(key, params, global_params)
+        bad = self.corrupt(jax.random.fold_in(key, client_idx), params,
+                           global_params, ctx, client_idx)
         return jax.tree_util.tree_map(
             lambda t, b: jnp.where(is_mal, b.astype(t.dtype), t),
             params, bad)

@@ -1,0 +1,96 @@
+"""tools/check_bench.py — the BENCH_*.json roofline-fraction CI gate."""
+import importlib.util
+import json
+from pathlib import Path
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parent.parent / "tools" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def row(name, frac=None, **extra):
+    r = {"name": name, "us_per_call": 1.0, "derived": "", **extra}
+    if frac is not None:
+        r["roofline_frac"] = frac
+    return r
+
+
+def test_within_tolerance_passes():
+    base = [row("k/a", 0.90), row("k/b", 0.50)]
+    fresh = [row("k/a", 0.80), row("k/b", 0.47)]    # -11%, -6%
+    assert check_bench.compare_rows(base, fresh, tolerance=0.15) == []
+
+
+def test_regression_beyond_tolerance_fails():
+    base = [row("k/a", 0.90)]
+    fresh = [row("k/a", 0.70)]                      # -22%
+    errs = check_bench.compare_rows(base, fresh, tolerance=0.15)
+    assert len(errs) == 1 and "k/a" in errs[0]
+
+
+def test_improvements_and_new_rows_pass():
+    base = [row("k/a", 0.50)]
+    fresh = [row("k/a", 0.95), row("k/new", 0.10)]
+    assert check_bench.compare_rows(base, fresh) == []
+
+
+def test_dropped_tracked_row_fails():
+    base = [row("k/a", 0.90), row("k/b", 0.50)]
+    fresh = [row("k/a", 0.90)]
+    errs = check_bench.compare_rows(base, fresh)
+    assert len(errs) == 1 and "disappeared" in errs[0]
+
+
+def test_rows_without_fraction_are_ignored():
+    base = [row("k/latency_only"), row("k/a", 0.9)]
+    fresh = [row("k/a", 0.9)]                       # latency row dropped
+    assert check_bench.compare_rows(base, fresh) == []
+
+
+def test_noise_floor_rows_are_not_gated():
+    """Compute-bound fractions below min_frac measure the host, not the
+    code — reported in the artifact, never gated."""
+    base = [row("k/flash", 0.005), row("k/stream", 0.90)]
+    fresh = [row("k/flash", 0.001), row("k/stream", 0.89)]  # flash -80%
+    assert check_bench.compare_rows(base, fresh) == []
+    # raising min_frac pulls a row back into the gate
+    errs = check_bench.compare_rows(base, fresh, min_frac=0.004)
+    assert len(errs) == 1 and "k/flash" in errs[0]
+
+
+def test_lost_fraction_field_fails():
+    base = [row("k/a", 0.9)]
+    fresh = [row("k/a")]
+    errs = check_bench.compare_rows(base, fresh)
+    assert len(errs) == 1 and "lost" in errs[0]
+
+
+def test_main_end_to_end_with_baseline_dir(tmp_path):
+    baseline = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    baseline.mkdir()
+    fresh.mkdir()
+    (baseline / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.9)]))
+    (fresh / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.88)]))
+    ok = check_bench.main(["--fresh-dir", str(fresh),
+                           "--baseline-dir", str(baseline)])
+    assert ok == 0
+    (fresh / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.30)]))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 1
+    # a suite with no baseline yet passes (first emission)
+    (fresh / "BENCH_other.json").write_text(json.dumps([row("o/a", 0.5)]))
+    (fresh / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.9)]))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 0
+    # an empty fresh dir is an error (the bench never ran)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert check_bench.main(["--fresh-dir", str(empty),
+                             "--baseline-dir", str(baseline)]) == 1

@@ -1,5 +1,6 @@
 """shard_map FedTest round on 8 host-platform devices (subprocess, so the
-device-count flag never leaks into other tests)."""
+device-count flag never leaks into other tests). Both pod exchange
+backends drive the unified ``repro.core.engine.RoundProgram``."""
 import json
 import os
 import subprocess
@@ -18,9 +19,8 @@ from jax.sharding import Mesh
 
 from repro.config import FedConfig, TrainConfig
 from repro.configs import get_config
-from repro.core.distributed import (
-    make_allgather_round, make_distributed_round, ring_cross_test)
-from repro.core.cross_testing import cross_test_accuracies
+from repro.core.engine import (
+    make_allgather_round, make_distributed_round, round_keys)
 from repro.core.scoring import init_scores
 from repro.data import MNIST_LIKE, make_federated_image_dataset, \
     sample_client_batches
@@ -38,22 +38,23 @@ tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
 data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
                                     global_test=200, seed=0)
 
-round_fn = make_distributed_round(model, fed, tc, mesh)
-ag_round_fn = make_allgather_round(model, fed, tc, mesh)
+round_fn = jax.jit(make_distributed_round(model, fed, tc, mesh))
+ag_round_fn = jax.jit(make_allgather_round(model, fed, tc, mesh))
 
 params = model.init(jax.random.PRNGKey(0))
 scores = init_scores(N)
-bx, by = sample_client_batches(jax.random.PRNGKey(1), data.train,
+run_key = jax.random.PRNGKey(1)
+key0 = jax.random.fold_in(run_key, 0)
+bx, by = sample_client_batches(round_keys(key0).batch, data.train,
                                fed.local_steps, tc.batch_size)
 tx = data.test.xs[:, :64]
 ty = data.test.ys[:, :64]
-mask = jnp.ones((N,), jnp.float32)
-pmask = jnp.ones((N,), jnp.float32)
+r0 = jnp.asarray(0, jnp.int32)
 
-new_global, new_scores, metrics = jax.jit(round_fn)(
-    params, scores, bx, by, tx, ty, mask, pmask)
-ag_global, ag_scores, ag_metrics = jax.jit(ag_round_fn)(
-    params, scores, bx, by, tx, ty, mask, pmask)
+new_global, new_scores, metrics = round_fn(
+    params, scores, bx, by, tx, ty, key0, r0)
+ag_global, ag_scores, ag_metrics = ag_round_fn(
+    params, scores, bx, by, tx, ty, key0, r0)
 
 # ring and all-gather paths must agree exactly (same math, diff schedule)
 ring_w = np.asarray(metrics["weights"])
@@ -69,10 +70,12 @@ leaf_err = max(
 # rounds: with 8 tiny clients the first rounds are noise-dominated)
 g = new_global
 s = new_scores
-for r in range(2, 7):
-    bx, by = sample_client_batches(jax.random.PRNGKey(r), data.train,
+for r in range(1, 6):
+    key = jax.random.fold_in(run_key, r)
+    bx, by = sample_client_batches(round_keys(key).batch, data.train,
                                    fed.local_steps, tc.batch_size)
-    g, s, metrics = jax.jit(round_fn)(g, s, bx, by, tx, ty, mask, pmask)
+    g, s, metrics = round_fn(g, s, bx, by, tx, ty, key,
+                             jnp.asarray(r, jnp.int32))
 
 logits, _ = model.forward_train(g, {"images": data.global_x[:256]})
 acc = float((jnp.argmax(logits, -1) == data.global_y[:256]).mean())
@@ -91,12 +94,14 @@ g = model.init(jax.random.PRNGKey(0))
 s = init_scores(N)
 atx = adv_data.test.xs[:, :64]
 aty = adv_data.test.ys[:, :64]
+adv_key = jax.random.PRNGKey(100)
 mal_w = []
 for r in range(8):
-    bx, by = sample_client_batches(jax.random.PRNGKey(100 + r),
-                                   adv_data.train, adv_fed.local_steps,
-                                   tc.batch_size)
-    g, s, m = adv_round(g, s, bx, by, atx, aty, mask, pmask)
+    key = jax.random.fold_in(adv_key, r)
+    bx, by = sample_client_batches(round_keys(key).batch, adv_data.train,
+                                   adv_fed.local_steps, tc.batch_size)
+    g, s, m = adv_round(g, s, bx, by, atx, aty, key,
+                        jnp.asarray(r, jnp.int32))
     mal_w.append(float(m["malicious_weight"]))
 
 print(json.dumps({"max_w_err": max_w_err, "leaf_err": leaf_err,
@@ -105,27 +110,29 @@ print(json.dumps({"max_w_err": max_w_err, "leaf_err": leaf_err,
 """
 
 
-def test_pod_path_accepts_participation_and_resolves_attacks():
-    """PR 3 removed the single-host-only guards: client sampling and any
-    registered attack now resolve on the pod path too."""
+def test_pod_builders_resolve_strategies_from_fed():
+    """Both pod builders resolve the full strategy triple through the
+    same ``resolve_strategies`` as the local backend."""
     from repro.config import FedConfig
-    from repro.core.distributed import _resolve_aggregator, _resolve_attack
-    agg = _resolve_aggregator(FedConfig(participation=0.5), None)
+    from repro.core.engine import resolve_strategies
+    agg, atk, sel = resolve_strategies(FedConfig(participation=0.5))
     assert agg.name == "fedtest"
-    atk = _resolve_attack(FedConfig(attack="sign_flip", num_malicious=2,
-                                    num_users=8))
+    agg, atk, sel = resolve_strategies(
+        FedConfig(attack="sign_flip", num_malicious=2, num_users=8))
     assert atk.name == "sign_flip"
     assert atk.malicious_indices(8) == (6, 7)
+    # an Aggregator instance passes through unchanged
+    override, _, _ = resolve_strategies(FedConfig(), aggregator=agg)
+    assert override is agg
 
 
 def test_pod_builder_requires_server_data_for_server_eval():
     """Server-eval aggregators run on the pod only when the builder gets
     the replicated server set to close over."""
-    import numpy as np
     import pytest as _pytest
     from repro.config import FedConfig, TrainConfig
     from repro.configs import get_config
-    from repro.core.distributed import _make_pod_round
+    from repro.core.engine import make_pod_round
     from repro.models import build_model
 
     class FakeMesh:
@@ -136,34 +143,57 @@ def test_pod_builder_requires_server_data_for_server_eval():
     model = build_model(cfg)
     fed = FedConfig(num_users=4, num_testers=4, aggregator="accuracy_based")
     with _pytest.raises(ValueError, match="server"):
-        _make_pod_round(model, fed, TrainConfig(), FakeMesh(), "clients",
-                        None, None, None, "ring")
+        make_pod_round(model, fed, TrainConfig(), FakeMesh())
+
+
+def test_pod_builder_rejects_mismatched_client_count():
+    """The pod pins one client per device; a FedConfig sized for a
+    different federation must fail loudly at build time."""
+    import pytest as _pytest
+    from repro.config import FedConfig, TrainConfig
+    from repro.configs import get_config
+    from repro.core.engine import make_pod_round
+    from repro.models import build_model
+
+    class FakeMesh:
+        shape = {"clients": 4}
+
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                                  cnn_hidden=16)
+    model = build_model(cfg)
+    fed = FedConfig(num_users=8, num_testers=4)
+    with _pytest.raises(ValueError, match="num_users"):
+        make_pod_round(model, fed, TrainConfig(), FakeMesh())
 
 
 def test_apply_local_matches_stacked_apply():
-    """Per-shard attack application selects exactly the stacked apply's
-    corruption for malicious slots and is the identity elsewhere."""
+    """Per-shard attack application corrupts each client bit-identically
+    to the stacked apply (both fold the per-client key from the same
+    base key) and is the identity elsewhere."""
     import jax
     import jax.numpy as jnp
     import numpy as np
     from repro.strategies import ATTACKS
 
-    atk = ATTACKS.build("sign_flip", {"placement": "first"},
+    n = 5
+    atk = ATTACKS.build("random_weights", {"placement": "first"},
                         {"num_malicious": 2, "scale": 1.5})
     g = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
          "b": jnp.ones((3,), jnp.float32)}
     key = jax.random.PRNGKey(0)
-    trained = jax.tree_util.tree_map(
-        lambda x: x + 0.1 * jax.random.normal(key, x.shape), g)
-    n = 5
+    stacked = jax.tree_util.tree_map(
+        lambda x: (jnp.broadcast_to(x[None], (n,) + x.shape)
+                   + 0.1 * jax.random.normal(key, (n,) + x.shape)), g)
+    applied = atk.apply(key, stacked, g)
     for c in range(n):
+        trained = jax.tree_util.tree_map(lambda a, _c=c: a[_c], stacked)
         local = atk.apply_local(key, trained, g, jnp.asarray(c), n)
-        expect = atk.corrupt(key, trained, g) if c in (0, 1) else trained
+        expect = jax.tree_util.tree_map(lambda a, _c=c: a[_c], applied)
         for a, b in zip(jax.tree_util.tree_leaves(local),
                         jax.tree_util.tree_leaves(expect)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     none = ATTACKS.build("none", {}, {"num_malicious": 3})
+    trained = jax.tree_util.tree_map(lambda a: a[0], stacked)
     local = none.apply_local(key, trained, g, jnp.asarray(0), n)
     assert all((np.asarray(a) == np.asarray(b)).all() for a, b in
                zip(jax.tree_util.tree_leaves(local),

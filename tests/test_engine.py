@@ -1,0 +1,183 @@
+"""Unified round engine: scanned multi-round driver + AttackContext seam.
+
+The single-round and scanned drivers share one round body
+(``RoundProgram.run`` on the local backend), so ``rounds_per_call > 1``
+must reproduce the per-round trajectory bit-exactly while tracing the
+body once; the :class:`AttackContext` threads the cross-testing signal
+into ``Attack.corrupt`` so adaptive attacks (``adaptive_scale``) can
+react to their own aggregation weight.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.models import build_model
+from repro.strategies import ATTACKS, Attack, register
+from repro.strategies.base import AttackContext
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                                  cnn_hidden=16)
+    model = build_model(cfg)
+    data = make_federated_image_dataset(MNIST_LIKE, 4, num_samples=800,
+                                        global_test=200, seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=8, grad_clip=0.0, remat=False)
+    return model, data, tc
+
+
+# ------------------------------------------------------ scanned driver
+def test_scanned_driver_matches_single_round_bitwise(tiny_setup):
+    """lax.scan over rounds_per_call rounds == the same rounds dispatched
+    one by one — same body, same keys, bit-identical final state."""
+    model, data, tc = tiny_setup
+    fed = FedConfig(num_users=4, num_testers=2, num_malicious=1,
+                    local_steps=2, attack="sign_flip", attack_scale=4.0)
+    single = FederatedTrainer(model, fed, tc, eval_batch=64)
+    scanned = FederatedTrainer(model, fed, tc, eval_batch=64,
+                               rounds_per_call=4)
+    s_state, s_hist = single.run(jax.random.PRNGKey(0), data, rounds=8)
+    c_state, c_hist = scanned.run(jax.random.PRNGKey(0), data, rounds=8)
+    for a, b in zip(jax.tree_util.tree_leaves(s_state.global_params),
+                    jax.tree_util.tree_leaves(c_state.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s_state.scores.scores),
+                                  np.asarray(c_state.scores.scores))
+    assert int(c_state.round_idx) == 8
+    # one fused program per chunk: the body traced exactly once
+    assert scanned.num_traces == 1
+    # chunk-boundary evals line up with the single-round driver's
+    assert c_hist["round"] == [4, 8]
+    for r, ga in zip(c_hist["round"], c_hist["global_accuracy"]):
+        assert ga == pytest.approx(
+            s_hist["global_accuracy"][s_hist["round"].index(r)])
+
+
+def test_scanned_driver_remainder_rounds(tiny_setup):
+    """rounds not divisible by rounds_per_call: the remainder falls back
+    to the single-round driver (a second compiled program, one trace)."""
+    model, data, tc = tiny_setup
+    fed = FedConfig(num_users=4, num_testers=2, local_steps=2,
+                    attack="none")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64,
+                               rounds_per_call=3)
+    state, hist = trainer.run(jax.random.PRNGKey(0), data, rounds=5)
+    assert int(state.round_idx) == 5
+    assert trainer.num_traces == 2          # scan body + single body
+
+
+# --------------------------------------------------- AttackContext seam
+def test_attack_context_reaches_corrupt(tiny_setup):
+    """The engine hands every corruption the round's AttackContext."""
+    model, data, tc = tiny_setup
+    seen = {}
+
+    name = "test_only_ctx_probe"
+    if name not in ATTACKS:
+        @register(ATTACKS, name)
+        class CtxProbe(Attack):
+            def corrupt(self, key, trained, global_params, ctx=None,
+                        client_idx=None):
+                seen["ctx"] = ctx
+                seen["client_idx"] = client_idx
+                return trained
+
+    fed = FedConfig(num_users=4, num_testers=2, num_malicious=1,
+                    local_steps=2, attack=name)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    trainer.run_round(state, data)
+    ctx = seen["ctx"]
+    assert isinstance(ctx, AttackContext)
+    assert ctx.num_users == 4
+    assert ctx.scores.shape == (4,) and ctx.weights.shape == (4,)
+    assert seen["client_idx"] == 3          # placement='last', m=1
+
+
+def test_adaptive_scale_engages_on_weight_threshold():
+    """adaptive_scale corrupts iff its own implied weight clears the
+    threshold fraction of the uniform share."""
+    atk = ATTACKS.build("adaptive_scale", {"weight_threshold": 0.5},
+                        {"num_malicious": 1, "scale": 4.0})
+    g = {"w": jnp.zeros((3,), jnp.float32)}
+    trained = {"w": jnp.ones((3,), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    mk = lambda w: AttackContext(scores=jnp.asarray(w),
+                                 weights=jnp.asarray(w),
+                                 round_idx=jnp.zeros((), jnp.int32))
+    # weight above 0.5/4: attack (sign-flip at scale 4 -> -4)
+    hot = atk.corrupt(key, trained, g, mk([0.25, 0.25, 0.25, 0.25]), 3)
+    np.testing.assert_allclose(np.asarray(hot["w"]), -4.0)
+    # suppressed below the threshold: send the honest update
+    cold = atk.corrupt(key, trained, g, mk([0.33, 0.33, 0.33, 0.01]), 3)
+    np.testing.assert_allclose(np.asarray(cold["w"]), 1.0)
+    # no context (legacy caller): unconditional corruption
+    legacy = atk.corrupt(key, trained, g)
+    np.testing.assert_allclose(np.asarray(legacy["w"]), -4.0)
+
+
+def test_adaptive_scale_oscillates_against_fedtest(tiny_setup):
+    """End-to-end: once FedTest suppresses the adaptive attacker it goes
+    honest (its next corruption is withheld), so the engine runs jitted
+    with no retrace and the malicious weight stays bounded."""
+    model, data, tc = tiny_setup
+    data = make_federated_image_dataset(
+        MNIST_LIKE, 4, num_samples=800, global_test=200, seed=0,
+        partition_kwargs={"min_classes": 8, "max_classes": 10})
+    fed = FedConfig(num_users=4, num_testers=3, num_malicious=1,
+                    local_steps=6, attack="adaptive_scale",
+                    attack_scale=4.0)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(1))
+    mal_w = []
+    for _ in range(6):
+        state, metrics = trainer.run_round(state, data)
+        mal_w.append(float(metrics["malicious_weight"]))
+    assert trainer.num_traces == 1
+    assert all(np.isfinite(mal_w))
+    # the defence still caps the adaptive attacker below uniform share
+    assert mal_w[-1] < 0.25, mal_w
+
+
+# ------------------------------------------------- engine odds and ends
+def test_lying_testers_run_on_every_backend_config(tiny_setup):
+    """The unified program applies lies on the replicated [K, N] matrix,
+    so lying_testers is no longer a single-host-only feature."""
+    from jax.sharding import Mesh
+    from repro.core.engine import make_pod_round
+
+    model, data, tc = tiny_setup
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("clients",))
+    fed = FedConfig(num_users=1, num_testers=1, lying_testers=1,
+                    local_steps=2)
+    # builds without the historical ValueError; multi-device tracing is
+    # exercised by the shard_map subprocess tests
+    fn = make_pod_round(model, fed, tc, mesh)
+    assert callable(fn)
+
+
+def test_shared_eval_fn_is_hoisted(tiny_setup, monkeypatch):
+    """make_eval_fn runs exactly once, in the program constructor — the
+    round body and the global-accuracy closure must reuse that instance
+    instead of rebuilding it per trace (the pre-unification bug)."""
+    import repro.core.engine.program as program_mod
+    model, data, tc = tiny_setup
+    calls = []
+    real = program_mod.make_eval_fn
+    monkeypatch.setattr(program_mod, "make_eval_fn",
+                        lambda m: (calls.append(1), real(m))[1])
+    fed = FedConfig(num_users=4, num_testers=2, local_steps=2)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    state, _ = trainer.run_round(state, data)
+    acc = trainer.global_accuracy(state, data, max_samples=64)
+    assert 0.0 <= acc <= 1.0
+    assert len(calls) == 1, f"make_eval_fn built {len(calls)}x"

@@ -1,15 +1,20 @@
-"""Single-host engine vs pod (shard_map) round parity.
+"""Three-backend equivalence matrix for the unified round engine.
 
-The tentpole contract of the adversarial pod path (DESIGN.md §3): under
-``sign_flip`` + ``participation=0.75`` both engines, driven by the same
-seeds, must produce matching malicious-weight suppression and matching
-sampled-subset renormalisation. The pod subprocess replays the
-single-host engine's exact per-round key schedule (``fold_in(state.key,
-round)`` then ``split(·, 4)`` / ``fold_in(·, 6)``) so both see identical
-batches, tester sets and participation masks; sign_flip is key-free, so
-the only remaining divergence is floating-point reassociation between the
-vmap'd stack and the per-device psum — hence tight-but-not-bitwise
-tolerances on the dynamics and a loose one on accuracy.
+The tentpole contract of ``repro.core.engine`` (DESIGN.md §2 and §3): the
+``local`` (vmap), ``ring`` and ``allgather`` (shard_map) exchange
+backends drive one shared ``RoundProgram``, so replaying the same key
+schedule across {no_attack, sign_flip, adaptive_scale} x
+{participation 1.0, 0.75} must produce **bit-identical** weights,
+scores and malicious-weight trajectories on all three — the backends
+exchange models differently but score the identical replicated
+accuracy matrix through identical code.
+
+The pod rounds run in a subprocess (device-count flag) and replay the
+single-host driver's exact per-round schedule: base key
+``fold_in(state.key, round)``, the ``round_keys`` bundle derived from
+it, batches sampled host-side from ``keys.batch``; tester ids and the
+participation mask are derived *inside* the round by the program
+itself, so nothing topology-side can drift.
 """
 import json
 import os
@@ -19,7 +24,11 @@ import sys
 import numpy as np
 import pytest
 
-ROUNDS = 8
+ROUNDS = 4
+CASES = [("none", 1.0), ("none", 0.75),
+         ("sign_flip", 1.0), ("sign_flip", 0.75),
+         ("adaptive_scale", 1.0), ("adaptive_scale", 0.75)]
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -32,102 +41,122 @@ from jax.sharding import Mesh
 from repro.config import FedConfig, TrainConfig
 from repro.configs import get_config
 from repro.core import FederatedTrainer
-from repro.core.distributed import make_distributed_round
-from repro.core.round import participation_mask
+from repro.core.engine import (
+    make_allgather_round, make_distributed_round, participation_mask,
+    round_keys)
 from repro.core.scoring import init_scores
 from repro.data import MNIST_LIKE, make_federated_image_dataset, \
     sample_client_batches
 from repro.models import build_model
-from repro.strategies import SELECTORS
 
 N = 4
 ROUNDS = %(rounds)d
+CASES = %(cases)r
 cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
                                               cnn_hidden=16)
 model = build_model(cfg)
-fed = FedConfig(num_users=N, num_testers=N, num_malicious=1,
-                attack="sign_flip", attack_scale=4.0, participation=0.75,
-                local_steps=6, seed=0)
 tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
                  batch_size=8, grad_clip=0.0, remat=False)
 data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
                                     global_test=256, seed=0,
                                     partition_kwargs={"min_classes": 8,
                                                       "max_classes": 10})
-
-# ---- single-host engine -------------------------------------------------
-trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
-state = trainer.init(jax.random.PRNGKey(0))
-host = {"w": [], "mal_w": [], "rate": []}
-for r in range(ROUNDS):
-    state, m = trainer.run_round(state, data)
-    host["w"].append(np.asarray(m["weights"]).tolist())
-    host["mal_w"].append(float(m["malicious_weight"]))
-    host["rate"].append(float(m["participation_rate"]))
-host_acc = trainer.global_accuracy(state, data, max_samples=256)
-
-# ---- pod engine, replaying the identical key schedule -------------------
 mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
-round_fn = jax.jit(make_distributed_round(model, fed, tc, mesh,
-                                          counts=data.train.counts))
-selector = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
-
-pk, rk = jax.random.split(jax.random.PRNGKey(0))
-g = model.init(pk)                      # same init as trainer.init
-s = init_scores(N)
 tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
-pod = {"w": [], "mal_w": [], "rate": [], "pmask": []}
-for r in range(ROUNDS):
-    key = jax.random.fold_in(rk, r)     # _round's fold_in(state.key, idx)
-    k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
-    k_part = jax.random.fold_in(key, 6)
-    bx, by = sample_client_batches(k_batch, data.train, fed.local_steps,
-                                   tc.batch_size)
-    tester_ids = selector.select(k_test, N, fed.num_testers, r)
-    mask = jnp.zeros((N,), jnp.float32).at[tester_ids].set(1.0)
-    pmask = participation_mask(k_part, N, fed.participation)
-    g, s, m = round_fn(g, s, bx, by, tx, ty, mask, pmask)
-    pod["w"].append(np.asarray(m["weights"]).tolist())
-    pod["mal_w"].append(float(m["malicious_weight"]))
-    pod["rate"].append(float(m["participation_rate"]))
-    pod["pmask"].append(np.asarray(pmask).tolist())
 
-logits, _ = model.forward_train(g, {"images": data.global_x[:256]})
-pod_acc = float((jnp.argmax(logits, -1) == data.global_y[:256]).mean())
+results = {}
+for attack, participation in CASES:
+    fed = FedConfig(num_users=N, num_testers=N,
+                    num_malicious=0 if attack == "none" else 1,
+                    attack=attack, attack_scale=4.0,
+                    participation=participation, local_steps=6, seed=0)
 
-print(json.dumps({"host": host, "pod": pod,
-                  "host_acc": host_acc, "pod_acc": pod_acc}))
-""" % {"rounds": ROUNDS}
+    # ---- local (vmap) backend via the single-host driver --------------
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    run_key = state.key
+    traj = {"local": {"w": [], "s": [], "mal_w": [], "rate": []},
+            "ring": {"w": [], "s": [], "mal_w": [], "rate": []},
+            "allgather": {"w": [], "s": [], "mal_w": [], "rate": []},
+            "pmask": []}
+    for r in range(ROUNDS):
+        state, m = trainer.run_round(state, data)
+        traj["local"]["w"].append(np.asarray(m["weights"]).tolist())
+        traj["local"]["s"].append(np.asarray(m["scores"]).tolist())
+        traj["local"]["mal_w"].append(float(m["malicious_weight"]))
+        traj["local"]["rate"].append(float(m["participation_rate"]))
+        # replay the engine's own mask derivation to pin zero patterns
+        keys = round_keys(jax.random.fold_in(run_key, r))
+        pmask = (participation_mask(keys.part, N, participation)
+                 if participation < 1.0 else jnp.ones((N,)))
+        traj["pmask"].append(np.asarray(pmask).tolist())
+    assert trainer.num_traces == 1, trainer.num_traces
+
+    # ---- ring / allgather backends, replaying the same schedule -------
+    pk, _ = jax.random.split(jax.random.PRNGKey(0))
+    for exchange, make in [("ring", make_distributed_round),
+                           ("allgather", make_allgather_round)]:
+        round_fn = jax.jit(make(model, fed, tc, mesh,
+                                counts=data.train.counts))
+        g = model.init(pk)                  # same init as trainer.init
+        s = init_scores(N)
+        for r in range(ROUNDS):
+            key = jax.random.fold_in(run_key, r)
+            bx, by = sample_client_batches(round_keys(key).batch,
+                                           data.train, fed.local_steps,
+                                           tc.batch_size)
+            g, s, m = round_fn(g, s, bx, by, tx, ty, key,
+                               jnp.asarray(r, jnp.int32))
+            traj[exchange]["w"].append(np.asarray(m["weights"]).tolist())
+            traj[exchange]["s"].append(np.asarray(m["scores"]).tolist())
+            traj[exchange]["mal_w"].append(float(m["malicious_weight"]))
+            traj[exchange]["rate"].append(
+                float(m["participation_rate"]))
+    results[f"{attack}|{participation}"] = traj
+
+print(json.dumps(results))
+""" % {"rounds": ROUNDS, "cases": CASES}
 
 
 @pytest.mark.slow
-def test_pod_round_matches_single_host_under_attack_and_sampling():
+def test_three_backend_equivalence_matrix():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
-    out = json.loads(proc.stdout.strip().splitlines()[-1])
-    host, pod = out["host"], out["pod"]
+    results = json.loads(proc.stdout.strip().splitlines()[-1])
 
-    for r in range(ROUNDS):
-        hw = np.asarray(host["w"][r])
-        pw = np.asarray(pod["w"][r])
-        pmask = np.asarray(pod["pmask"][r])
-        # identical sampled subsets (same participation_mask key schedule)
-        assert host["rate"][r] == pytest.approx(pod["rate"][r], abs=1e-6)
-        # sampled-subset renormalisation: non-participants get *exactly*
-        # zero weight on both engines, the rest renormalise to a simplex
-        np.testing.assert_array_equal(pw[pmask == 0.0], 0.0)
-        np.testing.assert_array_equal(hw[pmask == 0.0], 0.0)
-        assert abs(pw.sum() - 1.0) < 1e-4
-        assert abs(hw.sum() - 1.0) < 1e-4
-        # matching round dynamics (float reassociation only)
-        assert np.abs(pw - hw).max() < 0.08, (r, hw.tolist(), pw.tolist())
-        assert abs(host["mal_w"][r] - pod["mal_w"][r]) < 0.08, r
+    for attack, participation in CASES:
+        traj = results[f"{attack}|{participation}"]
+        ref = traj["local"]
+        for backend in ("ring", "allgather"):
+            other = traj[backend]
+            tag = (attack, participation, backend)
+            for r in range(ROUNDS):
+                # bit-identical round dynamics: the three backends run
+                # the same program on the same replicated arrays
+                np.testing.assert_array_equal(
+                    np.asarray(ref["w"][r]), np.asarray(other["w"][r]),
+                    err_msg=f"weights diverged {tag} round {r}")
+                np.testing.assert_array_equal(
+                    np.asarray(ref["s"][r]), np.asarray(other["s"][r]),
+                    err_msg=f"scores diverged {tag} round {r}")
+                assert ref["mal_w"][r] == other["mal_w"][r], (tag, r)
+                assert ref["rate"][r] == other["rate"][r], (tag, r)
 
-    # matching malicious-weight suppression under the fedtest aggregator
-    assert host["mal_w"][-1] < 0.05, host["mal_w"]
-    assert pod["mal_w"][-1] < 0.05, pod["mal_w"]
-    # and the trained global models land at comparable accuracy
-    assert abs(out["host_acc"] - out["pod_acc"]) < 0.15, out
+        for r in range(ROUNDS):
+            w = np.asarray(ref["w"][r])
+            pmask = np.asarray(traj["pmask"][r])
+            # sampled-subset renormalisation: non-participants get
+            # *exactly* zero weight, the rest renormalise to a simplex
+            np.testing.assert_array_equal(w[pmask == 0.0], 0.0)
+            assert abs(w.sum() - 1.0) < 1e-4, (attack, participation, r)
+            if participation < 1.0:
+                assert ref["rate"][r] == pytest.approx(pmask.mean())
+
+    # the adversarial cases actually engage the attacker: its weight
+    # trajectory must differ from the honest run's last slot
+    honest = results["none|1.0"]["local"]["w"]
+    flipped = results["sign_flip|1.0"]["local"]["w"]
+    assert honest != flipped

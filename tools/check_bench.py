@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: roofline-fraction regressions fail CI.
+
+``benchmarks/run.py`` emits ``BENCH_<suite>.json`` artifacts whose rows
+carry ``roofline_frac`` — each kernel's effective bandwidth as a
+fraction of the measured ``weighted_aggregate`` streaming roofline.
+Fractions are a ratio of two bandwidths measured back-to-back on the
+same machine, so they transfer across CI hosts far better than wall
+times; this checker compares the freshly emitted fractions against the
+committed baseline and fails (exit 1) when any row regresses by more
+than ``--tolerance`` (default 15%).
+
+Rows whose baseline fraction sits below ``--min-frac`` (default 0.02)
+are carried in the artifact but not gated: a compute-bound kernel at ~1%
+of the stream roofline measures the host's flops/bandwidth balance, not
+the code, and would flake across heterogeneous CI runners.
+
+The baseline is read from git (``git show <ref>:BENCH_*.json``, default
+``HEAD``) because the bench run overwrites the committed files in the
+worktree; ``--baseline-dir`` reads plain files instead. Rows new in the
+fresh run pass (no trajectory yet); rows that *disappear* while the
+baseline still tracks them fail — a silently dropped series is how a
+perf trajectory dies. Run from anywhere:
+
+    PYTHONPATH=src python -m benchmarks.run aggregation kernels
+    python tools/check_bench.py
+
+CI runs both as the perf-regression step next to ``check_docs.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TOLERANCE = 0.15
+# rows whose baseline fraction sits below this are reported but not
+# gated: a compute-bound kernel at ~1% of the stream roofline measures
+# the host's flops/bandwidth balance more than the code, so its
+# fraction does not transfer across machines the way bandwidth-bound
+# fractions (robust_combine, weighted_aggregate, decode) do
+DEFAULT_MIN_FRAC = 0.02
+
+
+def rows_by_name(rows: List[dict]) -> Dict[str, dict]:
+    return {r["name"]: r for r in rows if isinstance(r, dict) and "name" in r}
+
+
+def compare_rows(baseline: List[dict], fresh: List[dict],
+                 tolerance: float = DEFAULT_TOLERANCE,
+                 suite: str = "?",
+                 min_frac: float = DEFAULT_MIN_FRAC) -> List[str]:
+    """Regression errors between two row lists (the unit-testable core).
+
+    Only rows carrying ``roofline_frac >= min_frac`` in the *baseline*
+    participate: a fresh fraction below ``baseline * (1 - tolerance)``
+    regresses, a tracked row missing from the fresh run is a dropped
+    series. Sub-``min_frac`` rows ride along in the artifact but sit in
+    the machine-noise regime and are not gated.
+    """
+    fresh_by = rows_by_name(fresh)
+    errors = []
+    for name, base in rows_by_name(baseline).items():
+        base_frac = base.get("roofline_frac")
+        if base_frac is None or base_frac < min_frac:
+            continue
+        new = fresh_by.get(name)
+        if new is None:
+            errors.append(f"{suite}: tracked row {name!r} disappeared "
+                          "from the fresh run")
+            continue
+        new_frac = new.get("roofline_frac")
+        if new_frac is None:
+            errors.append(f"{suite}: row {name!r} lost its roofline_frac")
+            continue
+        floor = base_frac * (1.0 - tolerance)
+        if new_frac < floor:
+            errors.append(
+                f"{suite}: {name} roofline_frac {new_frac:.3f} < "
+                f"{floor:.3f} (baseline {base_frac:.3f} - {tolerance:.0%})")
+    return errors
+
+
+def baseline_from_git(name: str, ref: str) -> Optional[List[dict]]:
+    """``git show ref:name`` parsed, or None when absent at the ref."""
+    proc = subprocess.run(["git", "show", f"{ref}:{name}"], cwd=ROOT,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", default=str(ROOT),
+                    help="directory holding the freshly emitted "
+                         "BENCH_*.json (default: repo root)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baseline "
+                         "(default: HEAD)")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="read baselines from plain files here instead "
+                         "of git")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional regression (default 0.15)")
+    ap.add_argument("--min-frac", type=float, default=DEFAULT_MIN_FRAC,
+                    help="baseline roofline_frac below which a row is "
+                         "reported but not gated (machine-noise regime; "
+                         "default 0.02)")
+    args = ap.parse_args(argv)
+
+    fresh_files = sorted(Path(args.fresh_dir).glob("BENCH_*.json"))
+    if not fresh_files:
+        print(f"check_bench: no BENCH_*.json under {args.fresh_dir} — "
+              "run `PYTHONPATH=src python -m benchmarks.run` first")
+        return 1
+    errors, compared = [], 0
+    for f in fresh_files:
+        if args.baseline_dir:
+            base_path = Path(args.baseline_dir) / f.name
+            baseline = (json.loads(base_path.read_text())
+                        if base_path.exists() else None)
+        else:
+            baseline = baseline_from_git(f.name, args.baseline_ref)
+        if baseline is None:
+            print(f"check_bench: {f.name} has no committed baseline — "
+                  "skipping (first emission of this suite)")
+            continue
+        fresh = json.loads(f.read_text())
+        errors += compare_rows(baseline, fresh, args.tolerance,
+                               suite=f.name, min_frac=args.min_frac)
+        compared += 1
+    if errors:
+        print("perf-regression gate FAILED:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"perf-regression gate passed ({compared} baseline file(s), "
+          f"tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
