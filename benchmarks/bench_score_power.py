@@ -1,6 +1,13 @@
-"""Paper Sec. V-B ablation: the accuracy exponent. The paper raises
-accuracy to the 4th power; this sweeps p and reports final accuracy and
-malicious weight share under attack."""
+"""Paper Sec. V-B ablation: the accuracy exponent, plus the coalition
+sweep of EXPERIMENTS.md §Coalition-sweep.
+
+The power sweep raises accuracy to p and reports final accuracy and
+malicious weight share under attack. The coalition sweep measures how
+the suppression round — the first round where the coalition's aggregate
+weight (``malicious_weight``) drops below 0.1 — scales with the
+coalition size (1 → N/2) for the ``mutual_boost`` lying-tester coalition
+(DESIGN.md §7) under each registered tester-selection policy that is
+coalition-relevant (``uniform`` / ``score_weighted`` / ``coverage``)."""
 from __future__ import annotations
 
 import jax
@@ -12,18 +19,26 @@ from repro.core import FederatedTrainer
 from repro.data import MNIST_LIKE, make_federated_image_dataset
 from repro.models import build_model
 
+SUPPRESSION_BAR = 0.1
 
-def main(fast: bool = FAST):
+
+def _setup(fast: bool, partition_kwargs=None):
     cfg = get_config("fedtest-cnn-mnist")
     if fast:
         cfg = cfg.replace(cnn_channels=(8, 16, 16), cnn_hidden=32)
     model = build_model(cfg)
     users = 8
-    data = make_federated_image_dataset(MNIST_LIKE, users,
-                                        num_samples=4000, global_test=400,
-                                        seed=1)
+    data = make_federated_image_dataset(
+        MNIST_LIKE, users, num_samples=4000, global_test=400, seed=1,
+        partition_kwargs=partition_kwargs)
     tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
                      batch_size=16, grad_clip=0.0, remat=False)
+    return model, users, data, tc
+
+
+def power_sweep(fast: bool):
+    # default paper-style skew — the historical Sec. V-B conditions
+    model, users, data, tc = _setup(fast)
     rounds = 8 if fast else 30
     for power in (1.0, 2.0, 4.0, 8.0):
         fed = FedConfig(num_users=users, num_testers=2, num_malicious=2,
@@ -37,6 +52,54 @@ def main(fast: bool = FAST):
         emit(f"score_power/p{power:g}", 0.0,
              f"final_acc={acc:.4f} "
              f"malicious_weight={float(metrics['malicious_weight']):.5f}")
+
+
+def coalition_sweep(fast: bool):
+    """Suppression round vs coalition size (EXPERIMENTS.md
+    §Coalition-sweep): mutual_boost members poison their models
+    (random_weights) and lie for each other whenever they tester,
+    against the defended preset scheme (trust consensus + consensus-
+    clipped reports); the row reports the first round their aggregate
+    weight drops below 0.1 and the weight reached by the final round.
+    Expect suppression to slow with the coalition fraction and break
+    once members can be the majority of a tester committee
+    (DESIGN.md §7)."""
+    import dataclasses
+
+    from repro.configs import get_scenario
+
+    # always the reduced CNN: this is a dynamics measurement (who gets
+    # the weight), not a perf one — model scale only slows the answer.
+    # Mild skew is the dynamics bar (EXPERIMENTS.md §Paper-validation).
+    model, users, data, tc = _setup(
+        True, partition_kwargs={"min_classes": 8, "max_classes": 10})
+    rounds = 10 if fast else 20
+    sizes = range(1, users // 2 + 1)
+    selectors = ("uniform",) if fast else ("uniform", "score_weighted",
+                                           "coverage")
+    base = get_scenario("mutual_boost_vs_fedtest")
+    for selector in selectors:
+        for size in sizes:
+            fed = dataclasses.replace(
+                base, num_users=users, num_testers=5, num_malicious=size,
+                coalition_size=size, selector=selector, local_steps=10)
+            trainer = FederatedTrainer(model, fed, tc, eval_batch=128)
+            state = trainer.init(jax.random.PRNGKey(0))
+            suppressed_at = None
+            for r in range(rounds):
+                state, metrics = trainer.run_round(state, data)
+                mal_w = float(metrics["malicious_weight"])
+                if suppressed_at is None and mal_w < SUPPRESSION_BAR:
+                    suppressed_at = r + 1
+            emit(f"score_power/coalition_{selector}_c{size}", 0.0,
+                 f"suppression_round="
+                 f"{suppressed_at if suppressed_at else f'>{rounds}'} "
+                 f"final_malicious_weight={mal_w:.5f}")
+
+
+def main(fast: bool = FAST):
+    power_sweep(fast)
+    coalition_sweep(fast)
 
 
 if __name__ == "__main__":

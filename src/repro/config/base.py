@@ -197,11 +197,18 @@ def _freeze_kwargs(kw: Any) -> Tuple[Tuple[str, Any], ...]:
 class FedConfig:
     """The paper's knobs (Sec. III, Algorithm 1).
 
-    ``aggregator`` / ``attack`` / ``selector`` are **registry names**
-    resolved against :mod:`repro.strategies` (``AGGREGATORS`` /
-    ``ATTACKS`` / ``SELECTORS``); the ``*_kwargs`` mappings are forwarded
-    to the strategy constructor (stored as sorted tuples so the config
-    stays frozen and hashable).
+    ``aggregator`` / ``attack`` / ``selector`` / ``coalition`` are
+    **registry names** resolved against :mod:`repro.strategies`
+    (``AGGREGATORS`` / ``ATTACKS`` / ``SELECTORS`` / ``COALITIONS``);
+    the ``*_kwargs`` mappings are forwarded to the strategy constructor
+    (stored as sorted tuples so the config stays frozen and hashable).
+
+    ``coalition`` names a coordinated multi-client adversary
+    (DESIGN.md §7): ``coalition_size`` members (placed via
+    ``coalition_kwargs``, same placement vocabulary as attacks) mount a
+    coordinated model attack and/or rewrite their tester reports. The
+    members are counted as malicious by the ``malicious_weight`` metric
+    in union with the independent ``attack``'s set.
     """
 
     num_users: int = 20            # N
@@ -219,6 +226,9 @@ class FedConfig:
     attack_scale: float = 1.0
     selector: str = "rotating"     # repro.strategies.SELECTORS name
     selector_kwargs: Any = ()
+    coalition: str = "none"        # repro.strategies.COALITIONS name
+    coalition_kwargs: Any = ()     # e.g. boost_to=0.9, placement='first'
+    coalition_size: int = 0        # coordinated members (DESIGN.md §7)
     lying_testers: int = 0          # testers reporting fake accuracies (Sec. V-C)
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
@@ -228,18 +238,47 @@ class FedConfig:
         _require(0 < self.num_testers <= self.num_users,
                  "need 0 < K <= N")
         _require(self.num_malicious < self.num_users, "M < N")
-        for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs"):
+        _require(self.coalition_size < self.num_users,
+                 "coalition_size < N")
+        for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs",
+                  "coalition_kwargs"):
             object.__setattr__(self, f, _freeze_kwargs(getattr(self, f)))
         # Validate names against the registries (KeyError lists the
         # registered names). Lazy import: repro.strategies never imports
         # repro.config, so this cannot cycle.
-        from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
+        from repro.strategies import (
+            AGGREGATORS, ATTACKS, COALITIONS, SELECTORS)
         AGGREGATORS.get(self.aggregator)
         ATTACKS.get(self.attack)
         SELECTORS.get(self.selector)
+        COALITIONS.get(self.coalition)
+        # a named coalition with no members — or members with no named
+        # coalition — would silently deactivate: runs (and CI
+        # suppression gates) would measure no adversary. Membership may
+        # come from coalition_size or from coalition_kwargs size= /
+        # indices=; all three forms get the same bounds checks.
+        if self.coalition != "none":
+            kw = dict(self.coalition_kwargs)
+            idx = kw.get("indices") or ()
+            members = (self.coalition_size or int(kw.get("size") or 0)
+                       or len(idx))
+            _require(members > 0,
+                     f"coalition {self.coalition!r} needs members: set "
+                     "coalition_size > 0 or pass size=/indices= in "
+                     "coalition_kwargs")
+            _require(members < self.num_users,
+                     "coalition members < N")
+            _require(all(0 <= int(i) < self.num_users for i in idx),
+                     f"coalition indices {tuple(idx)} out of range for "
+                     f"num_users={self.num_users}")
+        else:
+            _require(self.coalition_size == 0,
+                     "coalition_size > 0 but coalition='none' — name "
+                     "the coalition (e.g. coalition='mutual_boost')")
 
     def strategy_kwargs(self, field: str) -> dict:
-        """``aggregator`` | ``attack`` | ``selector`` kwargs as a dict."""
+        """``aggregator`` | ``attack`` | ``selector`` | ``coalition``
+        kwargs as a dict."""
         return dict(getattr(self, field + "_kwargs"))
 
 

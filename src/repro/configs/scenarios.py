@@ -69,6 +69,36 @@ SCENARIOS: Dict[str, FedConfig] = {
         num_users=20, num_testers=5, num_malicious=3,
         attack="adaptive_scale", attack_scale=4.0,
         attack_kwargs={"weight_threshold": 0.5}, rounds=60),
+    # --- coalition adversaries (DESIGN.md §7) -------------------------
+    # lying-tester coalition: members poison their models (independent
+    # random_weights over the same slots) AND, whenever selected to
+    # test, boost each other / defame the top-scoring honest clients.
+    # Plain score averaging LOSES to this coalition (the boosts keep the
+    # poison flowing and the defamation grinds the honest scores down);
+    # the preset therefore runs the Sec. V-C tester-trust consensus with
+    # a fast forgetting rate plus consensus-clipped reports, which bound
+    # a member's report influence from round 1 (DESIGN.md §7).
+    "mutual_boost_vs_fedtest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        attack="random_weights", coalition="mutual_boost",
+        coalition_size=4,
+        aggregator_kwargs={"use_trust": True, "trust_decay": 0.3,
+                           "report_clip": 0.2},
+        rounds=60),
+    # sybil coalition splitting one scale-8 sign-flip poison so each
+    # member's update stays at an inconspicuous scale-2 magnitude;
+    # model-space only, so plain fedtest scoring suppresses it
+    "sybil_split_vs_fedtest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=0, attack="none",
+        coalition="sybil_split", coalition_size=4, attack_scale=8.0,
+        rounds=60),
+    # the combined worst case: split poisoning + mutual boosting
+    "full_collusion_vs_fedtest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=0, attack="none",
+        coalition="full_collusion", coalition_size=4, attack_scale=8.0,
+        aggregator_kwargs={"use_trust": True, "trust_decay": 0.3,
+                           "report_clip": 0.2},
+        rounds=60),
 }
 
 
@@ -90,12 +120,46 @@ def scenario_for_pod(name: str, num_clients: int) -> FedConfig:
     axis, so ``num_users`` must equal the device count; the tester count
     and malicious count are clamped to stay valid at that size (a 20-user
     preset with 3 attackers becomes 3 attackers on 8 devices, 1 on 2).
-    Every other knob — aggregator, attack, scales, participation,
-    selector — carries over unchanged, so the scenario means the same
-    thing on either engine.
+    A coalition refits by *fraction* — a 4-of-20 coalition stays a ~20%
+    coalition at any device count (1 member on 4 devices, 2 on 8) — and
+    drags the paired independent attack's ``num_malicious`` down with it
+    when the preset sizes them together, so the refit scenario keeps the
+    preset's malicious fraction and means the same thing on either
+    engine (DESIGN.md §7). The coalition is floored at one member (an
+    empty coalition would deactivate the scenario), so on very small
+    pods (2 devices) that floor can exceed the preset's fraction and
+    reach the committee-majority breakdown regime DESIGN.md §7
+    documents — suppression claims only transfer to pods where the
+    refit coalition stays a committee minority. Every other knob —
+    aggregator, attack, scales, participation, selector, coalition
+    behaviour — carries over unchanged.
     """
     fed = get_scenario(name)
+    num_mal = min(fed.num_malicious, max(num_clients - 1, 0))
+    coal = 0
+    ckw = dict(fed.coalition_kwargs)
+    if fed.coalition != "none":
+        # membership may come from coalition_size OR coalition_kwargs
+        # (size= / indices=) — the same three forms FedConfig validates
+        members = (fed.coalition_size or int(ckw.get("size") or 0)
+                   or len(ckw.get("indices") or ()))
+        coal = max(1, round(members * num_clients / fed.num_users))
+        coal = min(coal, max(num_clients - 1, 0))
+        # the refit owns membership: stale explicit size/indices from
+        # the preset would override (or out-range) the refit placement
+        ckw.pop("size", None)
+        ckw.pop("indices", None)
+        if fed.num_malicious == members:
+            # the preset paired the independent attack with the
+            # coalition over the same slots (equal sizes); keep them
+            # paired after the refit, in both grow and shrink
+            # directions. Unpaired attacks keep their own clamp.
+            num_mal = coal
     return dataclasses.replace(
         fed, num_users=num_clients,
         num_testers=min(fed.num_testers, num_clients),
-        num_malicious=min(fed.num_malicious, max(num_clients - 1, 0)))
+        num_malicious=num_mal,
+        # a 1-client pod cannot hold a coalition (members < N): drop the
+        # name with the members or FedConfig rejects the vacuous config
+        coalition=fed.coalition if coal else "none",
+        coalition_kwargs=ckw, coalition_size=coal)

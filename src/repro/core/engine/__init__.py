@@ -25,13 +25,14 @@ from repro.core.engine.backends import (
 from repro.core.engine.driver import FederatedTrainer, RoundState
 from repro.core.engine.program import (
     RoundKeys, RoundProgram, aggregator_defaults, participation_mask,
-    renormalize_over_subset, resolve_strategies, round_keys)
+    renormalize_over_subset, resolve_coalition, resolve_strategies,
+    round_keys)
 
 __all__ = [
     "AllgatherBackend", "ExchangeBackend", "FederatedTrainer",
     "LocalBackend", "PodBackend", "RingBackend", "RoundKeys",
     "RoundProgram", "RoundState", "aggregator_defaults",
     "make_allgather_round", "make_distributed_round", "make_pod_round",
-    "participation_mask", "renormalize_over_subset", "resolve_strategies",
-    "ring_cross_test", "round_keys",
+    "participation_mask", "renormalize_over_subset", "resolve_coalition",
+    "resolve_strategies", "ring_cross_test", "round_keys",
 ]

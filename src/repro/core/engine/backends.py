@@ -308,7 +308,8 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
         tx, ty = tx[0], ty[0]
         backend = backend_cls(axis, num_clients)
         keys = round_keys(key)
-        tester_ids, part_mask = program.select_round(keys, round_idx)
+        tester_ids, part_mask = program.select_round(keys, round_idx,
+                                                     scores=scores.scores)
         return program.run(backend, global_params, scores, bx=bx, by=by,
                            tx=tx, ty=ty, tester_ids=tester_ids,
                            part_mask=part_mask, keys=keys,

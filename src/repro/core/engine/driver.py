@@ -61,6 +61,7 @@ class FederatedTrainer:
         self.aggregator = self.program.aggregator
         self.attack = self.program.attack
         self.selector = self.program.selector
+        self.coalition = self.program.coalition
         self.num_traces = 0
         self._round_fn = jax.jit(self._round_body)
         # the scanned driver donates the carried RoundState so XLA can
@@ -83,8 +84,8 @@ class FederatedTrainer:
         self.num_traces += 1        # python side-effect: runs per trace only
         fed = self.fed
         keys = round_keys(jax.random.fold_in(state.key, state.round_idx))
-        tester_ids, part_mask = self.program.select_round(keys,
-                                                          state.round_idx)
+        tester_ids, part_mask = self.program.select_round(
+            keys, state.round_idx, scores=state.scores.scores)
         bx, by = sample_client_batches(keys.batch, data.train,
                                        fed.local_steps,
                                        self.train.batch_size)

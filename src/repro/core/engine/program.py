@@ -35,6 +35,14 @@ and aggregator are looked up by name in :mod:`repro.strategies`
 plain Python objects in the program constructor — *before* tracing — so
 jit closes over static callables and one round compiles to one fused
 program with no trace-time branching.
+
+Coordinated adversaries (``FedConfig.coalition``, DESIGN.md §7) hook the
+same two seams: the coalition's model attack composes into step 3
+(:meth:`Coalition.compose` unions the malicious set, so the
+``malicious_weight`` metric reports the coalition's aggregate weight)
+and its report transform runs as step 5b on the replicated accuracy
+matrix — shared code on every backend, so the three exchange backends
+stay bit-identical under coalition attacks too.
 """
 from __future__ import annotations
 
@@ -143,8 +151,25 @@ def resolve_strategies(fed: FedConfig, use_trust: bool = False,
     atk = ATTACKS.build(fed.attack, fed.strategy_kwargs("attack"),
                         dict(num_malicious=fed.num_malicious,
                              scale=fed.attack_scale))
-    sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"))
+    # seed default: schedule-based selectors (coverage) derive their
+    # per-cycle shuffle from the run seed, not a fixed key
+    sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"),
+                          dict(seed=fed.seed))
     return agg, atk, sel
+
+
+def resolve_coalition(fed: FedConfig):
+    """Name -> object resolution for ``fed.coalition`` (DESIGN.md §7).
+
+    ``size`` defaults to ``fed.coalition_size`` and the total model-
+    attack ``scale`` to ``fed.attack_scale`` (each silently dropped when
+    the coalition's constructor does not accept it).
+    """
+    from repro.strategies import COALITIONS
+    return COALITIONS.build(fed.coalition,
+                            fed.strategy_kwargs("coalition"),
+                            dict(size=fed.coalition_size,
+                                 scale=fed.attack_scale))
 
 
 class RoundProgram:
@@ -173,6 +198,19 @@ class RoundProgram:
         self.eval_fn = make_eval_fn(model)
         self.aggregator, self.attack, self.selector = resolve_strategies(
             fed, use_trust, aggregator=aggregator)
+        # legacy selectors predate the scores= keyword — inspect once,
+        # pre-trace, and only forward scores to policies that take it
+        import inspect
+        self._selector_takes_scores = ("scores" in inspect.signature(
+            self.selector.select).parameters)
+        # coordinated adversaries (DESIGN.md §7): the coalition's model
+        # attack composes into the attack seam (member ∪ malicious set),
+        # its report transform runs as step 5b; both resolved pre-trace.
+        self.coalition = resolve_coalition(fed)
+        self.coalition_active = self.coalition.active
+        if self.coalition_active:
+            self.attack = self.coalition.compose(self.attack,
+                                                 fed.num_users)
         # a non-None combine hook routes aggregation through the
         # per-coordinate fast path; both checks are static Python, so the
         # jitted round never branches on them at trace time.
@@ -214,17 +252,25 @@ class RoundProgram:
         return params, jnp.mean(losses)
 
     # ------------------------------------------------------- round plumbing
-    def select_round(self, keys: RoundKeys, round_idx):
+    def select_round(self, keys: RoundKeys, round_idx, scores=None):
         """Per-round tester ids [K] and participation mask [N].
 
         Shared by every driver (traced on both engines), so tester sets
-        and sampled subsets agree bit-exactly for equal keys. The mask is
-        all-ones when ``participation == 1`` — :meth:`run` branches on
-        the static config flag, never on the mask values.
+        and sampled subsets agree bit-exactly for equal keys. ``scores``
+        is the ``[N]`` moving-average score vector entering the round —
+        replicated on every backend — consumed by score-aware selectors
+        (``score_weighted``); score-oblivious policies ignore it. The
+        mask is all-ones when ``participation == 1`` — :meth:`run`
+        branches on the static config flag, never on the mask values.
         """
         fed = self.fed
-        tester_ids = self.selector.select(keys.test, fed.num_users,
-                                          fed.num_testers, round_idx)
+        if self._selector_takes_scores:
+            tester_ids = self.selector.select(keys.test, fed.num_users,
+                                              fed.num_testers, round_idx,
+                                              scores=scores)
+        else:
+            tester_ids = self.selector.select(keys.test, fed.num_users,
+                                              fed.num_testers, round_idx)
         if self.use_participation:
             part_mask = participation_mask(keys.part, fed.num_users,
                                            fed.participation)
@@ -283,6 +329,15 @@ class RoundProgram:
             lies = jax.random.uniform(keys.lie, acc.shape)
             liar_rows = (tester_ids < fed.lying_testers)[:, None]
             acc = jnp.where(liar_rows, lies, acc)
+
+        # 5b. coalition report-space attack (DESIGN.md §7): members
+        # selected as testers rewrite their rows of the replicated
+        # matrix (mutual boost + targeted defamation driven by the
+        # AttackContext scores). Replicated matrix -> shared code ->
+        # bit-identical on every backend.
+        if self.coalition_active:
+            acc = self.coalition.transform_reports(
+                jax.random.fold_in(keys.lie, 1), acc, tester_ids, actx)
 
         # 6. weights via the aggregation strategy
         server_eval = None

@@ -32,19 +32,57 @@ def init_scores(num_users: int) -> ScoreState:
                       tester_trust=jnp.ones((num_users,), jnp.float32))
 
 
+def _consensus_median(acc_matrix: jnp.ndarray,
+                      row_mask: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
+    """Per-client median over the (reporting) tester rows — the one
+    consensus formula shared by report clipping and tester trust, so the
+    two defences cannot drift on what "the consensus" means. All-masked
+    columns yield NaN; callers pick their own degenerate-corner
+    convention."""
+    if row_mask is None:
+        return jnp.median(acc_matrix, axis=0)
+    return jnp.nanmedian(
+        jnp.where(row_mask[:, None] > 0, acc_matrix, jnp.nan), axis=0)
+
+
+def clip_reports_to_consensus(acc_matrix: jnp.ndarray, clip: float,
+                              row_mask: Optional[jnp.ndarray] = None
+                              ) -> jnp.ndarray:
+    """Winsorise tester reports against the per-client consensus median.
+
+    Every report is clamped into ``[median_c - clip, median_c + clip]``
+    where ``median_c`` is the per-client median over the (reporting)
+    tester rows. This bounds the per-round influence of *any* report-
+    space attack — a ``mutual_boost`` coalition's 1.0-boost / 0.0-smear
+    rows (DESIGN.md §7) move a client's combined accuracy by at most
+    ``clip * liar_fraction`` — and is exact for honest reports, which
+    sit near the consensus anyway. Robust while liars stay a minority of
+    the round's committee (the median flips once they are not)."""
+    median = _consensus_median(acc_matrix, row_mask)
+    if row_mask is not None:
+        median = jnp.nan_to_num(median)     # nobody reported: clamp to 0
+    return jnp.clip(acc_matrix, median[None, :] - clip,
+                    median[None, :] + clip)
+
+
 def combine_tester_reports(acc_matrix: jnp.ndarray,
                            tester_ids: jnp.ndarray,
                            trust: Optional[jnp.ndarray] = None,
-                           row_mask: Optional[jnp.ndarray] = None
+                           row_mask: Optional[jnp.ndarray] = None,
+                           clip: Optional[float] = None
                            ) -> jnp.ndarray:
     """acc_matrix [K, N] (accuracy of client c measured by tester k) ->
-    per-client accuracy [N]. Optionally trust-weighted (Sec. V-C).
+    per-client accuracy [N]. Optionally trust-weighted (Sec. V-C) and
+    winsorised against the consensus median (``clip``, DESIGN.md §7).
 
     ``row_mask`` [K] zeroes reports from testers that did not participate
     this round (client sampling): the mean runs over the reporting subset
     only — the single-host analogue of the pod path's participation-masked
     tester ``psum`` — and degrades to all-zero accuracies when nobody
     reported (matching the pod's ``0 / max(k, 1)`` convention)."""
+    if clip is not None and clip > 0.0:
+        acc_matrix = clip_reports_to_consensus(acc_matrix, clip, row_mask)
     if trust is None and row_mask is None:
         return jnp.mean(acc_matrix, axis=0)
     k = acc_matrix.shape[0]
@@ -69,11 +107,7 @@ def update_tester_trust(state: ScoreState, acc_matrix: jnp.ndarray,
     from both the consensus median and the trust update — a report that
     was never sent can neither shift the consensus nor move its sender's
     trust."""
-    if row_mask is None:
-        median = jnp.median(acc_matrix, axis=0)             # [N]
-    else:
-        median = jnp.nanmedian(
-            jnp.where(row_mask[:, None] > 0, acc_matrix, jnp.nan), axis=0)
+    median = _consensus_median(acc_matrix, row_mask)               # [N]
     dev = jnp.mean(jnp.abs(acc_matrix - median[None, :]), axis=1)  # [K]
     agreement = jnp.exp(-4.0 * dev)
     updated = (decay * state.tester_trust[tester_ids]
@@ -90,7 +124,8 @@ def update_scores(state: ScoreState, acc_matrix: jnp.ndarray,
                   decay: float = 0.5, use_trust: bool = False,
                   power_warmup_rounds: int = 2,
                   row_mask: Optional[jnp.ndarray] = None,
-                  client_mask: Optional[jnp.ndarray] = None) -> ScoreState:
+                  client_mask: Optional[jnp.ndarray] = None,
+                  report_clip: Optional[float] = None) -> ScoreState:
     """One round of Algorithm 1 line 13: ``FL server calculates the scores``.
 
     ``power_warmup_rounds``: rounds scored with exponent 1 before switching
@@ -102,6 +137,11 @@ def update_scores(state: ScoreState, acc_matrix: jnp.ndarray,
     treating the exponent as "a variable, subject to periodic adjustments"
     (Sec. V-B); this is the minimal such schedule.
 
+    ``report_clip``: winsorise reports against the per-client consensus
+    median before combining (:func:`clip_reports_to_consensus`) —
+    bounded-influence reporting against coordinated lying testers
+    (DESIGN.md §7).
+
     ``client_mask`` [N] freezes the moving average of unmasked clients:
     under client sampling a non-participant transmits nothing, so what the
     testers measured in its slot is the stale global copy — no evidence
@@ -111,7 +151,7 @@ def update_scores(state: ScoreState, acc_matrix: jnp.ndarray,
     acc = combine_tester_reports(
         acc_matrix, tester_ids,
         trust=state.tester_trust if use_trust else None,
-        row_mask=row_mask)
+        row_mask=row_mask, clip=report_clip)
     eff_power = jnp.where(state.rounds_seen < power_warmup_rounds,
                           1.0, power)
     powered = jnp.clip(acc, 0.0, 1.0) ** eff_power

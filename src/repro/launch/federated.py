@@ -37,6 +37,7 @@ import numpy as np
 _FED_CLI_DEFAULTS = dict(
     num_malicious=0, attack="none", attack_kwargs={}, attack_scale=1.0,
     aggregator="fedtest", selector="rotating", participation=1.0,
+    coalition="none", coalition_kwargs={}, coalition_size=0,
     local_steps=6)
 
 
@@ -78,10 +79,30 @@ def main():
     ap.add_argument("--selector", default=None,
                     help="repro.strategies.SELECTORS name for the per-"
                          "round tester mask")
+    ap.add_argument("--coalition", default=None,
+                    help="repro.strategies.COALITIONS name "
+                         "(DESIGN.md §7): coordinated members mount a "
+                         "model attack and/or rewrite their tester rows "
+                         "of the replicated accuracy matrix")
+    ap.add_argument("--coalition-size", type=int, default=None,
+                    help="number of coordinated members")
+    ap.add_argument("--coalition-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the coalition ctor, e.g. "
+                         '\'{"boost_to": 0.9}\'')
+    ap.add_argument("--assert-malicious-below", type=float, default=None,
+                    help="exit non-zero unless the final round's "
+                         "malicious_weight is below this bar (the CI "
+                         "coalition smoke gate)")
     ap.add_argument("--testers", type=int, default=None,
                     help="K testers per round (default: all clients)")
     ap.add_argument("--dataset", default="mnist_like",
                     choices=["mnist_like", "cifar_like"])
+    ap.add_argument("--min-classes", type=int, default=None,
+                    help="mildest shard skew: every client holds at "
+                         "least this many classes (the dynamics bar of "
+                         "EXPERIMENTS.md §Paper-validation uses 8 — with "
+                         "near-single-class shards the tester accuracy "
+                         "matrix is a lottery no scoring can separate)")
     ap.add_argument("--out", default="experiments/federated_pod")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -124,7 +145,11 @@ def main():
                   attack=args.attack, attack_kwargs=args.attack_kwargs,
                   attack_scale=args.attack_scale,
                   participation=args.participation,
-                  selector=args.selector, seed=args.seed)
+                  selector=args.selector,
+                  coalition=args.coalition,
+                  coalition_size=args.coalition_size,
+                  coalition_kwargs=args.coalition_kwargs,
+                  seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:
         # preset refitted to the device count; explicit flags override
@@ -136,8 +161,12 @@ def main():
     tc = TrainConfig(optimizer="sgd", lr=args.lr, schedule="constant",
                      batch_size=args.batch, grad_clip=0.0, remat=False)
     spec = MNIST_LIKE if args.dataset == "mnist_like" else CIFAR_LIKE
+    pkw = ({"min_classes": args.min_classes,
+            "max_classes": spec.num_classes}
+           if args.min_classes is not None else None)
     data = make_federated_image_dataset(spec, N, num_samples=N * 250,
-                                        global_test=400, seed=args.seed)
+                                        global_test=400, seed=args.seed,
+                                        partition_kwargs=pkw)
 
     make = (make_distributed_round if args.exchange == "ring"
             else make_allgather_round)
@@ -184,6 +213,8 @@ def main():
                          "malicious": fed.num_malicious,
                          "attack_scale": fed.attack_scale,
                          "participation": fed.participation,
+                         "coalition": fed.coalition,
+                         "coalition_size": fed.coalition_size,
                          "scenario": args.scenario,
                          "exchange": args.exchange}
 
@@ -192,6 +223,16 @@ def main():
                            f"{args.dataset}__{args.exchange}.json"),
               "w") as f:
         json.dump(history, f, indent=1)
+
+    if args.assert_malicious_below is not None:
+        final = history["malicious_weight"][-1]
+        if not final < args.assert_malicious_below:
+            raise SystemExit(
+                f"malicious_weight={final:.4f} did not drop below "
+                f"{args.assert_malicious_below} after {args.rounds} "
+                "rounds")
+        print(f"assert ok: malicious_weight={final:.4f} < "
+              f"{args.assert_malicious_below}")
 
 
 if __name__ == "__main__":

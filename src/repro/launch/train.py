@@ -37,7 +37,7 @@ import numpy as np
 from repro.config import FedConfig, TrainConfig, reduce_for_smoke
 from repro.configs import get_config, get_scenario, list_scenarios
 from repro.core import FederatedTrainer
-from repro.strategies import AGGREGATORS, ATTACKS, SELECTORS
+from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, SELECTORS
 from repro.checkpoint import CheckpointManager
 from repro.data import (
     CIFAR_LIKE, MNIST_LIKE, make_federated_image_dataset, make_token_stream)
@@ -89,7 +89,8 @@ _FED_CLI_DEFAULTS = dict(
     local_steps=10, score_power=4.0, score_decay=0.5,
     aggregator="fedtest", aggregator_kwargs={},
     attack="random_weights", attack_kwargs={}, attack_scale=1.0,
-    selector="rotating", selector_kwargs={}, seed=0)
+    selector="rotating", selector_kwargs={},
+    coalition="none", coalition_kwargs={}, coalition_size=0, seed=0)
 
 
 def main():
@@ -118,6 +119,17 @@ def main():
     ap.add_argument("--selector", default=None,
                     choices=list(SELECTORS.names()))
     ap.add_argument("--selector-kwargs", default=None, type=json.loads)
+    ap.add_argument("--coalition", default=None,
+                    choices=list(COALITIONS.names()),
+                    help="coordinated multi-client adversary "
+                         "(repro.strategies.COALITIONS; DESIGN.md §7); "
+                         "size via --coalition-size")
+    ap.add_argument("--coalition-size", type=int, default=None,
+                    help="number of coordinated members (placement via "
+                         "--coalition-kwargs)")
+    ap.add_argument("--coalition-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the coalition ctor, e.g. "
+                         '\'{"boost_to": 0.9, "deflate_top": 2}\'')
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help=">1 routes steady-state training through the "
@@ -155,6 +167,9 @@ def main():
                   attack_scale=args.attack_scale,
                   selector=args.selector,
                   selector_kwargs=args.selector_kwargs,
+                  coalition=args.coalition,
+                  coalition_size=args.coalition_size,
+                  coalition_kwargs=args.coalition_kwargs,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:
@@ -184,6 +199,8 @@ def main():
     history["config"] = {"arch": cfg.name, "dataset": args.dataset,
                          "aggregator": fed.aggregator,
                          "attack": fed.attack, "selector": fed.selector,
+                         "coalition": fed.coalition,
+                         "coalition_size": fed.coalition_size,
                          "scenario": args.scenario,
                          "users": fed.num_users, "testers": fed.num_testers,
                          "malicious": fed.num_malicious}

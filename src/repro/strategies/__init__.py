@@ -14,8 +14,13 @@ and resolved to plain Python objects before jit tracing:
   the malicious set; each corruption receives the round's
   :class:`AttackContext` so adaptive attacks can read the
   cross-testing signal.
-* :data:`SELECTORS` — which K clients tester each round (``rotating``,
-  ``round_robin``, ``fixed``).
+* :data:`SELECTORS` — which K clients tester each round (``rotating``
+  / ``uniform``, ``round_robin``, ``coverage``, ``score_weighted``,
+  ``fixed``).
+* :data:`COALITIONS` — coordinated multi-client adversaries
+  (``none``, ``mutual_boost``, ``sybil_split``, ``full_collusion``):
+  a :class:`Coalition` binds a member set to a coordinated model
+  attack and/or a report-matrix transform (DESIGN.md §7).
 
 Adding a strategy is one file anywhere that runs::
 
@@ -29,16 +34,18 @@ Adding a strategy is one file anywhere that runs::
 See README.md §"Writing a strategy".
 """
 from repro.strategies.base import (
-    AGGREGATORS, ATTACKS, SELECTORS,
+    AGGREGATORS, ATTACKS, COALITIONS, SELECTORS,
     Aggregator, Attack, AttackContext, Registry, RoundContext, Selector,
-    register, uses_combine)
+    register, resolve_placement, uses_combine)
 # importing the submodules populates the registries
 from repro.strategies import aggregators as _aggregators  # noqa: F401
 from repro.strategies import attacks as _attacks          # noqa: F401
 from repro.strategies import selectors as _selectors      # noqa: F401
+from repro.strategies.coalition import Coalition, CoalitionAttack
 
 __all__ = [
-    "AGGREGATORS", "ATTACKS", "SELECTORS",
-    "Aggregator", "Attack", "AttackContext", "Selector",
-    "Registry", "RoundContext", "register", "uses_combine",
+    "AGGREGATORS", "ATTACKS", "COALITIONS", "SELECTORS",
+    "Aggregator", "Attack", "AttackContext", "Coalition",
+    "CoalitionAttack", "Selector", "Registry", "RoundContext",
+    "register", "resolve_placement", "uses_combine",
 ]

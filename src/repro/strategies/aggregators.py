@@ -66,20 +66,43 @@ def _mask_to_simplex(mask: jnp.ndarray) -> jnp.ndarray:
 
 @register(AGGREGATORS, "fedtest")
 class FedTest(Aggregator):
-    """The paper's scheme: normalised moving-average accuracy^p scores."""
+    """The paper's scheme: normalised moving-average accuracy^p scores.
+
+    ``use_trust`` enables the Sec. V-C tester-trust consensus: testers
+    whose reports deviate from the per-round median lose trust and their
+    future reports are down-weighted. ``trust_decay`` is that moving
+    average's memory — the default 0.8 suits occasional noisy reporters;
+    coordinated lying testers (the ``mutual_boost`` coalition,
+    DESIGN.md §7) need a faster forgetting rate (the coalition presets
+    use 0.3) so a member's trust collapses within a couple of observed
+    lying rounds instead of leaking boosts for ten. ``report_clip`` adds
+    the bounded-influence winsorisation of reports against the per-client
+    consensus median — the trust signal needs a round of evidence before
+    it bites, and the clip is what caps a coalition's round-1 boost (when
+    every model is at chance, an unclipped 1.0-report more than doubles a
+    member's relative score; DESIGN.md §7).
+    """
 
     def __init__(self, *, score_power: float = 4.0, score_decay: float = 0.5,
-                 power_warmup_rounds: int = 2, use_trust: bool = False):
+                 power_warmup_rounds: int = 2, use_trust: bool = False,
+                 trust_decay: float = 0.8, report_clip: float = 0.0):
+        if not 0.0 <= trust_decay <= 1.0:
+            raise ValueError(f"trust_decay in [0, 1], got {trust_decay}")
+        if not 0.0 <= report_clip <= 1.0:
+            raise ValueError(f"report_clip in [0, 1], got {report_clip}")
         self.score_power = float(score_power)
         self.score_decay = float(score_decay)
         self.power_warmup_rounds = int(power_warmup_rounds)
         self.use_trust = bool(use_trust)
+        self.trust_decay = float(trust_decay)
+        self.report_clip = float(report_clip)
 
     def update_scores(self, ctx: RoundContext):
         scores = ctx.scores
         if self.use_trust:
             scores = update_tester_trust(scores, ctx.acc_matrix,
                                          ctx.tester_ids,
+                                         decay=self.trust_decay,
                                          row_mask=ctx.report_mask)
         return update_scores(scores, ctx.acc_matrix, ctx.tester_ids,
                              power=self.score_power,
@@ -87,7 +110,8 @@ class FedTest(Aggregator):
                              use_trust=self.use_trust,
                              power_warmup_rounds=self.power_warmup_rounds,
                              row_mask=ctx.report_mask,
-                             client_mask=ctx.participation)
+                             client_mask=ctx.participation,
+                             report_clip=self.report_clip or None)
 
     def weights(self, ctx: RoundContext) -> jnp.ndarray:
         return score_weights(ctx.scores)

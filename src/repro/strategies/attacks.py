@@ -22,6 +22,12 @@ last client slots.
   aggregation weight — read from the round's :class:`AttackContext` —
   stays above ``weight_threshold / N``; once FedTest suppresses it, it
   sends the honest update to farm its score back up, then re-attacks.
+* ``scaled_collusion`` — sybil-split poisoning (DESIGN.md §7): the
+  malicious set jointly mounts one sign-flip poison of total magnitude
+  ``scale`` and each member sends its ``1/split`` share, staying under
+  per-client magnitude thresholds while the coalition's aggregate keeps
+  the full scale. The ``sybil_split`` / ``full_collusion`` coalitions
+  build this attack over their member set.
 """
 from __future__ import annotations
 
@@ -130,6 +136,35 @@ class AdaptiveScale(Attack):
         return jax.tree_util.tree_map(
             lambda t, b: jnp.where(engaged, b.astype(t.dtype), t),
             trained, bad)
+
+
+@register(ATTACKS, "scaled_collusion")
+class ScaledCollusion(Attack):
+    """Sybil-split model poisoning (DESIGN.md §7).
+
+    Each malicious client sends ``g − (scale/split)·(t − g)`` — its even
+    share of one full-scale sign-flip poison. ``split`` defaults to the
+    malicious-set size, so ``--attack scaled_collusion --malicious 4
+    --attack-scale 8`` means "4 sybils splitting a scale-8 poison": no
+    single update deviates more than a scale-2 attacker's would, but the
+    coalition's aggregate contribution reconstructs the full attack. The
+    ``sybil_split`` / ``full_collusion`` coalitions instantiate this
+    attack over their member set.
+    """
+
+    def __init__(self, *, num_malicious: int = 0, scale: float = 8.0,
+                 placement: str = "last", indices=None,
+                 split: int = 0):
+        super().__init__(num_malicious=num_malicious, scale=scale,
+                         placement=placement, indices=indices)
+        if split < 0:
+            raise ValueError(f"split must be >= 0, got {split}")
+        self.split = int(split) if split else max(1, self.num_malicious)
+
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        return _sign_flip(key, trained, global_params,
+                          self.scale / self.split)
 
 
 @register(ATTACKS, "scaled_update")

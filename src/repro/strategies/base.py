@@ -212,6 +212,58 @@ def uses_combine(aggregator: "Aggregator") -> bool:
     return getattr(aggregator, "combine", None) is not None
 
 
+def normalize_placement(size: int, placement: str,
+                        indices: Optional[Tuple[int, ...]]
+                        ) -> Tuple[int, str, Optional[Tuple[int, ...]]]:
+    """Validate and normalise a (size, placement, indices) ctor triple.
+
+    Shared by :class:`Attack` and
+    :class:`~repro.strategies.coalition.Coalition` so the two halves of
+    the adversary model (DESIGN.md §7) accept exactly the same placement
+    vocabulary. Explicit ``indices`` win and define the size.
+    """
+    if indices is not None:
+        indices = tuple(int(i) for i in indices)
+        size = len(indices)
+    if placement not in ("last", "first", "spread"):
+        raise ValueError(
+            f"placement must be 'last'|'first'|'spread', got "
+            f"{placement!r}")
+    return int(size), placement, indices
+
+
+def resolve_placement(num_users: int, size: int, placement: str = "last",
+                      indices: Optional[Tuple[int, ...]] = None
+                      ) -> Tuple[int, ...]:
+    """Static client-index set for a named placement.
+
+    The one placement formula shared by :class:`Attack` (the malicious
+    set) and :class:`~repro.strategies.coalition.Coalition` (the member
+    set, DESIGN.md §7), so an attack and a coalition configured with the
+    same (size, placement) always name the same clients.
+    """
+    if indices is not None:
+        return tuple(int(i) for i in indices)
+    if size == 0:
+        return ()
+    if placement == "first":
+        return tuple(range(size))
+    if placement == "spread":
+        stride = max(1, num_users // size)
+        return tuple(sorted(set(
+            min(i * stride, num_users - 1) for i in range(size))))
+    return tuple(range(num_users - size, num_users))
+
+
+def placement_mask(num_users: int, indices: Tuple[int, ...]
+                   ) -> jnp.ndarray:
+    """0/1 float mask [N] for a static client-index set."""
+    mask = [0.0] * num_users
+    for i in indices:
+        mask[i] = 1.0
+    return jnp.asarray(mask, jnp.float32)
+
+
 class Attack:
     """Corrupts the malicious clients' models after local training.
 
@@ -225,38 +277,17 @@ class Attack:
     def __init__(self, *, num_malicious: int = 0, scale: float = 1.0,
                  placement: str = "last",
                  indices: Optional[Tuple[int, ...]] = None):
-        if indices is not None:
-            indices = tuple(int(i) for i in indices)
-            num_malicious = len(indices)
-        if placement not in ("last", "first", "spread"):
-            raise ValueError(
-                f"placement must be 'last'|'first'|'spread', got "
-                f"{placement!r}")
-        self.num_malicious = int(num_malicious)
+        self.num_malicious, self.placement, self._indices = \
+            normalize_placement(num_malicious, placement, indices)
         self.scale = float(scale)
-        self.placement = placement
-        self._indices = indices
 
     def malicious_indices(self, num_users: int) -> Tuple[int, ...]:
         """Static malicious id set (evaluation-side knowledge only)."""
-        m = self.num_malicious
-        if m == 0:
-            return ()
-        if self._indices is not None:
-            return self._indices
-        if self.placement == "first":
-            return tuple(range(m))
-        if self.placement == "spread":
-            stride = max(1, num_users // m)
-            return tuple(sorted(set(
-                min(i * stride, num_users - 1) for i in range(m))))
-        return tuple(range(num_users - m, num_users))
+        return resolve_placement(num_users, self.num_malicious,
+                                 self.placement, self._indices)
 
     def malicious_mask(self, num_users: int) -> jnp.ndarray:
-        mask = [0.0] * num_users
-        for i in self.malicious_indices(num_users):
-            mask[i] = 1.0
-        return jnp.asarray(mask, jnp.float32)
+        return placement_mask(num_users, self.malicious_indices(num_users))
 
     def corrupt(self, key, trained, global_params, ctx=None,
                 client_idx=None):
@@ -332,12 +363,20 @@ class Attack:
 
 
 class Selector:
-    """Picks the K tester ids for a round."""
+    """Picks the K tester ids for a round.
+
+    ``scores`` (keyword-only, ``None`` from legacy callers) carries the
+    ``[N]`` moving-average scores *entering* the round — the engine
+    threads them through :meth:`RoundProgram.select_round` on every
+    backend, so score-aware policies (``score_weighted``,
+    DESIGN.md §7) see the identical replicated signal and stay
+    bit-identical across backends. Score-oblivious policies ignore it.
+    """
 
     name = "base"
 
     def select(self, key, num_users: int, num_testers: int,
-               round_idx) -> jnp.ndarray:
+               round_idx, *, scores=None) -> jnp.ndarray:
         raise NotImplementedError
 
     def __repr__(self) -> str:
@@ -347,3 +386,4 @@ class Selector:
 AGGREGATORS = Registry("aggregator")
 ATTACKS = Registry("attack")
 SELECTORS = Registry("selector")
+COALITIONS = Registry("coalition")

@@ -1,0 +1,309 @@
+"""Coalition adversaries: coordinated multi-client attack strategies.
+
+A :class:`Coalition` binds a static set of client indices (the *members*,
+placed like an attack's malicious set — ``size`` + ``placement`` or an
+explicit ``indices`` tuple) to up to two coordinated behaviours, the two
+attack surfaces of the DESIGN.md §7 taxonomy:
+
+* a **model-space attack** — :meth:`Coalition.model_attack` returns an
+  :class:`~repro.strategies.base.Attack` applied to the members (step 3
+  of the round). ``sybil_split`` uses the registered
+  ``scaled_collusion`` attack: the members split one large poisoned
+  update so each member's individual deviation stays ``1/|C|`` of the
+  full-scale poison — under ``adaptive_scale``-style weight/magnitude
+  thresholds — while the coalition's *aggregate* contribution keeps the
+  full scale.
+* a **report-space attack** — :meth:`Coalition.transform_reports`
+  rewrites the replicated ``[K, N]`` accuracy matrix *after*
+  cross-testing (step 5b). ``mutual_boost`` generalises the independent
+  ``lying_testers`` flag into the masked-matrix transform of
+  DESIGN.md §7: member rows report ``boost_to`` for every member and
+  ``deflate_to`` for the ``deflate_top`` top-scoring honest clients
+  (targets read from the round's :class:`AttackContext` scores), leaving
+  every other entry untouched. Because every backend replicates the
+  accuracy matrix before scoring, the transform is literally shared code
+  and the three exchange backends stay bit-identical
+  (``tests/test_pod_parity.py``).
+
+The engine resolves ``FedConfig.coalition`` against :data:`COALITIONS`
+once, pre-trace, and composes the coalition with the independent
+``FedConfig.attack`` via :meth:`Coalition.compose`: the malicious index
+set becomes the *union* of the attack's set and the members (so the
+``malicious_weight`` metric reports the coalition's aggregate weight),
+and the coalition's model attack takes precedence on members. A
+sitting-out coalition gains nothing from client sampling: score freezing
+(DESIGN.md §2a) carries a suppressed member's score unchanged through the
+rounds it skips.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.strategies.base import (
+    ATTACKS, Attack, AttackContext, COALITIONS, normalize_placement,
+    placement_mask, register, resolve_placement)
+
+
+class Coalition:
+    """A coordinated set of clients (DESIGN.md §7).
+
+    Subclasses override :meth:`model_attack` (coordinated model-space
+    corruption, an :class:`Attack` over the members) and / or
+    :meth:`transform_reports` (coordinated report-space corruption of the
+    replicated accuracy matrix). The base class is the inactive
+    coalition: no members, no behaviour.
+    """
+
+    name = "base"
+
+    def __init__(self, *, size: int = 0, placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None):
+        self.size, self.placement, self._indices = normalize_placement(
+            size, placement, indices)
+
+    # ------------------------------------------------------------ membership
+    def members(self, num_users: int) -> Tuple[int, ...]:
+        """Static member id set (same placement formula as attacks)."""
+        return resolve_placement(num_users, self.size, self.placement,
+                                 self._indices)
+
+    def member_mask(self, num_users: int) -> jnp.ndarray:
+        return placement_mask(num_users, self.members(num_users))
+
+    @property
+    def active(self) -> bool:
+        return self.size > 0
+
+    # ------------------------------------------------------------ behaviours
+    def model_attack(self) -> Optional[Attack]:
+        """Coordinated model-space attack over the members, or ``None``."""
+        return None
+
+    def transform_reports(self, key, acc: jnp.ndarray,
+                          tester_ids: jnp.ndarray,
+                          ctx: AttackContext) -> jnp.ndarray:
+        """Report-space attack on the replicated ``[K, N]`` matrix.
+
+        Called once per round (step 5b), after honest cross-testing and
+        the legacy ``lying_testers`` noise, with the round's
+        :class:`AttackContext` so the lie can target the current scores.
+        Identity by default.
+        """
+        return acc
+
+    # ----------------------------------------------------------- composition
+    def compose(self, base_attack: Attack, num_users: int) -> Attack:
+        """Fold this coalition into the round's attack seam.
+
+        Returns ``base_attack`` unchanged when the coalition is inactive;
+        otherwise a :class:`CoalitionAttack` whose malicious set is the
+        union of the base attack's set and the members — members count
+        toward ``malicious_weight`` even for report-space-only coalitions
+        (a lying tester is malicious whether or not it also poisons its
+        model).
+        """
+        if not self.active:
+            return base_attack
+        return CoalitionAttack(self, base_attack, num_users)
+
+    def __repr__(self) -> str:
+        return (f"<coalition {self.name} size={self.size} "
+                f"placement={self.placement}>")
+
+
+class CoalitionAttack(Attack):
+    """The composed attack seam: coalition members ∪ independent attackers.
+
+    ``corrupt`` routes each client to the right corruption — the
+    coalition's model attack on members (when it defines one), the base
+    attack on its own malicious set otherwise — selected with masks over
+    the (possibly traced, under SPMD) ``client_idx``, so the inherited
+    ``apply`` / ``apply_local`` machinery keeps the stacked and per-shard
+    paths bit-identical (DESIGN.md §7). Members of a report-space-only
+    coalition keep their honest trained model but still count as
+    malicious for the ``malicious_weight`` metric.
+    """
+
+    name = "coalition"
+
+    def __init__(self, coalition: Coalition, base_attack: Attack,
+                 num_users: int):
+        self.coalition = coalition
+        self.base = base_attack
+        self.coal_attack = coalition.model_attack()
+        self.num_users = int(num_users)
+        # Attack bookkeeping fields (repr / legacy introspection only;
+        # malicious_indices is overridden below)
+        union = self.malicious_indices(num_users)
+        self.num_malicious = len(union)
+        self.scale = base_attack.scale
+        self.placement = base_attack.placement
+        self._indices = union
+
+    def malicious_indices(self, num_users: int) -> Tuple[int, ...]:
+        # re-resolved per queried size (the base-class contract): the
+        # union of the base attack's placement and the member set
+        return tuple(sorted(
+            set(self.base.malicious_indices(num_users))
+            | set(self.coalition.members(num_users))))
+
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        if client_idx is None:
+            # legacy callers without a client identity cannot be routed
+            # through the member masks — degrade to the unconditional
+            # coordinated corruption (adaptive_scale's precedent)
+            primary = self.coal_attack or self.base
+            return primary.corrupt(key, trained, global_params, ctx, None)
+        n = self.num_users
+        out = trained
+        coal_mask = self.coalition.member_mask(n)
+        if self.coal_attack is not None:
+            bad = self.coal_attack.corrupt(key, trained, global_params,
+                                           ctx, client_idx)
+            in_coal = coal_mask[client_idx] > 0
+            out = jax.tree_util.tree_map(
+                lambda t, b: jnp.where(in_coal, b.astype(t.dtype), t),
+                out, bad)
+        if self.base.malicious_indices(n):
+            bad = self.base.corrupt(key, trained, global_params, ctx,
+                                    client_idx)
+            in_base = self.base.malicious_mask(n)[client_idx] > 0
+            if self.coal_attack is not None:
+                # the coalition's coordinated corruption takes precedence
+                # on members that sit in both sets
+                in_base = in_base & ~(coal_mask[client_idx] > 0)
+            out = jax.tree_util.tree_map(
+                lambda t, b: jnp.where(in_base, b.astype(t.dtype), t),
+                out, bad)
+        return out
+
+    def __repr__(self) -> str:
+        return (f"<attack coalition {self.coalition.name} "
+                f"base={self.base.name} union={self._indices}>")
+
+
+@register(COALITIONS, "none")
+class NoCoalition(Coalition):
+    """No coordination — the independent-adversary default."""
+
+    def members(self, num_users: int) -> Tuple[int, ...]:
+        return ()
+
+    @property
+    def active(self) -> bool:
+        return False
+
+
+@register(COALITIONS, "mutual_boost")
+class MutualBoost(Coalition):
+    """Colluding testers: boost each other, defame the honest leaders.
+
+    The report-space coalition of DESIGN.md §7 — whenever a member is
+    selected as a tester, its row of the replicated accuracy matrix is
+    rewritten by the masked-matrix transform
+
+        A'[k, c] = (1 − m_k) · A[k, c]
+                 + m_k · (C_c · boost_to
+                          + H_c · deflate_to
+                          + (1 − C_c − H_c) · A[k, c])
+
+    where ``m = C[tester_ids]`` flags member rows, ``C`` is the member
+    mask and ``H`` the ``deflate_top`` top-scoring *honest* clients by
+    the scores entering the round (read from the ``AttackContext``, so
+    the defamation tracks whoever FedTest currently trusts most;
+    ``deflate_top=0`` is the boost-only ablation, ``None`` defaults to
+    the coalition size). This generalises the independent
+    ``lying_testers`` flag (uniform-noise rows) into coordinated,
+    targeted lying.
+    """
+
+    def __init__(self, *, size: int = 0, placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None,
+                 boost_to: float = 1.0, deflate_to: float = 0.0,
+                 deflate_top: Optional[int] = None):
+        super().__init__(size=size, placement=placement, indices=indices)
+        if not 0.0 <= deflate_to <= boost_to <= 1.0:
+            raise ValueError(
+                f"need 0 <= deflate_to <= boost_to <= 1, got "
+                f"deflate_to={deflate_to}, boost_to={boost_to}")
+        self.boost_to = float(boost_to)
+        self.deflate_to = float(deflate_to)
+        if deflate_top is not None and deflate_top < 0:
+            raise ValueError(
+                f"deflate_top must be >= 0 (0 = boost-only), got "
+                f"{deflate_top}")
+        self.deflate_top = (None if deflate_top is None
+                            else int(deflate_top))
+
+    def transform_reports(self, key, acc, tester_ids, ctx):
+        n = acc.shape[1]
+        member = self.member_mask(n)                            # C [N]
+        liar_rows = member[tester_ids] > 0                      # m [K]
+        # deflate_top=0 is the boost-only ablation (no defamation)
+        top = self.deflate_top if self.deflate_top is not None else self.size
+        top = min(top, n)
+        lied = acc
+        if top > 0:
+            # top-scoring honest clients by the scores entering the
+            # round; members are excluded — no self-defamation
+            honest_scores = jnp.where(member > 0, -jnp.inf, ctx.scores)
+            _, idx = jax.lax.top_k(honest_scores, top)
+            target = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)  # H [N]
+            lied = jnp.where(target[None, :] > 0, self.deflate_to, lied)
+        lied = jnp.where(member[None, :] > 0, self.boost_to, lied)
+        return jnp.where(liar_rows[:, None], lied, acc)
+
+
+class _SybilModelAttack:
+    """Mixin supplying the split-scale coordinated model attack."""
+
+    def model_attack(self) -> Attack:
+        return ATTACKS.build(
+            "scaled_collusion",
+            dict(num_malicious=self.size, placement=self.placement,
+                 indices=self._indices, scale=self.scale,
+                 split=max(1, self.size)))
+
+
+@register(COALITIONS, "sybil_split")
+class SybilSplit(_SybilModelAttack, Coalition):
+    """Sybil-split model poisoning (DESIGN.md §7).
+
+    The members jointly mount one full-scale sign-flip poison of total
+    magnitude ``scale`` and split it evenly: each member sends
+    ``g − (scale/|C|)·(t − g)``, so no single update exceeds ``1/|C|`` of
+    the poison — under per-client magnitude / weight thresholds — while
+    the sum over the coalition reconstructs the full attack. Implemented
+    through the registered ``scaled_collusion`` attack, so the same
+    corruption is drivable standalone via ``--attack scaled_collusion``.
+    """
+
+    def __init__(self, *, size: int = 0, placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None,
+                 scale: float = 8.0):
+        super().__init__(size=size, placement=placement, indices=indices)
+        self.scale = float(scale)
+
+
+@register(COALITIONS, "full_collusion")
+class FullCollusion(_SybilModelAttack, MutualBoost):
+    """The combined worst case: sybil-split poisoning + mutual boosting.
+
+    Members corrupt their models with the split-scale poison *and*
+    rewrite their tester rows with the ``mutual_boost`` transform —
+    every coordinated behaviour of DESIGN.md §7 at once.
+    """
+
+    def __init__(self, *, size: int = 0, placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None,
+                 scale: float = 8.0, boost_to: float = 1.0,
+                 deflate_to: float = 0.0,
+                 deflate_top: Optional[int] = None):
+        super().__init__(size=size, placement=placement, indices=indices,
+                         boost_to=boost_to, deflate_to=deflate_to,
+                         deflate_top=deflate_top)
+        self.scale = float(scale)

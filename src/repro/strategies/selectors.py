@@ -1,13 +1,36 @@
 """Registered tester-selection policies (Algorithm 1 line 16).
 
-* ``rotating``    — independent random K-subset per round (the paper's
-  scheme; a fresh draw keyed on the round index).
-* ``round_robin`` — deterministic contiguous blocks walking the client
-  ring, so every client testers exactly once per N/K rounds (the
+How the K testers are drawn is a defence knob in its own right —
+DESIGN.md §7 analyses how each policy changes a coalition's expected
+liar-row count per round:
+
+* ``rotating``       — independent random K-subset per round (the
+  paper's scheme; a fresh draw keyed on the round index).
+* ``uniform``        — alias of ``rotating`` under the taxonomy name
+  (every client equally likely to tester, every round independent).
+* ``round_robin``    — deterministic contiguous blocks walking the
+  client ring, so every client testers exactly once per N/K rounds (the
   orthogonal-RB schedule's deterministic analogue, DESIGN.md §3).
-* ``fixed``       — a pinned tester committee (defaults to clients
+* ``coverage``       — randomised coverage schedule: a per-cycle
+  permutation of the clients is consumed in K-blocks, so every client
+  testers within ``ceil(N/K)`` rounds (like ``round_robin``) but a
+  coalition cannot predict *which* future round it will hold tester
+  rows (unlike ``round_robin``; DESIGN.md §7).
+* ``score_weighted`` — Gumbel-top-k draw without replacement with
+  probabilities proportional to the moving-average scores entering the
+  round: clients the federation currently trusts test more often. Under
+  coalition attacks this is double-edged — it concentrates tester rows
+  on honest leaders while they lead, but rewards a coalition that has
+  successfully boosted itself (measured by the coalition sweep,
+  EXPERIMENTS.md §Coalition-sweep).
+* ``fixed``          — a pinned tester committee (defaults to clients
   0..K-1, or an explicit ``indices`` tuple) — the ablation where
   compromised fixed testers matter most.
+
+Every policy is a traced function of ``(key, round_idx, scores)`` — no
+Python branching on round state — so rounds never retrace and the three
+exchange backends derive bit-identical tester sets from equal keys
+(``RoundProgram.select_round`` threads the replicated scores).
 """
 from __future__ import annotations
 
@@ -24,8 +47,14 @@ from repro.strategies.base import SELECTORS, Selector, register
 class Rotating(Selector):
     """Random K-subset, redrawn each round (Alg. 1 line 16)."""
 
-    def select(self, key, num_users, num_testers, round_idx):
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
         return select_testers(key, num_users, num_testers, round_idx)
+
+
+@register(SELECTORS, "uniform")
+class UniformDraw(Rotating):
+    """Alias of ``rotating`` under the DESIGN.md §7 taxonomy name."""
 
 
 @register(SELECTORS, "round_robin")
@@ -33,9 +62,69 @@ class RoundRobin(Selector):
     """Deterministic block rotation: round r tests clients
     ``(r*K + 0..K-1) mod N``."""
 
-    def select(self, key, num_users, num_testers, round_idx):
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
         start = (round_idx * num_testers) % num_users
         return (start + jnp.arange(num_testers)) % num_users
+
+
+@register(SELECTORS, "coverage")
+class Coverage(Selector):
+    """Randomised coverage: shuffled round-robin, unpredictable to a
+    coalition.
+
+    Each cycle of ``ceil(N/K)`` rounds consumes one permutation of the
+    client ids in contiguous K-blocks, so every client testers at least
+    once per cycle; the permutation is redrawn per cycle from a key
+    folded with the cycle index (seeded by the static ``seed``, *not*
+    the per-round key, which differs every round), so future tester
+    sets stay unpredictable without sacrificing the coverage guarantee
+    (DESIGN.md §7).
+    """
+
+    def __init__(self, *, seed: int = 0):
+        self.seed = int(seed)
+
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        cycle_len = -(-num_users // num_testers)        # ceil(N/K)
+        cycle = round_idx // cycle_len
+        phase = round_idx % cycle_len
+        perm = jax.random.permutation(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), cycle),
+            num_users)
+        start = phase * num_testers
+        return perm[(start + jnp.arange(num_testers)) % num_users]
+
+
+@register(SELECTORS, "score_weighted")
+class ScoreWeighted(Selector):
+    """Trust-proportional testers: P(c testers) ∝ scores[c] + eps.
+
+    A Gumbel-top-k draw — ``top_k(log p + Gumbel noise, K)`` samples K
+    ids *without replacement* with probabilities proportional to ``p``
+    under jit, no rejection loop. Before any scores exist (the all-zero
+    init) the draw degrades to uniform via ``eps``. The coalition sweep
+    (EXPERIMENTS.md §Coalition-sweep) measures how this policy shifts
+    suppression under ``mutual_boost``.
+    """
+
+    def __init__(self, *, eps: float = 1e-3):
+        if eps <= 0.0:
+            raise ValueError(f"eps must be > 0, got {eps}")
+        self.eps = float(eps)
+
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        if scores is None:
+            p = jnp.ones((num_users,), jnp.float32)
+        else:
+            p = jnp.maximum(scores.astype(jnp.float32), 0.0) + self.eps
+        gumbel = -jnp.log(-jnp.log(
+            jax.random.uniform(key, (num_users,), minval=1e-12,
+                               maxval=1.0)))
+        _, ids = jax.lax.top_k(jnp.log(p) + gumbel, num_testers)
+        return ids.astype(jnp.int32)
 
 
 @register(SELECTORS, "fixed")
@@ -46,7 +135,8 @@ class Fixed(Selector):
         self.indices = (tuple(int(i) for i in indices)
                         if indices is not None else None)
 
-    def select(self, key, num_users, num_testers, round_idx):
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
         if self.indices is not None:
             if len(self.indices) != num_testers:
                 raise ValueError(

@@ -1,0 +1,441 @@
+"""Coalition adversaries + tester-selection strategies (DESIGN.md §7).
+
+Covers the COALITIONS registry contract, the mutual_boost masked-matrix
+report transform, the sybil-split scale arithmetic, the composed attack
+seam (member ∪ independent malicious set), the end-to-end suppression of
+the ``mutual_boost_vs_fedtest`` preset, and the new SELECTORS
+(``uniform`` / ``score_weighted`` / ``coverage``) — mirroring the
+``tests/test_strategies.py`` patterns (KeyError listing, under-jit
+validity, no-retrace).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config, get_scenario, scenario_for_pod
+from repro.core import FederatedTrainer
+from repro.core.scoring import clip_reports_to_consensus
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.models import build_model
+from repro.strategies import ATTACKS, COALITIONS, SELECTORS
+from repro.strategies.base import AttackContext
+
+N_USERS = 8
+
+
+# ----------------------------------------------------------------- registry
+def test_unknown_coalition_raises_keyerror_listing_registered():
+    with pytest.raises(KeyError) as e:
+        COALITIONS.get("definitely_not_registered")
+    msg = str(e.value)
+    assert "definitely_not_registered" in msg
+    assert "mutual_boost" in msg and "sybil_split" in msg
+
+
+def test_fedconfig_validates_coalition_name():
+    with pytest.raises(KeyError, match="full_collusion"):
+        FedConfig(coalition="nope")
+    with pytest.raises(ValueError, match="coalition_size"):
+        FedConfig(num_users=4, num_testers=2, coalition_size=4)
+    # a named coalition with no members would silently measure nothing
+    with pytest.raises(ValueError, match="needs members"):
+        FedConfig(coalition="mutual_boost")
+    # ...as would members with no named coalition
+    with pytest.raises(ValueError, match="coalition="):
+        FedConfig(coalition_size=2)
+    # ...but members via kwargs are fine
+    FedConfig(coalition="mutual_boost",
+              coalition_kwargs={"indices": (1, 2)})
+    # kwargs-based membership gets the same bounds checks as
+    # coalition_size (no full-membership coalition, no stray indices)
+    with pytest.raises(ValueError, match="members < N"):
+        FedConfig(num_users=4, num_testers=2, coalition="mutual_boost",
+                  coalition_kwargs={"size": 4})
+    with pytest.raises(ValueError, match="out of range"):
+        FedConfig(num_users=4, num_testers=2, coalition="mutual_boost",
+                  coalition_kwargs={"indices": (10,)})
+
+
+def test_member_placement_matches_attack_placement():
+    coal = COALITIONS.build("mutual_boost",
+                            {"size": 2, "placement": "first"})
+    assert coal.members(6) == (0, 1)
+    coal = COALITIONS.build("sybil_split", {"indices": (1, 4)})
+    assert coal.members(6) == (1, 4)
+    np.testing.assert_allclose(np.asarray(coal.member_mask(6)),
+                               [0, 1, 0, 0, 1, 0])
+    # the inactive coalition has no members whatever size says
+    assert COALITIONS.build("none", {"size": 3}).members(6) == ()
+
+
+# ------------------------------------------------------- composed attack seam
+def test_compose_unions_malicious_sets_and_routes_corruption():
+    """Coalition members ∪ independent attackers; the coalition's model
+    attack takes precedence on members, the base attack keeps its own
+    slots, report-only members stay model-honest but count as malicious."""
+    base = ATTACKS.build("random_weights", {"indices": (0,)})
+    sybil = COALITIONS.build("sybil_split",
+                             {"indices": (4, 5), "scale": 8.0})
+    composed = sybil.compose(base, 6)
+    assert composed.malicious_indices(6) == (0, 4, 5)
+
+    boost = COALITIONS.build("mutual_boost", {"indices": (4, 5)})
+    composed = boost.compose(base, 6)
+    assert composed.malicious_indices(6) == (0, 4, 5)
+    stacked = {"p": jax.random.normal(jax.random.PRNGKey(0), (6, 4, 3))}
+    gp = {"p": jnp.zeros((4, 3))}
+    out = composed.apply(jax.random.PRNGKey(1), stacked, gp)
+    changed = [bool(np.abs(np.asarray(out["p"][c] - stacked["p"][c])).max()
+                    > 1e-4) for c in range(6)]
+    # report-space-only members (4, 5) keep their honest models; the
+    # independent attacker (0) is still corrupted
+    assert changed == [True, False, False, False, False, False]
+
+
+def test_inactive_coalition_compose_is_identity():
+    base = ATTACKS.build("sign_flip", {}, {"num_malicious": 1})
+    assert COALITIONS.build("none").compose(base, 6) is base
+
+
+def test_sybil_split_scales_per_member_deviation_down():
+    """Each member sends a 1/|C| share of the full-scale poison: the
+    per-member deviation from the global model shrinks with the split
+    while the coalition's summed deviation keeps the full scale."""
+    gp = {"p": jnp.zeros((3, 2))}
+    trained = {"p": jnp.ones((3, 2))}
+    key = jax.random.PRNGKey(0)
+    full = ATTACKS.build("scaled_collusion",
+                         {"num_malicious": 1, "scale": 8.0})
+    quarter = ATTACKS.build("scaled_collusion",
+                            {"num_malicious": 4, "scale": 8.0})
+    assert quarter.split == 4
+    dev_full = np.asarray(full.corrupt(key, trained, gp)["p"])
+    dev_quarter = np.asarray(quarter.corrupt(key, trained, gp)["p"])
+    np.testing.assert_allclose(dev_quarter * 4.0, dev_full, rtol=1e-6)
+    # sign-flip direction: the poison points against the honest update
+    assert (dev_full < 0).all()
+
+
+# ------------------------------------------------- mutual_boost transform
+def _actx(scores):
+    scores = jnp.asarray(scores, jnp.float32)
+    n = scores.shape[0]
+    from repro.core.scoring import ScoreState
+    state = ScoreState(scores=scores, rounds_seen=jnp.ones((), jnp.int32),
+                       tester_trust=jnp.ones((n,), jnp.float32))
+    from repro.core.scoring import score_weights
+    return AttackContext(scores=scores, weights=score_weights(state),
+                         round_idx=jnp.ones((), jnp.int32))
+
+
+def test_mutual_boost_masked_matrix_equation():
+    """The DESIGN.md §7 transform: member tester rows report boost_to
+    for members and deflate_to for the top-scoring honest clients;
+    honest rows and untargeted entries pass through untouched."""
+    n = 6
+    coal = COALITIONS.build("mutual_boost",
+                            {"indices": (4, 5), "boost_to": 0.9,
+                             "deflate_to": 0.1, "deflate_top": 1})
+    acc = jnp.full((3, n), 0.5)
+    # testers: 4 (member, liar row), 0 and 1 (honest rows)
+    tester_ids = jnp.asarray([4, 0, 1])
+    # client 2 is the top-scoring honest client -> the defamation target
+    ctx = _actx([0.3, 0.2, 0.8, 0.1, 0.9, 0.9])
+    out = np.asarray(coal.transform_reports(jax.random.PRNGKey(0), acc,
+                                            tester_ids, ctx))
+    # liar row: members boosted, top-honest deflated, rest untouched
+    np.testing.assert_allclose(out[0], [0.5, 0.5, 0.1, 0.5, 0.9, 0.9])
+    # honest rows bit-identical
+    np.testing.assert_allclose(out[1:], np.asarray(acc)[1:])
+    # members are never the defamation target even with top scores
+    assert out[0, 4] == pytest.approx(0.9) and out[0, 5] == pytest.approx(0.9)
+
+
+def test_mutual_boost_deflate_top_zero_is_boost_only():
+    """deflate_top=0 must mean no defamation at all, not top-1."""
+    coal = COALITIONS.build("mutual_boost",
+                            {"indices": (4, 5), "boost_to": 0.9,
+                             "deflate_top": 0})
+    acc = jnp.full((2, 6), 0.5)
+    out = np.asarray(coal.transform_reports(
+        jax.random.PRNGKey(0), acc, jnp.asarray([4, 0]),
+        _actx([0.3, 0.2, 0.8, 0.1, 0.9, 0.9])))
+    np.testing.assert_allclose(out[0], [0.5, 0.5, 0.5, 0.5, 0.9, 0.9])
+    np.testing.assert_allclose(out[1], np.asarray(acc)[1])
+    with pytest.raises(ValueError, match="deflate_top"):
+        COALITIONS.build("mutual_boost", {"size": 2, "deflate_top": -1})
+
+
+def test_legacy_selector_without_scores_kwarg_still_works():
+    """Third-party selectors written against the pre-scores signature
+    must keep working: the engine inspects the signature pre-trace and
+    only forwards scores to policies that accept it."""
+    from repro.strategies import SELECTORS, Selector, register
+
+    name = "test_only_legacy_selector"
+    if name not in SELECTORS:
+        @register(SELECTORS, name)
+        class Legacy(Selector):
+            def select(self, key, num_users, num_testers, round_idx):
+                return jnp.arange(num_testers, dtype=jnp.int32)
+
+    from repro.core.engine.program import RoundProgram
+    from repro.config import TrainConfig
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                                  cnn_hidden=16)
+    program = RoundProgram(
+        build_model(cfg),
+        FedConfig(num_users=4, num_testers=2, selector=name),
+        TrainConfig())
+    assert not program._selector_takes_scores
+    from repro.core.engine.program import round_keys
+    ids, _ = program.select_round(round_keys(jax.random.PRNGKey(0)),
+                                  jnp.zeros((), jnp.int32),
+                                  scores=jnp.zeros(4))
+    np.testing.assert_array_equal(np.asarray(ids), [0, 1])
+
+
+def test_coverage_seed_threads_from_fedconfig():
+    """resolve_strategies hands the run seed to schedule-based
+    selectors: different seeds give different coverage schedules."""
+    from repro.core.engine.program import resolve_strategies
+    ids = {}
+    for seed in (0, 1):
+        _, _, sel = resolve_strategies(
+            FedConfig(num_users=12, num_testers=3, selector="coverage",
+                      seed=seed))
+        assert sel.seed == seed
+        ids[seed] = [np.asarray(sel.select(jax.random.PRNGKey(9), 12, 3,
+                                           jnp.asarray(r))).tolist()
+                     for r in range(4)]
+    assert ids[0] != ids[1]
+
+
+def test_mutual_boost_no_member_testing_is_identity():
+    coal = COALITIONS.build("mutual_boost", {"indices": (4, 5)})
+    acc = jax.random.uniform(jax.random.PRNGKey(0), (3, 6))
+    out = coal.transform_reports(jax.random.PRNGKey(1), acc,
+                                 jnp.asarray([0, 1, 2]),
+                                 _actx(np.zeros(6)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(acc))
+
+
+def test_report_clip_bounds_any_single_report():
+    """Consensus winsorisation: a 1.0-boost / 0.0-smear row moves no
+    report further than ``clip`` from the per-client median."""
+    acc = jnp.asarray([[0.8, 0.1], [0.7, 0.1], [1.0, 0.0]])  # row 2 lies
+    out = np.asarray(clip_reports_to_consensus(acc, 0.1))
+    np.testing.assert_allclose(out[2], [0.9, 0.0], atol=1e-6)
+    # honest reports near consensus are exact
+    np.testing.assert_allclose(out[0], [0.8, 0.1], atol=1e-6)
+
+
+# --------------------------------------------------------------- selectors
+def test_new_selectors_return_valid_ids_under_jit():
+    key = jax.random.PRNGKey(0)
+    scores = jnp.asarray(np.linspace(0.1, 1.0, 10), jnp.float32)
+    for name in ("uniform", "score_weighted", "coverage"):
+        sel = SELECTORS.build(name)
+        ids = np.asarray(jax.jit(
+            lambda k, r: sel.select(k, 10, 4, r, scores=scores)
+        )(key, jnp.asarray(2)))
+        assert ids.shape == (4,)
+        assert len(set(ids.tolist())) == 4, name
+        assert ((ids >= 0) & (ids < 10)).all(), name
+
+
+def test_score_weighted_prefers_high_scores():
+    """Gumbel-top-k sampling ∝ scores: the top-scoring client testers
+    far more often than the bottom one; the zero-score init degrades to
+    a uniform draw (every client still reachable)."""
+    sel = SELECTORS.build("score_weighted")
+    scores = jnp.asarray([0.01] * 9 + [1.0], jnp.float32)
+    hits = np.zeros(10)
+    for r in range(64):
+        ids = np.asarray(sel.select(jax.random.PRNGKey(r), 10, 3,
+                                    jnp.asarray(r), scores=scores))
+        hits[ids] += 1
+    assert hits[9] > 55            # ~always selected
+    assert hits[:9].max() < hits[9]
+    # all-zero scores: uniform fallback still reaches everyone
+    hits = np.zeros(10)
+    for r in range(64):
+        ids = np.asarray(sel.select(jax.random.PRNGKey(r), 10, 3,
+                                    jnp.asarray(r),
+                                    scores=jnp.zeros(10)))
+        hits[ids] += 1
+    assert (hits > 0).all()
+
+
+def test_coverage_visits_every_client_within_ceil_n_over_k():
+    for n, k in ((10, 4), (8, 2), (7, 3)):
+        sel = SELECTORS.build("coverage")
+        cycle = -(-n // k)
+        seen = set()
+        for r in range(cycle):
+            seen.update(np.asarray(
+                sel.select(jax.random.PRNGKey(0), n, k,
+                           jnp.asarray(r))).tolist())
+        assert seen == set(range(n)), (n, k)
+
+
+def test_coverage_reshuffles_across_cycles():
+    sel = SELECTORS.build("coverage")
+    n, k = 12, 3
+    cycle = n // k
+    first = [np.asarray(sel.select(jax.random.PRNGKey(0), n, k,
+                                   jnp.asarray(r))).tolist()
+             for r in range(cycle)]
+    second = [np.asarray(sel.select(jax.random.PRNGKey(0), n, k,
+                                    jnp.asarray(cycle + r))).tolist()
+              for r in range(cycle)]
+    assert sorted(sum(first, [])) == sorted(sum(second, []))  # coverage
+    assert first != second                                     # reshuffled
+
+
+# ---------------------------------------------------------------- end-to-end
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("fedtest-cnn-mnist").replace(
+        cnn_channels=(8, 16, 16), cnn_hidden=32)
+    model = build_model(cfg)
+    data = make_federated_image_dataset(
+        MNIST_LIKE, N_USERS, num_samples=2400, global_test=300, seed=0,
+        partition_kwargs={"min_classes": 8, "max_classes": 10})
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=16, grad_clip=0.0, remat=False)
+    return model, data, tc
+
+
+def _refit(name, **overrides):
+    """The presets refit to the 8-user test federation (the dynamics
+    configuration of EXPERIMENTS.md §Paper-validation)."""
+    fed = get_scenario(name)
+    return dataclasses.replace(
+        fed, num_users=N_USERS, num_testers=5,
+        num_malicious=min(fed.num_malicious, 2), coalition_size=2,
+        local_steps=6, **overrides)
+
+
+def test_mutual_boost_preset_suppressed_by_round_8(smoke_setup):
+    """The acceptance dynamics: the defended preset (trust consensus +
+    consensus-clipped reports) drives the lying coalition's aggregate
+    weight below 0.1 by round 8 (DESIGN.md §7)."""
+    model, data, tc = smoke_setup
+    fed = _refit("mutual_boost_vs_fedtest")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(8):
+        state, metrics = trainer.run_round(state, data)
+    assert float(metrics["malicious_weight"]) < 0.1
+    assert trainer.num_traces == 1
+
+
+def test_sybil_split_preset_suppressed(smoke_setup):
+    model, data, tc = smoke_setup
+    fed = _refit("sybil_split_vs_fedtest")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    # the composed seam reports the members as the malicious set
+    assert trainer.attack.malicious_indices(N_USERS) == (6, 7)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(8):
+        state, metrics = trainer.run_round(state, data)
+    assert float(metrics["malicious_weight"]) < 0.1
+
+
+def test_coalition_no_retrace_across_rounds(smoke_setup):
+    """Coalition resolution is pre-trace like every other strategy: N
+    rounds through the composed seam + report transform -> one trace;
+    same for the score_weighted selector's scores threading."""
+    model, data, tc = smoke_setup
+    fed = _refit("full_collusion_vs_fedtest", selector="score_weighted")
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        state, _ = trainer.run_round(state, data)
+    assert trainer.num_traces == 1
+
+
+def test_scenario_for_pod_refits_coalition_by_fraction():
+    fed = scenario_for_pod("mutual_boost_vs_fedtest", 4)
+    assert fed.coalition_size == 1 and fed.num_malicious == 1
+    fed = scenario_for_pod("mutual_boost_vs_fedtest", 8)
+    assert fed.coalition_size == 2 and fed.num_malicious == 2
+    # growing the pod grows both halves of the paired adversary
+    fed = scenario_for_pod("mutual_boost_vs_fedtest", 40)
+    assert fed.coalition_size == 8 and fed.num_malicious == 8
+    fed = scenario_for_pod("sybil_split_vs_fedtest", 8)
+    assert fed.coalition_size == 2 and fed.num_malicious == 0
+    # non-coalition presets keep the historical clamp
+    fed = scenario_for_pod("paper_random_weights", 4)
+    assert fed.coalition_size == 0 and fed.num_malicious == 3
+    # a 1-client pod cannot hold a coalition: the refit degrades to a
+    # valid honest config instead of tripping the needs-members check
+    fed = scenario_for_pod("mutual_boost_vs_fedtest", 1)
+    assert fed.coalition == "none" and fed.coalition_size == 0
+
+
+def test_scenario_for_pod_refits_kwargs_based_membership():
+    """A scenario whose members come from coalition_kwargs (size= or
+    indices=) must survive the pod refit: the refit takes over the
+    membership (stale indices could out-range the smaller pod)."""
+    import repro.configs.scenarios as sc
+    sc.SCENARIOS["_test_kwargs_coalition"] = FedConfig(
+        num_users=20, num_testers=5, attack="none",
+        coalition="mutual_boost",
+        coalition_kwargs={"indices": (17, 18, 19)})
+    try:
+        fed = scenario_for_pod("_test_kwargs_coalition", 4)
+        assert fed.coalition == "mutual_boost"
+        assert fed.coalition_size == 1            # 3/20 -> ~15% of 4
+        kw = dict(fed.coalition_kwargs)
+        assert "indices" not in kw and "size" not in kw
+        # the refit config resolves to in-range members
+        from repro.core.engine.program import resolve_coalition
+        assert resolve_coalition(fed).members(4) == (3,)
+    finally:
+        del sc.SCENARIOS["_test_kwargs_coalition"]
+
+
+def test_coalition_attack_corrupt_without_client_idx_degrades():
+    """Legacy corrupt(key, trained, gp) calls (no client identity) fall
+    back to the unconditional coordinated corruption instead of
+    broadcasting a member mask into the leaves."""
+    gp = {"p": jnp.zeros((3, 2))}
+    trained = {"p": jnp.ones((3, 2))}
+    key = jax.random.PRNGKey(0)
+    sybil = COALITIONS.build("sybil_split", {"size": 2, "scale": 8.0})
+    composed = sybil.compose(ATTACKS.build("none"), 6)
+    want = sybil.model_attack().corrupt(key, trained, gp)
+    got = composed.corrupt(key, trained, gp)
+    np.testing.assert_array_equal(np.asarray(got["p"]),
+                                  np.asarray(want["p"]))
+    # report-only coalition: degrades to the base attack (here: none)
+    boost = COALITIONS.build("mutual_boost", {"size": 2})
+    got = boost.compose(ATTACKS.build("none"), 6).corrupt(key, trained, gp)
+    np.testing.assert_array_equal(np.asarray(got["p"]),
+                                  np.asarray(trained["p"]))
+
+
+def test_fedtest_aggregator_validates_defence_kwargs():
+    from repro.strategies import AGGREGATORS
+    with pytest.raises(ValueError, match="report_clip"):
+        AGGREGATORS.build("fedtest", {"report_clip": -0.2})
+    with pytest.raises(ValueError, match="trust_decay"):
+        AGGREGATORS.build("fedtest", {"trust_decay": 1.5})
+
+
+def test_coalition_attack_reresolves_indices_per_size():
+    """malicious_indices honors its num_users argument (the Attack
+    contract) instead of returning the compose-time union."""
+    base = ATTACKS.build("none")
+    coal = COALITIONS.build("mutual_boost", {"size": 2})  # last-2
+    composed = coal.compose(base, 8)
+    assert composed.malicious_indices(8) == (6, 7)
+    assert composed.malicious_indices(4) == (2, 3)
+    np.testing.assert_allclose(np.asarray(composed.malicious_mask(4)),
+                               [0, 0, 1, 1])

@@ -4,10 +4,13 @@ The tentpole contract of ``repro.core.engine`` (DESIGN.md §2 and §3): the
 ``local`` (vmap), ``ring`` and ``allgather`` (shard_map) exchange
 backends drive one shared ``RoundProgram``, so replaying the same key
 schedule across {no_attack, sign_flip, adaptive_scale} x
-{participation 1.0, 0.75} must produce **bit-identical** weights,
-scores and malicious-weight trajectories on all three — the backends
-exchange models differently but score the identical replicated
-accuracy matrix through identical code.
+{participation 1.0, 0.75} — plus the coalition scenarios
+{mutual_boost, sybil_split} x {participation 1.0, 0.75}
+(DESIGN.md §7: the report transform runs on the replicated matrix, the
+sybil split through the composed attack seam) — must produce
+**bit-identical** weights, scores and malicious-weight trajectories on
+all three — the backends exchange models differently but score the
+identical replicated accuracy matrix through identical code.
 
 The pod rounds run in a subprocess (device-count flag) and replay the
 single-host driver's exact per-round schedule: base key
@@ -25,9 +28,24 @@ import numpy as np
 import pytest
 
 ROUNDS = 4
-CASES = [("none", 1.0), ("none", 0.75),
-         ("sign_flip", 1.0), ("sign_flip", 0.75),
-         ("adaptive_scale", 1.0), ("adaptive_scale", 0.75)]
+# (attack, participation, coalition, selector): coalition scenarios run
+# the mutual_boost report transform / sybil_split composed model attack
+# with 2 of the 4 clients coordinated (attack "none" isolates the
+# coalition machinery; the members still count as malicious); the
+# score_weighted / coverage cases pin the scores= threading into
+# Selector.select across backends (DESIGN.md §4)
+CASES = [("none", 1.0, "none", "rotating"),
+         ("none", 0.75, "none", "rotating"),
+         ("sign_flip", 1.0, "none", "rotating"),
+         ("sign_flip", 0.75, "none", "rotating"),
+         ("adaptive_scale", 1.0, "none", "rotating"),
+         ("adaptive_scale", 0.75, "none", "rotating"),
+         ("none", 1.0, "mutual_boost", "rotating"),
+         ("none", 0.75, "mutual_boost", "rotating"),
+         ("none", 1.0, "sybil_split", "rotating"),
+         ("none", 0.75, "sybil_split", "rotating"),
+         ("none", 1.0, "mutual_boost", "score_weighted"),
+         ("none", 0.75, "none", "coverage")]
 
 SCRIPT = r"""
 import os
@@ -65,10 +83,16 @@ mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
 tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
 
 results = {}
-for attack, participation in CASES:
-    fed = FedConfig(num_users=N, num_testers=N,
+for attack, participation, coalition, selector in CASES:
+    # a K < N committee makes the selector cases non-trivial (which
+    # clients tester actually varies with the scores / schedule)
+    fed = FedConfig(num_users=N,
+                    num_testers=N if selector == "rotating" else 3,
                     num_malicious=0 if attack == "none" else 1,
                     attack=attack, attack_scale=4.0,
+                    coalition=coalition,
+                    coalition_size=0 if coalition == "none" else 2,
+                    selector=selector,
                     participation=participation, local_steps=6, seed=0)
 
     # ---- local (vmap) backend via the single-host driver --------------
@@ -112,7 +136,7 @@ for attack, participation in CASES:
             traj[exchange]["mal_w"].append(float(m["malicious_weight"]))
             traj[exchange]["rate"].append(
                 float(m["participation_rate"]))
-    results[f"{attack}|{participation}"] = traj
+    results[f"{attack}|{participation}|{coalition}|{selector}"] = traj
 
 print(json.dumps(results))
 """ % {"rounds": ROUNDS, "cases": CASES}
@@ -123,16 +147,16 @@ def test_three_backend_equivalence_matrix():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=900)
+                          capture_output=True, text=True, timeout=1500)
     assert proc.returncode == 0, proc.stderr[-3000:]
     results = json.loads(proc.stdout.strip().splitlines()[-1])
 
-    for attack, participation in CASES:
-        traj = results[f"{attack}|{participation}"]
+    for attack, participation, coalition, selector in CASES:
+        traj = results[f"{attack}|{participation}|{coalition}|{selector}"]
         ref = traj["local"]
         for backend in ("ring", "allgather"):
             other = traj[backend]
-            tag = (attack, participation, backend)
+            tag = (attack, participation, coalition, selector, backend)
             for r in range(ROUNDS):
                 # bit-identical round dynamics: the three backends run
                 # the same program on the same replicated arrays
@@ -157,6 +181,14 @@ def test_three_backend_equivalence_matrix():
 
     # the adversarial cases actually engage the attacker: its weight
     # trajectory must differ from the honest run's last slot
-    honest = results["none|1.0"]["local"]["w"]
-    flipped = results["sign_flip|1.0"]["local"]["w"]
+    honest = results["none|1.0|none|rotating"]["local"]["w"]
+    flipped = results["sign_flip|1.0|none|rotating"]["local"]["w"]
     assert honest != flipped
+    # ...and the coalition cases actually engage the coalition: both
+    # the report transform (mutual_boost) and the composed model attack
+    # (sybil_split) must move the dynamics off the honest trajectory,
+    # and the members (clients 2, 3) must register as malicious weight
+    for coalition in ("mutual_boost", "sybil_split"):
+        coal = results[f"none|1.0|{coalition}|rotating"]["local"]
+        assert coal["w"] != honest, coalition
+        assert any(m > 0.0 for m in coal["mal_w"]), coalition
