@@ -65,7 +65,10 @@ def main():
             return jnp.argmax(logits[:, -1], -1)
         return jax.random.categorical(k, logits[:, -1] / args.temperature)
 
-    toks = sample(logits, key)[:, None].astype(jnp.int32)
+    # key itself already seeded model.init — draw the first token from a
+    # folded stream (9; 10+i cover the rest of the generation loop)
+    toks = sample(logits, jax.random.fold_in(key, 9))[:, None].astype(
+        jnp.int32)
     out = [toks]
     t0 = time.time()
     for i in range(args.gen - 1):

@@ -29,7 +29,14 @@ def stub_spec(cfg, batch: int, dtype=jnp.bfloat16):
     return jax.ShapeDtypeStruct(stub_shape(cfg, batch), dtype)
 
 
-def stub_embeddings(cfg, batch: int, key=None, dtype=jnp.float32):
-    key = key if key is not None else jax.random.PRNGKey(0)
+def stub_embeddings(cfg, batch: int, key=None, dtype=jnp.float32, *,
+                    seed: int = 0):
+    """Deterministic stand-in frontend activations.
+
+    Callers that care about the stream pass ``key``; the ``seed``
+    fallback keeps the key derivation explicit (FL001) instead of a
+    buried ``PRNGKey(0)``.
+    """
+    key = key if key is not None else jax.random.PRNGKey(seed)
     return jax.random.normal(key, stub_shape(cfg, batch), jnp.float32
                              ).astype(dtype) * 0.02

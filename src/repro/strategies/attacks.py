@@ -49,7 +49,9 @@ class NoAttack(Attack):
     def malicious_indices(self, num_users):
         return ()
 
-    def apply(self, key, stacked_params, global_params, ctx=None):
+    # identity fast-path; the inherited apply_local routes through the
+    # (also identity) corrupt(), so the two paths agree by construction
+    def apply(self, key, stacked_params, global_params, ctx=None):  # fedlint: disable=FL004
         return stacked_params
 
     def corrupt(self, key, trained, global_params, ctx=None,

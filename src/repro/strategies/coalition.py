@@ -169,7 +169,10 @@ class CoalitionAttack(Attack):
                 lambda t, b: jnp.where(in_coal, b.astype(t.dtype), t),
                 out, bad)
         if self.base.malicious_indices(n):
-            bad = self.base.corrupt(key, trained, global_params, ctx,
+            # same key as the coalition corruption above is deliberate:
+            # the two masks are made disjoint below, so no client ever
+            # sees both streams — reuse cannot correlate anything.
+            bad = self.base.corrupt(key, trained, global_params, ctx,  # fedlint: disable=FL001
                                     client_idx)
             in_base = self.base.malicious_mask(n)[client_idx] > 0
             if self.coal_attack is not None:

@@ -1,0 +1,34 @@
+"""FL001 bad fixture: fixed key literals + key reuse.
+
+The Coverage class reproduces the PR 5 coverage-selector bug verbatim in
+shape: a strategy buried in library code building its stream from
+``PRNGKey(0)`` instead of the run's seed.
+"""
+import jax
+
+
+class Coverage:
+    """The PR 5 bug pattern: selector randomness unkeyed by the run."""
+
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        cycle = round_idx // num_users
+        base = jax.random.fold_in(jax.random.PRNGKey(0), cycle)  # literal
+        return jax.random.permutation(base, num_users)[:num_testers]
+
+
+def unkeyed_noise(shape):
+    key = jax.random.PRNGKey(42)                  # literal in library code
+    return jax.random.normal(key, shape)
+
+
+def correlated_draws(key, shape):
+    a = jax.random.normal(key, shape)             # consume 1
+    b = jax.random.uniform(key, shape)            # consume 2 -> reuse
+    return a + b
+
+
+def helper_reuse(key, attack, selector, num_users):
+    bad = attack.apply(key, num_users)            # consume 1
+    ids = selector.select(key, num_users)         # consume 2 -> reuse
+    return bad, ids

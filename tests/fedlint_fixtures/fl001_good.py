@@ -1,0 +1,39 @@
+"""FL001 good fixture: seed-derived construction, split/fold_in before
+every additional consume."""
+import jax
+
+
+class Coverage:
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        cycle = round_idx // num_users
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), cycle)
+        return jax.random.permutation(base, num_users)[:num_testers]
+
+
+def seeded_noise(seed, shape):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape)
+
+
+def split_draws(key, shape):
+    k_a, k_b = jax.random.split(key)
+    a = jax.random.normal(k_a, shape)
+    b = jax.random.uniform(k_b, shape)
+    return a + b
+
+
+def folded_helpers(key, attack, selector, num_users):
+    bad = attack.apply(jax.random.fold_in(key, 0), num_users)
+    ids = selector.select(jax.random.fold_in(key, 1), num_users)
+    return bad, ids
+
+
+def rebound(key, shape):
+    a = jax.random.normal(key, shape)
+    key = jax.random.fold_in(key, 1)      # rebind resets the stream
+    b = jax.random.uniform(key, shape)
+    return a + b

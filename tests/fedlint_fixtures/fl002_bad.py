@@ -1,0 +1,47 @@
+"""FL002 bad fixture: Python control flow on traced values inside
+jitted functions, f-strings on tracers, unhashable static defaults."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_tracer(x):
+    if x > 0:                      # traced comparison in Python `if`
+        return x * 2
+    return -x
+
+
+@jax.jit
+def loop_on_tracer(x):
+    while x.sum() > 1.0:           # traced `while`
+        x = x * 0.5
+    return x
+
+
+@jax.jit
+def assert_on_tracer(x):
+    assert x.sum() > 0             # traced assert
+    return x
+
+
+@jax.jit
+def format_tracer(x):
+    label = f"value={x}"           # tracer repr baked into the trace
+    return x, label
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mutable_static(x, cfg=[1, 2, 3]):   # unhashable static default
+    return x * cfg[0]
+
+
+def scan_body(carry, x):
+    if x > 0:                      # body is traced via lax.scan below
+        carry = carry + x
+    return carry, x
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, jnp.float32(0), xs)

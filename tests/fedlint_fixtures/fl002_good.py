@@ -1,0 +1,42 @@
+"""FL002 good fixture: trace-static branching only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_shape(x):
+    if x.ndim == 1:                    # .ndim is trace-static
+        x = x[None, :]
+    return jnp.where(x > 0, x * 2, -x)  # data branch stays in-graph
+
+
+@jax.jit
+def branch_on_none(x, bias=None):
+    if bias is None:                   # identity check is trace-static
+        return x
+    return x + bias
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def static_loop(x, steps=3):
+    for _ in range(steps):             # static python loop unrolls
+        x = x * 0.5
+    return x
+
+
+@jax.jit
+def checked(x):
+    assert x.shape[0] > 0              # shape assert is trace-static
+    return jax.lax.while_loop(lambda v: v.sum() > 1.0,
+                              lambda v: v * 0.5, x)
+
+
+def scan_body(carry, x):
+    carry = carry + jnp.where(x > 0, x, 0.0)
+    return carry, x
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, jnp.float32(0), xs)

@@ -1,0 +1,90 @@
+"""FL003 bad fixture: remainder-dropping grids, out-of-rank program_id,
+unmasked cdiv, VMEM blow-up."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _drop_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def remainder_dropped(x):
+    M = 100
+    block_m = 8          # 100 % 8 != 0 -> the last 4 rows never visited
+    return pl.pallas_call(
+        _drop_kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _unguarded_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def unguarded_dynamic(x, block_m):
+    M = x.shape[0]
+    # no assert, no masking: silently wrong whenever block_m does not
+    # divide M
+    return pl.pallas_call(
+        _unguarded_kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _axis_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(2)     # grid below is rank 1: axis 2 is undefined
+    o_ref[...] = x_ref[...] + jnp.float32(i + j)
+
+
+def bad_axis(x, block_m: int = 8):
+    M = x.shape[0]
+    assert M % block_m == 0
+    return pl.pallas_call(
+        _axis_kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _cdiv_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]          # no pl.when: tail block unguarded
+
+
+def ragged_unmasked(x, block_m: int = 8):
+    M = x.shape[0]
+    return pl.pallas_call(
+        _cdiv_kernel,
+        grid=(pl.cdiv(M, block_m),),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _huge_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def vmem_blowup(x, block_m: int = 4096, block_n: int = 4096):
+    M = x.shape[0]
+    assert M % block_m == 0
+    # 4096 x 4096 fp32 double-buffered = 256 MiB versus a 16 MiB budget
+    return pl.pallas_call(
+        _huge_kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

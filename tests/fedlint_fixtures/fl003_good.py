@@ -1,0 +1,63 @@
+"""FL003 good fixture: guarded divisibility, masked cdiv tail, in-rank
+program_id, modest blocks (mirrors the repo's kernel idiom)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    o_ref[...] = x_ref[...] + jnp.float32(i)
+
+
+def guarded(x, block_m: int = 128):
+    M = x.shape[0]
+    block_m = min(block_m, M)
+    assert M % block_m == 0, "block_m must divide M"
+    return pl.pallas_call(
+        _tile_kernel,
+        grid=(M // block_m,),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _masked_kernel(n, block_m, x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i * block_m < n)
+    def _():
+        o_ref[...] = x_ref[...]
+
+
+def ragged_masked(x, block_m: int = 8):
+    M = x.shape[0]
+    kernel = functools.partial(_masked_kernel, M, block_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(M, block_m),),
+        in_specs=[pl.BlockSpec((block_m,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _pair_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    o_ref[...] = x_ref[...] * y_ref[...] + jnp.float32(i * j)
+
+
+def static_divisible(x, y):
+    M, N = 256, 128
+    return pl.pallas_call(
+        _pair_kernel,
+        grid=(M // 64, N // 32),
+        in_specs=[pl.BlockSpec((64, 32), lambda i, j: (i, j)),
+                  pl.BlockSpec((64, 32), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((64, 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, y)

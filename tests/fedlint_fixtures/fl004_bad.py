@@ -1,0 +1,66 @@
+"""FL004 bad fixture: registered strategies that do not satisfy the
+protocol their registry implies."""
+
+AGGREGATORS = {}
+ATTACKS = {}
+SELECTORS = {}
+COALITIONS = {}
+
+
+def register(registry, name):
+    def deco(cls):
+        registry[name] = cls
+        return cls
+    return deco
+
+
+@register(SELECTORS, "positional_scores")
+class PositionalScores:
+    # scores is positional: the engine's scores=... binds round_idx
+    def select(self, key, num_users, num_testers, round_idx, scores=None):
+        return list(range(num_testers))
+
+
+@register(SELECTORS, "abstract_select")
+class AbstractSelect:
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        raise NotImplementedError
+
+
+@register(ATTACKS, "no_ctx")
+class NoCtxAttack:
+    # corrupt() drops ctx/client_idx: the engine's forwarding call raises
+    def corrupt(self, key, trained, global_params):
+        return trained
+
+
+@register(ATTACKS, "one_sided")
+class OneSided:
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        return trained
+
+    def apply(self, key, stacked, global_params, ctx=None):
+        return stacked * 0          # batched path disagrees with local
+
+
+@register(AGGREGATORS, "no_weights")
+class NoWeights:
+    def update_scores(self, scores, acc):
+        return scores
+
+
+@register(AGGREGATORS, "ctxless_combine")
+class CtxlessCombine:
+    def weights(self, acc, ctx):
+        return acc
+
+    def combine(self, updates):     # engine calls combine(ctx, updates)
+        return updates
+
+
+@register(COALITIONS, "bad_transform")
+class BadTransform:
+    def transform_reports(self, acc):   # missing key/tester_ids/ctx
+        return acc

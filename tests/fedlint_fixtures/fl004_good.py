@@ -1,0 +1,82 @@
+"""FL004 good fixture: protocol-conformant registered strategies,
+including conformance inherited through a base class."""
+
+AGGREGATORS = {}
+ATTACKS = {}
+SELECTORS = {}
+COALITIONS = {}
+
+
+def register(registry, name):
+    def deco(cls):
+        registry[name] = cls
+        return cls
+    return deco
+
+
+class SelectorBase:
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        raise NotImplementedError
+
+
+@register(SELECTORS, "kwonly_scores")
+class KwonlyScores(SelectorBase):
+    def select(self, key, num_users, num_testers, round_idx, *,
+               scores=None):
+        return list(range(num_testers))
+
+
+class AttackBase:
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        raise NotImplementedError
+
+    def apply(self, key, stacked, global_params, ctx=None):
+        return self.corrupt(key, stacked, global_params, ctx)
+
+    def apply_local(self, key, trained, global_params, ctx=None,
+                    client_idx=None):
+        return self.corrupt(key, trained, global_params, ctx, client_idx)
+
+
+@register(ATTACKS, "via_corrupt")
+class ViaCorrupt(AttackBase):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        return trained
+
+
+@register(ATTACKS, "both_sides")
+class BothSides(AttackBase):
+    def corrupt(self, key, trained, global_params, ctx=None,
+                client_idx=None):
+        return trained
+
+    def apply(self, key, stacked, global_params, ctx=None):
+        return stacked
+
+    def apply_local(self, key, trained, global_params, ctx=None,
+                    client_idx=None):
+        return trained
+
+
+@register(AGGREGATORS, "full")
+class FullAggregator:
+    def weights(self, acc, ctx):
+        return acc
+
+    def combine(self, ctx, updates):
+        return updates
+
+
+@register(COALITIONS, "good_transform")
+class GoodTransform:
+    def transform_reports(self, key, acc, tester_ids, ctx):
+        return acc
+
+
+@register(COALITIONS, "kwargs_transform")
+class KwargsTransform:
+    def transform_reports(self, key, acc, **kwargs):
+        return acc

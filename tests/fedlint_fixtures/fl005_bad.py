@@ -1,0 +1,37 @@
+"""FL005 bad fixture: donated buffers read after the donating call."""
+import functools
+
+import jax
+
+
+def read_after_bound_call(step_fn, state, data):
+    scan_fn = jax.jit(step_fn, donate_argnums=0)
+    out = scan_fn(state, data)          # state's buffer donated here
+    leftovers = state["acc"]            # read-after-donate
+    return out, leftovers
+
+
+def read_after_inline_call(step_fn, params, batch):
+    new_params = jax.jit(step_fn, donate_argnums=(0,))(params, batch)
+    delta = jax.tree_util.tree_map(lambda a, b: a - b,
+                                   new_params, params)   # donated read
+    return delta
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def update(state, grads):
+    return jax.tree_util.tree_map(lambda s, g: s - 0.1 * g, state, grads)
+
+
+def read_after_decorated(state, grads):
+    new_state = update(state, grads)
+    stale = state                        # donated read via decorator form
+    return new_state, stale
+
+
+def loop_without_rebind(step_fn, state, chunks):
+    fn = jax.jit(step_fn, donate_argnums=0)
+    outs = []
+    for chunk in chunks:
+        outs.append(fn(state, chunk))    # iteration 2 reuses dead buffer
+    return outs

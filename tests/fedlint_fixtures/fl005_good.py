@@ -1,0 +1,41 @@
+"""FL005 good fixture: the rebind-at-the-call idiom, sibling branches,
+and AOT .lower() chains (which donate nothing at trace time)."""
+import functools
+
+import jax
+
+
+def rebind_at_call(step_fn, state, data):
+    scan_fn = jax.jit(step_fn, donate_argnums=0)
+    state, chunk = scan_fn(state, data)   # driver.py's safe idiom
+    return state, chunk
+
+
+def rebind_in_loop(step_fn, state, chunks):
+    fn = jax.jit(step_fn, donate_argnums=0)
+    outs = []
+    for chunk in chunks:
+        state, out = fn(state, chunk)     # fresh buffer every iteration
+        outs.append(out)
+    return state, outs
+
+
+def sibling_branches(step_fn, params, opt_state, batch, mode):
+    if mode == "donate":
+        lowered = jax.jit(step_fn, donate_argnums=(0, 1)
+                          ).lower(params, opt_state, batch)
+        return lowered
+    elif mode == "plain":
+        # a sibling branch never runs after the donating call above
+        return step_fn(params, opt_state, batch)
+    return params
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def update(state, grads):
+    return jax.tree_util.tree_map(lambda s, g: s - 0.1 * g, state, grads)
+
+
+def rebound_decorated(state, grads):
+    state = update(state, grads)
+    return state

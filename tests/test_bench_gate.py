@@ -94,3 +94,45 @@ def test_main_end_to_end_with_baseline_dir(tmp_path):
     empty.mkdir()
     assert check_bench.main(["--fresh-dir", str(empty),
                              "--baseline-dir", str(baseline)]) == 1
+
+
+def _git(repo, *args):
+    import subprocess
+    subprocess.run(["git", *args], cwd=repo, check=True,
+                   capture_output=True,
+                   env={"GIT_AUTHOR_NAME": "t", "GIT_AUTHOR_EMAIL": "t@t",
+                        "GIT_COMMITTER_NAME": "t", "GIT_COMMITTER_EMAIL":
+                        "t@t", "HOME": str(repo), "PATH": "/usr/bin:/bin"})
+
+
+def test_baseline_ref_resolution(tmp_path):
+    """`auto` prefers origin/main over HEAD: on a PR merge commit, HEAD
+    already carries the PR's own BENCH files and would gate the run
+    against itself."""
+    repo = tmp_path / "repo"
+    repo.mkdir()
+    _git(repo, "init", "-q")
+    (repo / "BENCH_kernels.json").write_text(json.dumps([row("k/a", 0.9)]))
+    _git(repo, "add", "-A")
+    _git(repo, "commit", "-qm", "base")
+
+    # no origin/main yet -> fall back to HEAD
+    assert check_bench.resolve_baseline_ref("auto", cwd=repo) == "HEAD"
+    # an explicit ref is passed through untouched
+    assert check_bench.resolve_baseline_ref("HEAD~3", cwd=repo) == "HEAD~3"
+
+    # simulate the CI checkout: origin/main points at the base commit,
+    # HEAD advances with a "PR" commit that rewrites the baseline
+    _git(repo, "update-ref", "refs/remotes/origin/main", "HEAD")
+    (repo / "BENCH_kernels.json").write_text(json.dumps([row("k/a", 0.3)]))
+    _git(repo, "add", "-A")
+    _git(repo, "commit", "-qm", "pr: regressed baseline")
+    assert check_bench.resolve_baseline_ref("auto", cwd=repo) == "origin/main"
+
+    # and the two refs genuinely disagree about the baseline content
+    at_main = check_bench.baseline_from_git("BENCH_kernels.json",
+                                            "origin/main", cwd=repo)
+    at_head = check_bench.baseline_from_git("BENCH_kernels.json",
+                                            "HEAD", cwd=repo)
+    assert at_main[0]["roofline_frac"] == 0.9
+    assert at_head[0]["roofline_frac"] == 0.3

@@ -1,0 +1,182 @@
+"""tools/fedlint — the AST invariant gate (DESIGN.md §8).
+
+Three layers:
+
+* a fixture matrix: for every rule FL001–FL005, the ``*_bad.py`` fixture
+  must fire (with the expected findings) and the ``*_good.py`` fixture
+  must stay silent, each linted with *only* that rule enabled;
+* unit tests for the shared machinery (suppressions, baseline,
+  path-scoped config, the CLI);
+* the tier-1 gate itself: the live repo lints clean against the
+  committed (empty) baseline.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.fedlint.config import (DEFAULT_CONFIG, DEFAULT_PATHS,  # noqa: E402
+                                  LintConfig)
+from tools.fedlint.core import (BASELINE_PATH, ERROR, WARNING,    # noqa: E402
+                                baseline_fingerprints, lint_files,
+                                lint_paths, load_baseline,
+                                parse_suppressions, is_suppressed,
+                                Diagnostic)
+
+FIXTURES = ROOT / "tests" / "fedlint_fixtures"
+ALL_RULES = ("FL001", "FL002", "FL003", "FL004", "FL005")
+
+
+def lint_fixture(name: str, rule: str):
+    cfg = LintConfig(enabled_rules=(rule,))
+    return lint_files([FIXTURES / name], config=cfg, root=ROOT)
+
+
+# ------------------------------------------------------------ fixture matrix
+@pytest.mark.parametrize("rule,min_findings", [
+    ("FL001", 4), ("FL002", 6), ("FL003", 5), ("FL004", 7), ("FL005", 4),
+])
+def test_bad_fixture_fires(rule, min_findings):
+    diags = lint_fixture(f"{rule.lower()}_bad.py", rule)
+    assert len(diags) >= min_findings, [d.format() for d in diags]
+    assert all(d.rule == rule for d in diags)
+
+
+@pytest.mark.parametrize("rule", list(ALL_RULES))
+def test_good_fixture_is_silent(rule):
+    diags = lint_fixture(f"{rule.lower()}_good.py", rule)
+    assert diags == [], [d.format() for d in diags]
+
+
+def test_fl001_catches_the_coverage_selector_bug():
+    """The PR 5 bug class: a selector deriving its stream from
+    PRNGKey(0) instead of the run seed must be flagged at the literal."""
+    diags = lint_fixture("fl001_bad.py", "FL001")
+    literal = [d for d in diags if "PRNGKey(0)" in d.message]
+    assert literal, [d.format() for d in diags]
+    source = (FIXTURES / "fl001_bad.py").read_text().splitlines()
+    assert "jax.random.PRNGKey(0)" in source[literal[0].line - 1]
+    # ... and the seed-derived twin of the same selector is clean
+    good = lint_fixture("fl001_good.py", "FL001")
+    assert not good
+
+
+def test_fl004_severity_split():
+    """One-sided apply/apply_local override is a warning (does not
+    gate); missing protocol surface is an error."""
+    diags = lint_fixture("fl004_bad.py", "FL004")
+    warnings = [d for d in diags if d.severity == WARNING]
+    errors = [d for d in diags if d.severity == ERROR]
+    assert any("one_sided" in d.message for d in warnings)
+    assert len(errors) >= 6
+
+
+def test_fl005_flags_the_unsafe_idioms_only():
+    bad = lint_fixture("fl005_bad.py", "FL005")
+    msgs = "\n".join(d.message for d in bad)
+    assert "'state'" in msgs and "'params'" in msgs
+    # the safe rebind / sibling-branch / .lower() idioms stay silent
+    assert lint_fixture("fl005_good.py", "FL005") == []
+
+
+# --------------------------------------------------------------- suppressions
+def test_inline_and_file_suppressions(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import jax\n"
+        "def a(shape):\n"
+        "    k = jax.random.PRNGKey(0)  # fedlint: disable=FL001\n"
+        "    return jax.random.normal(k, shape)\n"
+        "def b(shape):\n"
+        "    k = jax.random.PRNGKey(1)\n"
+        "    return jax.random.normal(k, shape)\n")
+    cfg = LintConfig(enabled_rules=("FL001",))
+    diags = lint_files([f], config=cfg, root=tmp_path)
+    assert len(diags) == 1 and diags[0].line == 6   # only b() fires
+
+    f.write_text("# fedlint: disable-file=FL001\n" + f.read_text())
+    assert lint_files([f], config=cfg, root=tmp_path) == []
+
+
+def test_disable_all_token():
+    per_line, per_file = parse_suppressions(
+        "x = 1  # fedlint: disable=all\n")
+    d = Diagnostic(path="p", line=1, rule="FL003", severity="error",
+                   message="m")
+    assert is_suppressed(d, per_line, per_file)
+
+
+# ------------------------------------------------------------------- baseline
+def test_baseline_grandfathers_by_fingerprint(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("import jax\n"
+                 "def a(shape):\n"
+                 "    return jax.random.normal(jax.random.PRNGKey(7), "
+                 "shape)\n")
+    cfg = LintConfig(enabled_rules=("FL001",))
+    diags = lint_files([f], config=cfg, root=tmp_path)
+    assert len(diags) == 1
+    known = baseline_fingerprints([d.to_json() for d in diags])
+    assert all(d.fingerprint() in known for d in diags)
+    # fingerprints survive unrelated line churn (path/rule/message only)
+    f.write_text("# a new leading comment\n" + f.read_text())
+    moved = lint_files([f], config=cfg, root=tmp_path)
+    assert moved[0].line != diags[0].line
+    assert moved[0].fingerprint() in known
+
+
+def test_committed_baseline_is_empty():
+    assert load_baseline(BASELINE_PATH) == []
+
+
+# ------------------------------------------------------- path-scoped config
+def test_literal_keys_relaxed_for_tests_strict_for_src(tmp_path):
+    code = ("import jax\n"
+            "def f(shape):\n"
+            "    return jax.random.normal(jax.random.PRNGKey(0), shape)\n")
+    for rel in ("src/mod.py", "tests/test_mod.py"):
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(code)
+    diags = lint_files([tmp_path / "src" / "mod.py",
+                        tmp_path / "tests" / "test_mod.py"],
+                       config=DEFAULT_CONFIG, root=tmp_path)
+    assert [d.path for d in diags] == ["src/mod.py"]
+
+
+# ------------------------------------------------------------------ the gate
+def test_live_repo_lints_clean_vs_committed_baseline():
+    """Tier-1: the whole repo is clean under the default config and the
+    committed baseline (which is empty — the gate is strict)."""
+    diags = lint_paths(DEFAULT_PATHS, config=DEFAULT_CONFIG, root=ROOT)
+    known = baseline_fingerprints(load_baseline(BASELINE_PATH))
+    fresh = [d for d in diags if d.fingerprint() not in known]
+    errors = [d for d in fresh if d.severity == ERROR]
+    assert errors == [], "\n".join(d.format() for d in errors)
+
+
+def test_cli_json_mode():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.fedlint", "--json",
+         "tests/fedlint_fixtures"],
+        cwd=ROOT, capture_output=True, text=True)
+    # fixtures are disabled under the default config -> clean exit
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout) == []
+
+
+def test_unified_runner_smoke():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.check", "--only", "fedlint",
+         "--json"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["ok"] is True
+    assert report["gates"][0]["gate"] == "fedlint"

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Unified CI gate runner: ``python -m tools.check``.
+
+Runs the repo's three gates with one diagnostic surface
+(``file:line [RULE] severity: message``) and one exit code:
+
+* **docs** — cross-reference consistency (``tools/check_docs.py``);
+* **fedlint** — the AST invariant checker, FL001–FL005 (DESIGN.md §8);
+* **bench** — roofline-fraction regression vs the git baseline
+  (``tools/check_bench.py``; skipped unless ``BENCH_*.json`` artifacts
+  are present, since the bench run is a separate CI step).
+
+``--json`` emits a machine-readable report (uploaded as a CI artifact
+next to the BENCH files). ``--only docs,fedlint`` restricts the set.
+Exit status is 1 when any selected gate fails.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools import check_bench, check_docs                    # noqa: E402
+from tools.fedlint.config import DEFAULT_CONFIG, DEFAULT_PATHS  # noqa: E402
+from tools.fedlint.core import (BASELINE_PATH, ERROR,           # noqa: E402
+                                baseline_fingerprints, lint_paths,
+                                load_baseline)
+
+GATES = ("docs", "fedlint", "bench")
+
+
+def run_docs() -> Dict[str, Any]:
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = check_docs.main()
+    diagnostics = []
+    for line in buf.getvalue().splitlines():
+        line = line.strip()
+        if line and not line.startswith(("docs-consistency",)):
+            diagnostics.append({"path": line.split(":", 1)[0],
+                                "line": 0, "rule": "DOCS",
+                                "severity": "error", "message": line})
+    return {"gate": "docs", "ok": code == 0, "diagnostics": diagnostics}
+
+
+def run_fedlint(paths: Optional[List[str]] = None) -> Dict[str, Any]:
+    diags = lint_paths(paths or DEFAULT_PATHS, config=DEFAULT_CONFIG)
+    known = baseline_fingerprints(load_baseline(BASELINE_PATH))
+    diags = [d for d in diags if d.fingerprint() not in known]
+    errors = [d for d in diags if d.severity == ERROR]
+    return {"gate": "fedlint", "ok": not errors,
+            "diagnostics": [d.to_json() for d in diags]}
+
+
+def run_bench() -> Dict[str, Any]:
+    if not sorted(ROOT.glob("BENCH_*.json")):
+        return {"gate": "bench", "ok": True, "skipped": True,
+                "diagnostics": [],
+                "note": "no BENCH_*.json present — bench gate runs in "
+                        "its own CI step after benchmarks.run"}
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = check_bench.main([])
+    diagnostics = []
+    for line in buf.getvalue().splitlines():
+        line = line.strip()
+        if line.startswith(("perf-regression", "check_bench:")):
+            continue
+        if line:
+            diagnostics.append({"path": "BENCH", "line": 0,
+                                "rule": "BENCH", "severity": "error",
+                                "message": line})
+    return {"gate": "bench", "ok": code == 0, "diagnostics": diagnostics}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.check", description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default=",".join(GATES),
+                    help="comma-separated subset of gates "
+                         f"(default: {','.join(GATES)})")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON report on stdout")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the JSON report to this path")
+    args = ap.parse_args(argv)
+
+    selected = [g.strip() for g in args.only.split(",") if g.strip()]
+    unknown = [g for g in selected if g not in GATES]
+    if unknown:
+        print(f"tools.check: unknown gate(s) {unknown}; "
+              f"choose from {GATES}", file=sys.stderr)
+        return 2
+
+    results = []
+    for gate in selected:
+        results.append({"docs": run_docs, "fedlint": run_fedlint,
+                        "bench": run_bench}[gate]())
+
+    report = {"ok": all(r["ok"] for r in results), "gates": results}
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(report, indent=1) + "\n")
+    if args.json:
+        print(json.dumps(report, indent=1))
+    else:
+        for r in results:
+            status = ("skipped" if r.get("skipped")
+                      else "ok" if r["ok"] else "FAILED")
+            print(f"[{r['gate']}] {status}")
+            for d in r["diagnostics"]:
+                print(f"  {d['path']}:{d['line']} [{d['rule']}] "
+                      f"{d['severity']}: {d['message']}")
+        verdict = "passed" if report["ok"] else "FAILED"
+        print(f"tools.check: {verdict} "
+              f"({', '.join(r['gate'] for r in results)})")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,9 +15,12 @@ are carried in the artifact but not gated: a compute-bound kernel at ~1%
 of the stream roofline measures the host's flops/bandwidth balance, not
 the code, and would flake across heterogeneous CI runners.
 
-The baseline is read from git (``git show <ref>:BENCH_*.json``, default
-``HEAD``) because the bench run overwrites the committed files in the
-worktree; ``--baseline-dir`` reads plain files instead. Rows new in the
+The baseline is read from git (``git show <ref>:BENCH_*.json``) because
+the bench run overwrites the committed files in the worktree; the
+default ref is ``auto`` — ``origin/main`` when that remote-tracking ref
+exists, else ``HEAD`` (on a PR merge commit ``HEAD`` already carries the
+PR's own BENCH files, so it would compare the run against itself);
+``--baseline-dir`` reads plain files instead. Rows new in the
 fresh run pass (no trajectory yet); rows that *disappear* while the
 baseline still tracks them fail — a silently dropped series is how a
 perf trajectory dies. Run from anywhere:
@@ -85,13 +88,35 @@ def compare_rows(baseline: List[dict], fresh: List[dict],
     return errors
 
 
-def baseline_from_git(name: str, ref: str) -> Optional[List[dict]]:
+def baseline_from_git(name: str, ref: str,
+                      cwd: Optional[Path] = None) -> Optional[List[dict]]:
     """``git show ref:name`` parsed, or None when absent at the ref."""
-    proc = subprocess.run(["git", "show", f"{ref}:{name}"], cwd=ROOT,
-                          capture_output=True, text=True)
+    proc = subprocess.run(["git", "show", f"{ref}:{name}"],
+                          cwd=cwd or ROOT, capture_output=True, text=True)
     if proc.returncode != 0:
         return None
     return json.loads(proc.stdout)
+
+
+def resolve_baseline_ref(ref: str = "auto",
+                         cwd: Optional[Path] = None) -> str:
+    """Resolve ``auto`` to the branch-point baseline.
+
+    On a PR merge commit, ``HEAD`` already *contains* the PR's own
+    freshly committed BENCH files, so diffing against HEAD compares the
+    run with itself and the gate can never fire. ``auto`` therefore
+    prefers ``origin/main`` (the base the PR diverged from) and only
+    falls back to ``HEAD`` when no such remote-tracking ref exists
+    (fresh clone without remotes, detached tarball checkouts).
+    """
+    if ref != "auto":
+        return ref
+    proc = subprocess.run(
+        ["git", "rev-parse", "--verify", "--quiet", "origin/main"],
+        cwd=cwd or ROOT, capture_output=True, text=True)
+    if proc.returncode == 0 and proc.stdout.strip():
+        return "origin/main"
+    return "HEAD"
 
 
 def main(argv=None) -> int:
@@ -99,9 +124,11 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh-dir", default=str(ROOT),
                     help="directory holding the freshly emitted "
                          "BENCH_*.json (default: repo root)")
-    ap.add_argument("--baseline-ref", default="HEAD",
+    ap.add_argument("--baseline-ref", default="auto",
                     help="git ref holding the committed baseline "
-                         "(default: HEAD)")
+                         "(default: auto = origin/main when it exists, "
+                         "else HEAD — on a PR merge commit HEAD would "
+                         "compare the run against its own baseline)")
     ap.add_argument("--baseline-dir", default=None,
                     help="read baselines from plain files here instead "
                          "of git")
@@ -118,6 +145,7 @@ def main(argv=None) -> int:
         print(f"check_bench: no BENCH_*.json under {args.fresh_dir} — "
               "run `PYTHONPATH=src python -m benchmarks.run` first")
         return 1
+    ref = resolve_baseline_ref(args.baseline_ref)
     errors, compared = [], 0
     for f in fresh_files:
         if args.baseline_dir:
@@ -125,7 +153,7 @@ def main(argv=None) -> int:
             baseline = (json.loads(base_path.read_text())
                         if base_path.exists() else None)
         else:
-            baseline = baseline_from_git(f.name, args.baseline_ref)
+            baseline = baseline_from_git(f.name, ref)
         if baseline is None:
             print(f"check_bench: {f.name} has no committed baseline — "
                   "skipping (first emission of this suite)")

@@ -1,12 +1,12 @@
 #!/usr/bin/env python
 """Docs-consistency checker: no dangling cross-references.
 
-Scans ``src/``, ``tests/``, ``benchmarks/``, ``README.md`` and the
-top-level docs for references of the form
+Scans ``src/``, ``tests/``, ``benchmarks/``, ``tools/``, ``README.md``
+and the top-level docs for references of the form
 
     DESIGN.md §3            EXPERIMENTS.md §Perf
     §Dry-run and §Roofline of EXPERIMENTS.md     (reversed order)
-    SOMEFILE.md             (bare file reference)
+    ROADMAP.md              (bare file reference)
 
 and fails (exit 1) when a referenced ``.md`` file does not exist at the
 repo root, or a referenced ``§`` section has no matching heading. A
@@ -26,7 +26,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-SCAN_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py"]
+SCAN_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+              "tools/**/*.py"]
 SCAN_FILES = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"]
 
 # forward: "DESIGN.md §3" / "EXPERIMENTS.md §Perf iteration A3" -> (file, tok)

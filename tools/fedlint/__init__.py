@@ -1,0 +1,21 @@
+"""fedlint — AST-based invariant checker for this repo (DESIGN.md §8).
+
+Public API::
+
+    from tools.fedlint import lint_paths, DEFAULT_CONFIG
+    diags = lint_paths(["src", "tests"])
+
+Run as a CLI: ``python -m tools.fedlint [--json] [paths...]``.
+"""
+from tools.fedlint.core import (BASELINE_PATH, Diagnostic, ERROR, WARNING,
+                                baseline_fingerprints, lint_files,
+                                lint_paths, load_baseline, write_baseline)
+from tools.fedlint.config import (DEFAULT_CONFIG, DEFAULT_PATHS,
+                                  LintConfig, STRICT_CONFIG)
+
+__all__ = [
+    "BASELINE_PATH", "Diagnostic", "ERROR", "WARNING",
+    "baseline_fingerprints", "lint_files", "lint_paths", "load_baseline",
+    "write_baseline", "DEFAULT_CONFIG", "DEFAULT_PATHS", "LintConfig",
+    "STRICT_CONFIG",
+]

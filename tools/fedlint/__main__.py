@@ -1,0 +1,66 @@
+"""fedlint CLI: ``python -m tools.fedlint [paths...]``.
+
+Exit status is 0 when no *error*-severity finding survives baseline
+filtering (warnings print but never gate), 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from tools.fedlint.config import DEFAULT_CONFIG, DEFAULT_PATHS
+from tools.fedlint.core import (BASELINE_PATH, ERROR, Diagnostic,
+                                baseline_fingerprints, lint_paths,
+                                load_baseline, write_baseline)
+
+
+def run(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.fedlint",
+        description="AST invariant checker (FL001-FL005, DESIGN.md §8)")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help=f"files/dirs to lint (default: "
+                             f"{' '.join(DEFAULT_PATHS)})")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as a JSON array on stdout")
+    parser.add_argument("--baseline", default=str(BASELINE_PATH),
+                        help="baseline file (default: committed baseline)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline entirely")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current findings as the new baseline "
+                             "and exit 0")
+    args = parser.parse_args(argv)
+
+    paths = args.paths or DEFAULT_PATHS
+    diags = lint_paths(paths, config=DEFAULT_CONFIG)
+
+    if args.write_baseline:
+        write_baseline(diags, Path(args.baseline))
+        print(f"fedlint: wrote {len(diags)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if not args.no_baseline:
+        known = baseline_fingerprints(load_baseline(Path(args.baseline)))
+        diags = [d for d in diags if d.fingerprint() not in known]
+
+    if args.json:
+        print(json.dumps([d.to_json() for d in diags], indent=1))
+    else:
+        for d in diags:
+            print(d.format())
+
+    errors = [d for d in diags if d.severity == ERROR]
+    if not args.json:
+        warnings = len(diags) - len(errors)
+        print(f"fedlint: {len(errors)} error(s), {warnings} warning(s) "
+              f"across {len(paths)} path(s)", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

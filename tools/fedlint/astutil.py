@@ -1,0 +1,305 @@
+"""Shared AST helpers for the fedlint rules.
+
+Everything here is stdlib-``ast`` only — fedlint runs in CI before any
+heavyweight import and never imports the code it checks (a kernel file
+that needs a TPU to import must still lint on a laptop).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+def attach_parents(tree: ast.AST) -> None:
+    """Annotate every node with ``.fedlint_parent`` (None at the root)."""
+    tree.fedlint_parent = None  # type: ignore[attr-defined]
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.fedlint_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "fedlint_parent", None)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Dotted name of a call's callee (``jax.random.split``), else None."""
+    return dotted_name(call.func)
+
+
+def last_segment(dotted: str) -> str:
+    return dotted.rsplit(".", 1)[-1]
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def iter_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def str_constants(node: ast.expr) -> List[str]:
+    """String elements of a tuple/list/single-string constant expr."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def int_constants(node: ast.expr) -> List[int]:
+    """Int elements of a tuple/list/single-int constant expr."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def is_pure_constant(node: ast.expr) -> bool:
+    """True when the expression is built only from literal constants."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.BinOp):
+        return is_pure_constant(node.left) and is_pure_constant(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return is_pure_constant(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_pure_constant(e) for e in node.elts)
+    return False
+
+
+def identifiers_in(node: ast.expr) -> List[str]:
+    """All Name ids and Attribute attrs appearing in the expression."""
+    out: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out
+
+
+class ConstResolver:
+    """Best-effort static evaluation of integer dimension expressions.
+
+    Resolution order for a bare name: local single-target assignments in
+    the enclosing function, the enclosing function's keyword defaults,
+    module-level constants. ``min(a, b)`` resolves to the minimum of its
+    resolvable operands (an upper bound — exactly what a VMEM budget
+    check needs). Anything else resolves to ``None``.
+    """
+
+    def __init__(self, module: ast.Module,
+                 func: Optional[ast.FunctionDef] = None,
+                 assumed: Optional[Dict[str, int]] = None):
+        self.module_consts = _constant_assignments(module.body)
+        self.local_consts: Dict[str, ast.expr] = {}
+        self.param_defaults: Dict[str, ast.expr] = {}
+        self.assumed = dict(assumed or {})
+        if func is not None:
+            self.local_consts = _constant_assignments(
+                list(ast.walk(func)), stmts_are_nodes=True)
+            self.param_defaults = _param_defaults(func)
+
+    def resolve(self, node: ast.expr, depth: int = 0) -> Optional[int]:
+        if depth > 8:
+            return None
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value
+        if isinstance(node, ast.Name):
+            for table in (self.local_consts, self.param_defaults,
+                          self.module_consts):
+                if node.id in table:
+                    expr = table[node.id]
+                    if expr is node:      # self-reference guard
+                        return None
+                    return self.resolve(expr, depth + 1)
+            if node.id in self.assumed:
+                return self.assumed[node.id]
+            return None
+        if isinstance(node, ast.BinOp):
+            lhs = self.resolve(node.left, depth + 1)
+            rhs = self.resolve(node.right, depth + 1)
+            if lhs is None or rhs is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return lhs + rhs
+                if isinstance(node.op, ast.Sub):
+                    return lhs - rhs
+                if isinstance(node.op, ast.Mult):
+                    return lhs * rhs
+                if isinstance(node.op, ast.FloorDiv):
+                    return lhs // rhs
+                if isinstance(node.op, ast.Mod):
+                    return lhs % rhs
+                if isinstance(node.op, ast.Pow):
+                    return lhs ** rhs
+            except (ZeroDivisionError, OverflowError, ValueError):
+                return None
+            return None
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in ("min", "max") and node.args:
+                vals = [self.resolve(a, depth + 1) for a in node.args]
+                vals = [v for v in vals if v is not None]
+                if vals:
+                    return min(vals) if name == "min" else max(vals)
+        return None
+
+
+def _constant_assignments(stmts, stmts_are_nodes: bool = False
+                          ) -> Dict[str, ast.expr]:
+    """``name -> value-expr`` for single-target assignments.
+
+    A name assigned more than once keeps its *last* assignment — for
+    the ``block_m = min(block_m, M)`` clamp idiom the clamp is the value
+    the kernel actually sees.
+    """
+    table: Dict[str, ast.expr] = {}
+    nodes = stmts if stmts_are_nodes else list(stmts)
+    for node in nodes:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                table[tgt.id] = node.value
+            elif isinstance(tgt, ast.Tuple) \
+                    and isinstance(node.value, ast.Tuple) \
+                    and len(tgt.elts) == len(node.value.elts):
+                # `M, N = 256, 128` unpacks element-wise
+                for t, v in zip(tgt.elts, node.value.elts):
+                    if isinstance(t, ast.Name):
+                        table[t.id] = v
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name):
+                table[node.target.id] = node.value
+    return table
+
+
+def _param_defaults(func: ast.FunctionDef) -> Dict[str, ast.expr]:
+    table: Dict[str, ast.expr] = {}
+    args = func.args
+    pos = args.posonlyargs + args.args
+    for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                            args.defaults):
+        table[arg.arg] = default
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            table[arg.arg] = default
+    return table
+
+
+def param_names(func: ast.FunctionDef) -> List[str]:
+    args = func.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    names += [a.arg for a in args.kwonlyargs]
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def positional_param_names(func: ast.FunctionDef) -> List[str]:
+    args = func.args
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+def kwonly_param_names(func: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in func.args.kwonlyargs]
+
+
+def body_is_abstract(func: ast.FunctionDef) -> bool:
+    """True for bodies that only ``raise NotImplementedError`` / ``...``
+    (optionally after a docstring) — the protocol-base convention."""
+    body = list(func.body)
+    if body and isinstance(body[0], ast.Expr) and isinstance(
+            body[0].value, ast.Constant) and isinstance(
+            body[0].value.value, str):
+        body = body[1:]
+    if len(body) != 1:
+        return False
+    stmt = body[0]
+    if isinstance(stmt, ast.Raise):
+        exc = stmt.exc
+        if isinstance(exc, ast.Call):
+            exc = exc.func
+        return dotted_name(exc) == "NotImplementedError" if exc else False
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+        return stmt.value.value is Ellipsis
+    if isinstance(stmt, ast.Pass):
+        return True
+    return False
+
+
+def unwrap_partial(node: ast.expr) -> ast.expr:
+    """``functools.partial(f, ...)`` -> ``f`` (recursively)."""
+    while isinstance(node, ast.Call):
+        name = call_name(node)
+        if name and last_segment(name) == "partial" and node.args:
+            node = node.args[0]
+        else:
+            break
+    return node
+
+
+def assign_targets(stmt: ast.stmt) -> List[str]:
+    """Dotted names (re)bound by an assignment-like statement."""
+    out: List[str] = []
+
+    def collect(tgt: ast.expr):
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                collect(e)
+        elif isinstance(tgt, ast.Starred):
+            collect(tgt.value)
+        else:
+            name = dotted_name(tgt)
+            if name:
+                out.append(name)
+
+    if isinstance(stmt, ast.Assign):
+        for tgt in stmt.targets:
+            collect(tgt)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        collect(stmt.target)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        collect(stmt.target)
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                collect(item.optional_vars)
+    return out

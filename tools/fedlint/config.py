@@ -1,0 +1,65 @@
+"""fedlint configuration: scan set, per-rule options, per-path overrides.
+
+The defaults encode this repo's policy (DESIGN.md §8):
+
+* library code (``src/``) is fully strict — a PRNG key literal anywhere
+  in ``src`` is an error, because every key must flow from the one
+  ``FedConfig.seed`` -> ``round_keys`` schedule that the three-backend
+  parity guarantee replays;
+* ``tests/``, ``benchmarks/`` and ``examples/`` are the *entry points*
+  that own seeds, so a literal ``PRNGKey(0)`` there is the sanctioned
+  construction site — FL001's literal check is relaxed, while the
+  key-*reuse* check (two consumes without split/fold_in) stays on
+  everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+# the trees the CI gate lints (launch lives inside src/repro/launch)
+DEFAULT_PATHS = ["src", "benchmarks", "tests", "tools"]
+
+_ALL_RULES = ("FL001", "FL002", "FL003", "FL004", "FL005")
+
+
+@dataclasses.dataclass
+class LintConfig:
+    enabled_rules: Tuple[str, ...] = _ALL_RULES
+    # global per-rule option overrides: {"FL003": {"vmem_budget_bytes": ...}}
+    rule_options: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    # (glob over repo-relative path, {rule_id: {option: value}}) — later
+    # entries override earlier ones; merged on top of rule defaults.
+    path_overrides: List[Tuple[str, Dict[str, Dict[str, Any]]]] = \
+        dataclasses.field(default_factory=list)
+
+
+DEFAULT_CONFIG = LintConfig(
+    path_overrides=[
+        # tests/benchmarks/examples own their seeds: literal PRNGKey
+        # construction is the entry-point idiom there, reuse is still
+        # checked.
+        # tests additionally pass one key to several helpers *on
+        # purpose* (determinism assertions: same key in → same params
+        # out), so helper-reuse tracking is off there; reuse across two
+        # direct jax.random draws stays an error everywhere.
+        ("tests/*", {"FL001": {"allow_literal_keys": True,
+                               "check_helper_reuse": False}}),
+        ("tests/**/*", {"FL001": {"allow_literal_keys": True,
+                                  "check_helper_reuse": False}}),
+        ("benchmarks/*", {"FL001": {"allow_literal_keys": True,
+                                    "check_helper_reuse": False}}),
+        ("benchmarks/**/*", {"FL001": {"allow_literal_keys": True,
+                                       "check_helper_reuse": False}}),
+        ("examples/*", {"FL001": {"allow_literal_keys": True}}),
+        # fedlint's own fixtures hold deliberate violations; the live
+        # gate must not trip over them (tests lint them explicitly).
+        ("tests/fedlint_fixtures/*", {r: {"enabled": False}
+                                      for r in _ALL_RULES}),
+    ],
+)
+
+# fixture runs in tests/test_fedlint.py use the strict config: every
+# rule fully enabled everywhere, no path relaxations.
+STRICT_CONFIG = LintConfig()

@@ -1,0 +1,316 @@
+"""fedlint core: diagnostics, suppressions, baseline, the lint driver.
+
+fedlint is the repo's third CI gate (next to ``check_docs.py`` and
+``check_bench.py``): a stdlib-``ast`` static pass that proves the
+conventions the backend-parity guarantee rests on — PRNG key discipline,
+no trace-time branching on traced values, Pallas tiling invariants,
+strategy-protocol conformance, donation safety (DESIGN.md §8). It never
+imports the code it checks, so it runs in milliseconds before the test
+suite and on machines that cannot import the accelerator stack.
+
+Suppression syntax (DESIGN.md §8):
+
+* ``# fedlint: disable=FL001`` on the flagged line (comma-separate
+  several ids, or ``disable=all``) silences that line;
+* ``# fedlint: disable-file=FL003`` anywhere in a file silences the rule
+  for the whole file.
+
+A committed baseline (``tools/fedlint/baseline.json``) can grandfather
+known findings; this repo commits an *empty* baseline — the gate is
+strict from day one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import json
+import re
+from pathlib import Path
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+from tools.fedlint import astutil
+
+ROOT = Path(__file__).resolve().parent.parent.parent
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+
+ERROR = "error"
+WARNING = "warning"
+
+_SUPPRESS = re.compile(
+    r"#\s*fedlint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: ``path:line [RULE] severity: message``."""
+
+    path: str           # repo-relative, forward slashes
+    line: int
+    rule: str           # FL001..FL005
+    severity: str       # error | warning
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line} [{self.rule}] "
+                f"{self.severity}: {self.message}")
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        """Baseline identity: stable under unrelated line-number churn."""
+        return (self.path, self.rule, self.message)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class ModuleContext:
+    """Everything a rule sees for one file."""
+
+    def __init__(self, path: Path, relpath: str, source: str,
+                 tree: ast.Module, options: Dict[str, Any],
+                 project: "ProjectIndex"):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.options = options
+        self.project = project
+
+    def diag(self, node_or_line, rule: str, message: str,
+             severity: str = ERROR) -> Diagnostic:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        return Diagnostic(path=self.relpath, line=line, rule=rule,
+                          severity=severity, message=message)
+
+
+class Rule:
+    """A pluggable invariant check. Subclasses yield Diagnostics."""
+
+    rule_id = "FL000"
+    name = "base"
+    default_options: Dict[str, Any] = {}
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    node: ast.ClassDef
+    module: str                       # relpath of the defining file
+    base_names: List[str]
+    registries: List[Tuple[str, str]]  # (REGISTRY, "entry-name") pairs
+
+
+class ProjectIndex:
+    """Cross-file class index (FL004 resolves inheritance through it)."""
+
+    def __init__(self):
+        # simple class name -> list of ClassInfo (collisions kept)
+        self.classes: Dict[str, List[ClassInfo]] = {}
+
+    def add_module(self, relpath: str, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = [b for b in (astutil.dotted_name(base)
+                                 for base in node.bases) if b]
+            regs = []
+            for deco in node.decorator_list:
+                if not isinstance(deco, ast.Call):
+                    continue
+                name = astutil.call_name(deco)
+                if name and astutil.last_segment(name) == "register" \
+                        and len(deco.args) >= 2:
+                    reg = astutil.dotted_name(deco.args[0])
+                    entry = deco.args[1]
+                    if reg and isinstance(entry, ast.Constant):
+                        regs.append((astutil.last_segment(reg),
+                                     str(entry.value)))
+            info = ClassInfo(node=node, module=relpath,
+                             base_names=[astutil.last_segment(b)
+                                         for b in bases],
+                             registries=regs)
+            self.classes.setdefault(node.name, []).append(info)
+
+    def lookup(self, name: str, prefer_module: Optional[str] = None
+               ) -> Optional[ClassInfo]:
+        infos = self.classes.get(name)
+        if not infos:
+            return None
+        if prefer_module:
+            for info in infos:
+                if info.module == prefer_module:
+                    return info
+        return infos[0]
+
+    def mro(self, info: ClassInfo, max_depth: int = 12) -> List[ClassInfo]:
+        """Approximate linearisation: the class, then bases breadth-first
+        (resolved by simple name; same-module definitions win)."""
+        seen, order, queue = set(), [], [info]
+        while queue and len(order) < max_depth:
+            cur = queue.pop(0)
+            if id(cur) in seen:
+                continue
+            seen.add(id(cur))
+            order.append(cur)
+            for base in cur.base_names:
+                nxt = self.lookup(base, prefer_module=cur.module)
+                if nxt is not None:
+                    queue.append(nxt)
+        return order
+
+    def find_method(self, info: ClassInfo, method: str
+                    ) -> Optional[Tuple[ClassInfo, ast.FunctionDef]]:
+        """First def of ``method`` along the approximate MRO."""
+        for cls in self.mro(info):
+            for stmt in cls.node.body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and stmt.name == method:
+                    return cls, stmt
+        return None
+
+    def class_attr(self, info: ClassInfo, attr: str
+                   ) -> Optional[Tuple[ClassInfo, ast.expr]]:
+        """First class-level ``attr = value`` along the approximate MRO."""
+        for cls in self.mro(info):
+            for stmt in cls.node.body:
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name) and tgt.id == attr:
+                            return cls, stmt.value
+        return None
+
+    def subclasses_of(self, root_name: str, info: ClassInfo) -> bool:
+        return any(cls.node.name == root_name for cls in self.mro(info))
+
+
+# --------------------------------------------------------------- suppressions
+def parse_suppressions(source: str):
+    """-> (``{line: {rule,...}}``, file-wide ``{rule,...}``)."""
+    per_line: Dict[int, set] = {}
+    per_file: set = set()
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        for kind, ids in _SUPPRESS.findall(line):
+            rules = {r.strip().upper() for r in ids.split(",") if r.strip()}
+            if kind == "disable-file":
+                per_file |= rules
+            else:
+                per_line.setdefault(lineno, set()).update(rules)
+    return per_line, per_file
+
+
+def is_suppressed(diag: Diagnostic, per_line: Dict[int, set],
+                  per_file: set) -> bool:
+    def match(rules: set) -> bool:
+        return "ALL" in rules or diag.rule.upper() in rules
+
+    if match(per_file):
+        return True
+    rules = per_line.get(diag.line)
+    return bool(rules and match(rules))
+
+
+# -------------------------------------------------------------------- baseline
+def load_baseline(path: Path = BASELINE_PATH) -> List[Dict[str, Any]]:
+    if not path.exists():
+        return []
+    return json.loads(path.read_text() or "[]")
+
+
+def baseline_fingerprints(entries: Iterable[Dict[str, Any]]):
+    return {(e["path"], e["rule"], e["message"]) for e in entries}
+
+
+def write_baseline(diags: List[Diagnostic],
+                   path: Path = BASELINE_PATH) -> None:
+    entries = [{"path": d.path, "rule": d.rule, "message": d.message}
+               for d in sorted(diags, key=lambda d: (d.path, d.rule,
+                                                     d.line))]
+    path.write_text(json.dumps(entries, indent=1) + "\n")
+
+
+# ---------------------------------------------------------------------- driver
+def collect_files(paths: Iterable[Path]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    # dedupe, keep order
+    seen, out = set(), []
+    for f in files:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def relpath_of(path: Path, root: Path = ROOT) -> str:
+    try:
+        return path.resolve().relative_to(root).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def merged_options(config, rule: Rule, relpath: str) -> Dict[str, Any]:
+    opts = dict(rule.default_options)
+    opts.update(config.rule_options.get(rule.rule_id, {}))
+    for pattern, overrides in config.path_overrides:
+        if fnmatch.fnmatch(relpath, pattern):
+            opts.update(overrides.get(rule.rule_id, {}))
+    return opts
+
+
+def lint_files(files: Iterable[Path], config=None, root: Path = ROOT
+               ) -> List[Diagnostic]:
+    """Run every enabled rule over ``files``; returns unsuppressed
+    diagnostics (baseline filtering is the caller's concern)."""
+    from tools.fedlint.config import DEFAULT_CONFIG
+    from tools.fedlint.rules import build_rules
+    config = config or DEFAULT_CONFIG
+    rules = build_rules(config.enabled_rules)
+
+    parsed: List[Tuple[Path, str, str, ast.Module]] = []
+    index = ProjectIndex()
+    diags: List[Diagnostic] = []
+    for path in files:
+        relpath = relpath_of(path, root)
+        try:
+            source = path.read_text()
+            tree = ast.parse(source, filename=str(path))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            diags.append(Diagnostic(
+                path=relpath, line=getattr(e, "lineno", 1) or 1,
+                rule="FL000", severity=ERROR,
+                message=f"file does not parse: {e.msg if hasattr(e, 'msg') else e}"))
+            continue
+        astutil.attach_parents(tree)
+        index.add_module(relpath, tree)
+        parsed.append((path, relpath, source, tree))
+
+    for path, relpath, source, tree in parsed:
+        per_line, per_file = parse_suppressions(source)
+        for rule in rules:
+            opts = merged_options(config, rule, relpath)
+            if not opts.get("enabled", True):
+                continue
+            ctx = ModuleContext(path, relpath, source, tree, opts, index)
+            for diag in rule.check_module(ctx):
+                if not is_suppressed(diag, per_line, per_file):
+                    diags.append(diag)
+    diags.sort(key=lambda d: (d.path, d.line, d.rule))
+    return diags
+
+
+def lint_paths(paths: Iterable[str], config=None, root: Path = ROOT
+               ) -> List[Diagnostic]:
+    files = collect_files([root / p if not Path(p).is_absolute()
+                           else Path(p) for p in paths])
+    return lint_files(files, config=config, root=root)

@@ -1,0 +1,22 @@
+"""fedlint rule registry — one module per invariant (DESIGN.md §8)."""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from tools.fedlint.core import Rule
+from tools.fedlint.rules.fl001_keys import KeyDiscipline
+from tools.fedlint.rules.fl002_retrace import RetraceHazards
+from tools.fedlint.rules.fl003_tiling import PallasTiling
+from tools.fedlint.rules.fl004_registry import RegistryConformance
+from tools.fedlint.rules.fl005_donation import DonationSafety
+
+ALL_RULES = (KeyDiscipline, RetraceHazards, PallasTiling,
+             RegistryConformance, DonationSafety)
+
+RULES_BY_ID = {cls.rule_id: cls for cls in ALL_RULES}
+
+
+def build_rules(enabled: Iterable[str]) -> List[Rule]:
+    """Instantiate the requested rules, in FL001..FL005 order."""
+    wanted = set(enabled)
+    return [cls() for cls in ALL_RULES if cls.rule_id in wanted]

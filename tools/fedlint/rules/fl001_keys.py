@@ -1,0 +1,322 @@
+"""FL001 — PRNG key discipline.
+
+Two invariants (DESIGN.md §8):
+
+* **No fixed key literals in library code.** Every key in ``src/`` must
+  derive from an explicit seed (``FedConfig.seed``, a ``seed`` argument,
+  ``args.seed``, …) so the ``round_keys`` schedule is the single source
+  of randomness the three exchange backends replay bit-identically. A
+  ``jax.random.PRNGKey(<literal>)`` buried in a strategy or model makes
+  part of the schedule predictable and unkeyed by the run — exactly the
+  coverage-selector bug PR 5 fixed by hand. Entry points (tests,
+  benchmarks, examples) own their seeds, so the literal check is relaxed
+  there by config (``allow_literal_keys``).
+
+* **No key reuse.** A key consumed by two ``jax.random.*`` draws (or
+  passed to two key-consuming helpers) without an intervening
+  ``split`` / ``fold_in`` produces *correlated* streams — e.g. an attack
+  corruption and a tester draw seeing identical randomness.
+  Reassignment (``key, sub = jax.random.split(key)``) resets the count;
+  ``fold_in`` is the sanctioned multi-derivation and never counts as a
+  consume.
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import re
+from typing import Dict, Iterator, List, Set, Tuple
+
+from tools.fedlint import astutil
+from tools.fedlint.core import Diagnostic, ModuleContext, Rule
+
+# jax.random.* callees that do NOT consume their key argument: key
+# constructors and the sanctioned derivation primitive.
+_NON_CONSUMING = {"fold_in", "PRNGKey", "key", "wrap_key_data",
+                  "key_data", "key_impl", "clone"}
+
+# builtins never draw from a key — str(p.key) in a pytree-path walk is
+# not a consume.
+_BUILTINS = {"str", "repr", "format", "print", "len", "zip", "list",
+             "tuple", "set", "dict", "sorted", "enumerate", "hash",
+             "isinstance", "hasattr", "getattr", "type", "id", "min",
+             "max", "sum", "map", "filter", "bool", "int", "float",
+             "abs", "range", "reversed", "any", "all"}
+
+# numpy's stateful Generators are reused by design; only jax keys are
+# single-use, so `rng` is deliberately NOT key-like.
+_KEYLIKE = re.compile(r"(^|_)(key|prngkey|subkey)s?$", re.IGNORECASE)
+
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp,
+                   ast.GeneratorExp)
+
+_NUMPY_ROOTS = {"np", "numpy", "onp", "scipy"}
+
+
+def _is_jax_random_call(call: ast.Call) -> Tuple[bool, str]:
+    name = astutil.call_name(call)
+    if not name:
+        return False, ""
+    parts = name.split(".")
+    if parts[0] in _NUMPY_ROOTS:    # np.random.* is stateful, not keyed
+        return False, ""
+    if "random" in parts[:-1]:
+        return True, parts[-1]
+    if parts[-1] == "PRNGKey":      # from jax.random import PRNGKey
+        return True, "PRNGKey"
+    return False, ""
+
+
+def _block_terminates(stmts: List[ast.stmt]) -> bool:
+    """Control flow cannot fall out of the bottom of this block."""
+    for stmt in stmts:
+        if isinstance(stmt, (ast.Return, ast.Raise, ast.Break,
+                             ast.Continue)):
+            return True
+        if isinstance(stmt, ast.If) and stmt.orelse \
+                and _block_terminates(stmt.body) \
+                and _block_terminates(stmt.orelse):
+            return True
+    return False
+
+
+def _keylike(name: str) -> bool:
+    return bool(_KEYLIKE.search(name.rsplit(".", 1)[-1]))
+
+
+class KeyDiscipline(Rule):
+    rule_id = "FL001"
+    name = "key-discipline"
+    default_options = {
+        "enabled": True,
+        # entry-point trees (tests/benchmarks/examples) set this True:
+        # literal seeds at construction sites are their idiom.
+        "allow_literal_keys": False,
+        "check_reuse": True,
+        # tests deliberately reuse keys through helpers to assert
+        # determinism; they turn this off (direct jax.random reuse is
+        # still checked there).
+        "check_helper_reuse": True,
+        # repo-sanctioned derivation helpers: like fold_in, calling them
+        # does not consume the key they derive from.
+        "non_consuming_helpers": ["round_keys"],
+        # names assigned from these constructors hold a *bundle* of
+        # already-derived keys (RoundKeys); handing the bundle to the
+        # engine's entry points is the schedule, not a reuse.
+        "bundle_constructors": ["round_keys"],
+    }
+
+    # ------------------------------------------------------------- literals
+    def _check_literals(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for call in astutil.iter_calls(ctx.tree):
+            is_rand, fn = _is_jax_random_call(call)
+            if not is_rand or fn not in ("PRNGKey", "key"):
+                continue
+            if not call.args:
+                continue
+            seed_arg = call.args[0]
+            if astutil.is_pure_constant(seed_arg):
+                yield ctx.diag(
+                    call, self.rule_id,
+                    f"fixed PRNG key literal jax.random.{fn}"
+                    f"({ast.unparse(seed_arg)}) in library code — derive "
+                    "the key from an explicit seed (FedConfig.seed / a "
+                    "seed argument) so the randomness is keyed by the "
+                    "run, not by the source")
+                continue
+            idents = astutil.identifiers_in(seed_arg)
+            if idents and not any("seed" in i.lower() for i in idents):
+                yield ctx.diag(
+                    call, self.rule_id,
+                    f"jax.random.{fn}({ast.unparse(seed_arg)}) is not "
+                    "derived from a seed — construction sites must "
+                    "reference a seed value (…seed…) or take the key "
+                    "from the caller")
+
+    # ---------------------------------------------------------------- reuse
+    def _check_reuse(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for func in astutil.iter_functions(ctx.tree):
+            # nested defs get their own visit via iter_functions; track
+            # each function body in isolation (closures are not tainted).
+            yield from self._check_function(ctx, func)
+
+    def _check_function(self, ctx: ModuleContext, func: ast.FunctionDef
+                        ) -> Iterator[Diagnostic]:
+        state: Dict[str, int] = {}
+        known_keys: Set[str] = set()
+        seen: Set[Tuple[str, int]] = set()
+        diags: List[Diagnostic] = []
+        self._bundles: Set[str] = set()
+        self._helper_reuse = ctx.options.get("check_helper_reuse", True)
+        self._derivers = set(_NON_CONSUMING) | set(
+            ctx.options.get("non_consuming_helpers", []))
+        self._bundle_ctors = set(
+            ctx.options.get("bundle_constructors", []))
+        self._run_block(ctx, func.body, state, known_keys, seen, diags)
+        yield from diags
+
+    def _run_block(self, ctx, stmts, state, known, seen, diags) -> None:
+        for stmt in stmts:
+            self._run_stmt(ctx, stmt, state, known, seen, diags)
+
+    def _run_stmt(self, ctx, stmt, state, known, seen, diags) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return          # separate scope, visited on its own
+        if isinstance(stmt, ast.If):
+            self._consume_expr(ctx, stmt.test, state, known, seen, diags)
+            s_then = copy.deepcopy(state)
+            s_else = copy.deepcopy(state)
+            self._run_block(ctx, stmt.body, s_then, known, seen, diags)
+            self._run_block(ctx, stmt.orelse, s_else, known, seen, diags)
+            # a branch that returns/raises never merges back into the
+            # fall-through path (dispatch ladders: `if a: return f(key)`)
+            merge = []
+            if not _block_terminates(stmt.body):
+                merge.append(s_then)
+            if not _block_terminates(stmt.orelse):
+                merge.append(s_else)
+            state.clear()
+            for branch in merge:
+                for name, count in branch.items():
+                    state[name] = max(state.get(name, 0), count)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._consume_expr(ctx, stmt.iter, state, known, seen, diags)
+            # two passes simulate repeated iterations: a key consumed in
+            # the body without a per-iteration reassignment trips pass 2
+            for _ in range(2):
+                for name in astutil.assign_targets(stmt):
+                    state[name] = 0
+                self._run_block(ctx, stmt.body, state, known, seen, diags)
+            self._run_block(ctx, stmt.orelse, state, known, seen, diags)
+            return
+        if isinstance(stmt, ast.While):
+            for _ in range(2):
+                self._consume_expr(ctx, stmt.test, state, known, seen,
+                                   diags)
+                self._run_block(ctx, stmt.body, state, known, seen, diags)
+            self._run_block(ctx, stmt.orelse, state, known, seen, diags)
+            return
+        if isinstance(stmt, ast.Try):
+            self._run_block(ctx, stmt.body, state, known, seen, diags)
+            for handler in stmt.handlers:
+                self._run_block(ctx, handler.body, state, known, seen,
+                                diags)
+            self._run_block(ctx, stmt.orelse, state, known, seen, diags)
+            self._run_block(ctx, stmt.finalbody, state, known, seen, diags)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._consume_expr(ctx, item.context_expr, state, known,
+                                   seen, diags)
+            for name in astutil.assign_targets(stmt):
+                state[name] = 0
+            self._run_block(ctx, stmt.body, state, known, seen, diags)
+            return
+        # leaf statements: evaluate expressions, then apply bindings
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._consume_expr(ctx, child, state, known, seen, diags)
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._apply_assignment(stmt, state, known)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                name = astutil.dotted_name(tgt)
+                if name:
+                    state[name] = 0
+
+    def _apply_assignment(self, stmt, state, known) -> None:
+        value = getattr(stmt, "value", None)
+        is_key_rhs = False
+        is_bundle_rhs = False
+        if isinstance(value, ast.Call):
+            is_rand, fn = _is_jax_random_call(value)
+            is_key_rhs = is_rand and fn in ("split", "fold_in", "PRNGKey",
+                                            "key", "clone")
+            cname = astutil.call_name(value)
+            if cname and astutil.last_segment(cname) in self._bundle_ctors:
+                is_bundle_rhs = True
+        for name in astutil.assign_targets(stmt):
+            state[name] = 0
+            # rebinding `p` invalidates stale counts for `p.key` etc.
+            prefix = name + "."
+            for tracked in [t for t in state if t.startswith(prefix)]:
+                state[tracked] = 0
+            if is_key_rhs:
+                known.add(name)
+            if is_bundle_rhs:
+                self._bundles.add(name)
+
+    def _consume_expr(self, ctx, expr, state, known, seen, diags) -> None:
+        if expr is None:
+            return
+        for call in astutil.iter_calls(expr):
+            is_rand, fn = _is_jax_random_call(call)
+            if is_rand:
+                if fn in _NON_CONSUMING:
+                    continue
+                key_expr = (call.args[0] if call.args
+                            else astutil.keyword_arg(call, "key"))
+                self._consume(ctx, call, key_expr, state, known, seen,
+                              diags, via=f"jax.random.{fn}")
+                continue
+            if not self._helper_reuse:
+                continue
+            callee = astutil.call_name(call)
+            last = astutil.last_segment(callee) if callee else None
+            if last in _BUILTINS or last in self._derivers:
+                continue
+            # a known key var handed to any other callable counts as one
+            # consume — helpers (attack.apply, select_testers, …) draw
+            # from it downstream
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                name = astutil.dotted_name(arg)
+                if name is None or name in self._bundles:
+                    continue
+                if name in known or _keylike(name):
+                    self._consume(ctx, call, arg, state, known, seen,
+                                  diags, via=callee or "<call>")
+
+    def _consume(self, ctx, call, key_expr, state, known, seen, diags,
+                 via: str) -> None:
+        if key_expr is None:
+            return
+        name = astutil.dotted_name(key_expr)
+        if name is None:
+            return
+        inc = 1
+        node = key_expr
+        while node is not None:
+            node = astutil.parent(node)
+            if isinstance(node, _COMPREHENSIONS):
+                # the body runs per element — a key from *outside* is
+                # consumed repeatedly, but the comprehension's own loop
+                # variable (k for k in split(key, n)) is fresh each time
+                bound: Set[str] = set()
+                for gen in node.generators:
+                    for t in ast.walk(gen.target):
+                        tn = astutil.dotted_name(t)
+                        if tn:
+                            bound.add(tn)
+                if name not in bound:
+                    inc = 2
+                break
+        state[name] = state.get(name, 0) + inc
+        known.add(name)
+        if state[name] >= 2:
+            mark = (name, call.lineno)
+            if mark in seen:
+                return
+            seen.add(mark)
+            diags.append(ctx.diag(
+                call, self.rule_id,
+                f"PRNG key {name!r} is consumed more than once without "
+                f"an intervening split/fold_in (reused here by {via}) — "
+                "correlated streams break the round_keys discipline"))
+
+    # ----------------------------------------------------------------- entry
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        if not ctx.options.get("allow_literal_keys", False):
+            yield from self._check_literals(ctx)
+        if ctx.options.get("check_reuse", True):
+            yield from self._check_reuse(ctx)

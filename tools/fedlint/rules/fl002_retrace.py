@@ -1,0 +1,278 @@
+"""FL002 — retrace / trace-time hazards in jitted code.
+
+The round engine's no-retrace guarantee (``FederatedTrainer.num_traces``)
+holds only if traced functions never branch in *Python* on values that
+are data-dependent on their traced parameters. This rule scans functions
+that are demonstrably traced — decorated with ``jax.jit`` (directly or
+via ``functools.partial``), or passed by name to ``jax.jit`` /
+``jax.lax.scan`` / ``shard_map`` / ``jax.vmap`` / ``jax.grad`` — and
+flags:
+
+* ``if`` / ``while`` / ``assert`` whose condition is data-dependent on a
+  traced parameter (static parameters named in ``static_argnames`` /
+  ``static_argnums`` are exempt, as are ``.shape`` / ``.dtype`` /
+  ``.ndim`` accesses and ``is None`` identity checks — those are
+  trace-static);
+* f-strings interpolating a traced value (forces concretisation or
+  bakes a tracer repr into the program);
+* mutable (non-hashable) defaults — list/dict/set — on parameters named
+  in ``static_argnames`` (a TypeError at call time, or silent retraces
+  when callers pass varying unhashable values).
+
+Taint is a simple forward pass: traced parameters seed it, assignments
+propagate it, static attribute reads (`x.shape[0]`, `len(x)`) launder it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.fedlint import astutil
+from tools.fedlint.core import Diagnostic, ModuleContext, Rule
+
+_TRACING_CALLS = {"jit", "scan", "shard_map", "vmap", "pmap", "grad",
+                  "value_and_grad", "checkpoint", "remat"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type",
+                 "range"}
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _jit_static_names(call: ast.Call, func: Optional[ast.FunctionDef]
+                      ) -> Set[str]:
+    """Parameter names made static by a ``jax.jit(...)`` call node."""
+    static: Set[str] = set()
+    names = astutil.keyword_arg(call, "static_argnames")
+    if names is not None:
+        static.update(astutil.str_constants(names))
+    nums = astutil.keyword_arg(call, "static_argnums")
+    if nums is not None and func is not None:
+        pos = astutil.positional_param_names(func)
+        for i in astutil.int_constants(nums):
+            if 0 <= i < len(pos):
+                static.add(pos[i])
+    return static
+
+
+def _traced_functions(ctx: ModuleContext
+                      ) -> List[Tuple[ast.FunctionDef, Set[str], ast.Call]]:
+    """(function, static-param-names, marking jit/scan call-or-None)."""
+    by_name: Dict[str, ast.FunctionDef] = {
+        f.name: f for f in astutil.iter_functions(ctx.tree)}
+    out: List[Tuple[ast.FunctionDef, Set[str], Optional[ast.Call]]] = []
+    seen: Set[str] = set()
+
+    # decorator form: @jax.jit / @partial(jax.jit, static_argnames=...)
+    for func in astutil.iter_functions(ctx.tree):
+        for deco in func.decorator_list:
+            call = deco if isinstance(deco, ast.Call) else None
+            target = deco
+            if call is not None:
+                name = astutil.call_name(call)
+                if name and astutil.last_segment(name) == "partial" \
+                        and call.args:
+                    target = call.args[0]
+                else:
+                    target = call.func
+            name = astutil.dotted_name(target)
+            if name and astutil.last_segment(name) == "jit":
+                static = _jit_static_names(call, func) if call else set()
+                out.append((func, static, call))
+                seen.add(func.name)
+
+    # reference form: jax.jit(f, ...) / lax.scan(body, ...) /
+    # shard_map(f, ...) / jax.vmap(f)
+    for call in astutil.iter_calls(ctx.tree):
+        name = astutil.call_name(call)
+        if not name or astutil.last_segment(name) not in _TRACING_CALLS:
+            continue
+        if not call.args:
+            continue
+        target = astutil.unwrap_partial(call.args[0])
+        tname = astutil.dotted_name(target)
+        if tname is None:
+            continue
+        fname = astutil.last_segment(tname)
+        func = by_name.get(fname)
+        if func is None or fname in seen:
+            continue
+        seen.add(fname)
+        static = (_jit_static_names(call, func)
+                  if astutil.last_segment(name) == "jit" else set())
+        out.append((func, static, call))
+    return out
+
+
+def _expr_tainted(node: ast.expr, taint: Set[str]) -> bool:
+    """Is the expression data-dependent on a tainted name?
+
+    Static accessors (.shape/.dtype/…, len(), isinstance()) and
+    ``is``/``is not`` comparisons launder taint — they are trace-static.
+    """
+    if node is None:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return _expr_tainted(node.value, taint)
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False
+        return (_expr_tainted(node.left, taint)
+                or any(_expr_tainted(c, taint) for c in node.comparators))
+    if isinstance(node, ast.Call):
+        name = astutil.call_name(node)
+        if name and astutil.last_segment(name) in _STATIC_CALLS:
+            return False
+        # a method on a tainted receiver (x.sum(), x.mean()) returns
+        # tainted data — the receiver lives in node.func, not the args
+        return (_expr_tainted(node.func, taint)
+                or any(_expr_tainted(a, taint) for a in node.args)
+                or any(_expr_tainted(kw.value, taint)
+                       for kw in node.keywords))
+    if isinstance(node, ast.Subscript):
+        return (_expr_tainted(node.value, taint)
+                or _expr_tainted(node.slice, taint))
+    if isinstance(node, (ast.BoolOp,)):
+        return any(_expr_tainted(v, taint) for v in node.values)
+    if isinstance(node, ast.BinOp):
+        return (_expr_tainted(node.left, taint)
+                or _expr_tainted(node.right, taint))
+    if isinstance(node, ast.UnaryOp):
+        return _expr_tainted(node.operand, taint)
+    if isinstance(node, ast.IfExp):
+        return (_expr_tainted(node.test, taint)
+                or _expr_tainted(node.body, taint)
+                or _expr_tainted(node.orelse, taint))
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return any(_expr_tainted(e, taint) for e in node.elts)
+    if isinstance(node, ast.Starred):
+        return _expr_tainted(node.value, taint)
+    return False
+
+
+class RetraceHazards(Rule):
+    rule_id = "FL002"
+    name = "retrace-hazards"
+    default_options = {"enabled": True}
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for func, static, mark in _traced_functions(ctx):
+            yield from self._check_traced(ctx, func, static)
+            if mark is not None:
+                yield from self._check_static_defaults(ctx, func, static)
+
+    # -------------------------------------------------- mutable static defs
+    def _check_static_defaults(self, ctx, func, static
+                               ) -> Iterator[Diagnostic]:
+        defaults = astutil._param_defaults(func)
+        for name in static:
+            default = defaults.get(name)
+            if default is not None and isinstance(default,
+                                                 _MUTABLE_LITERALS):
+                yield ctx.diag(
+                    default, self.rule_id,
+                    f"static_argnames parameter {name!r} of "
+                    f"{func.name}() has a non-hashable default "
+                    f"({ast.unparse(default)[:40]}) — static arguments "
+                    "must be hashable or every call retraces/raises")
+
+    # ----------------------------------------------------- tainted branches
+    def _check_traced(self, ctx, func: ast.FunctionDef, static: Set[str]
+                      ) -> Iterator[Diagnostic]:
+        taint: Set[str] = {
+            p for p in astutil.param_names(func)
+            if p not in static and p not in ("self", "cls")}
+        yield from self._walk_block(ctx, func, func.body, taint)
+
+    def _walk_block(self, ctx, func, stmts, taint: Set[str]
+                    ) -> Iterator[Diagnostic]:
+        for stmt in stmts:
+            yield from self._walk_stmt(ctx, func, stmt, taint)
+
+    def _walk_stmt(self, ctx, func, stmt, taint: Set[str]
+                   ) -> Iterator[Diagnostic]:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs close over the traced scope: same taint, their
+            # own non-self params are traced too (scan bodies etc.)
+            inner = taint | {p for p in astutil.param_names(stmt)
+                             if p not in ("self", "cls")}
+            yield from self._walk_block(ctx, stmt, stmt.body, inner)
+            return
+        if isinstance(stmt, ast.If):
+            if _expr_tainted(stmt.test, taint):
+                yield ctx.diag(
+                    stmt, self.rule_id,
+                    f"Python `if` on a value data-dependent on traced "
+                    f"parameters of {func.name}() — use jnp.where / "
+                    "lax.cond, or hoist the decision pre-trace")
+            yield from self._walk_block(ctx, func, stmt.body, set(taint))
+            yield from self._walk_block(ctx, func, stmt.orelse, set(taint))
+            return
+        if isinstance(stmt, ast.While):
+            if _expr_tainted(stmt.test, taint):
+                yield ctx.diag(
+                    stmt, self.rule_id,
+                    f"Python `while` on a traced value in {func.name}() "
+                    "— use lax.while_loop")
+            yield from self._walk_block(ctx, func, stmt.body, set(taint))
+            return
+        if isinstance(stmt, ast.Assert):
+            if _expr_tainted(stmt.test, taint):
+                yield ctx.diag(
+                    stmt, self.rule_id,
+                    f"`assert` on a traced value in {func.name}() — "
+                    "asserts on tracers either fail spuriously or are "
+                    "silently trace-time-only; use checkify or assert "
+                    "on static .shape/.dtype facts")
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            if _expr_tainted(stmt.iter, taint):
+                yield ctx.diag(
+                    stmt, self.rule_id,
+                    f"Python `for` over a traced value in {func.name}() "
+                    "— use lax.scan / lax.fori_loop")
+            loop_taint = set(taint)
+            if _expr_tainted(stmt.iter, taint):
+                loop_taint.update(astutil.assign_targets(stmt))
+            yield from self._walk_block(ctx, func, stmt.body, loop_taint)
+            yield from self._walk_block(ctx, func, stmt.orelse, loop_taint)
+            return
+        if isinstance(stmt, ast.Try):
+            for block in (stmt.body, stmt.orelse, stmt.finalbody):
+                yield from self._walk_block(ctx, func, block, taint)
+            for handler in stmt.handlers:
+                yield from self._walk_block(ctx, func, handler.body, taint)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            yield from self._walk_block(ctx, func, stmt.body, taint)
+            return
+
+        # taint propagation through plain assignments
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = getattr(stmt, "value", None)
+            targets = astutil.assign_targets(stmt)
+            if value is not None:
+                if _expr_tainted(value, taint) or (
+                        isinstance(stmt, ast.AugAssign)
+                        and any(t in taint for t in targets)):
+                    taint.update(targets)
+                else:
+                    for t in targets:
+                        taint.discard(t)
+        # f-strings on tracers, anywhere in the statement
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.JoinedStr):
+                for part in node.values:
+                    if isinstance(part, ast.FormattedValue) and \
+                            _expr_tainted(part.value, taint):
+                        yield ctx.diag(
+                            node, self.rule_id,
+                            f"f-string interpolates a traced value in "
+                            f"{func.name}() — formatting a tracer bakes "
+                            "its repr into the trace (or forces a "
+                            "concretisation error); use jax.debug.print")
+                        break

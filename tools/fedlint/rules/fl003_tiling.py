@@ -1,0 +1,325 @@
+"""FL003 — Pallas tiling invariants.
+
+Activates on any module that calls ``pl.pallas_call`` (in the repo:
+``src/repro/kernels/*/kernel.py``). Three checks per call site:
+
+* **grid divisibility** — a grid dimension written ``X // B`` silently
+  drops the remainder when ``B`` does not divide ``X``: the kernel never
+  visits the tail elements and the reduction is simply wrong. The rule
+  requires either static divisibility (when both sides resolve to
+  constants), a trace-time guard (``assert X % B == 0``, the repo
+  idiom), or explicit masking (``pl.cdiv`` grid + ``pl.when`` /
+  ``@pl.when`` in the kernel body).
+* **program_id rank** — ``pl.program_id(axis)`` with ``axis >= len(grid)``
+  reads an undefined grid coordinate.
+* **VMEM budget** — the per-step working set (sum over all BlockSpec
+  block shapes x dtype width x 2 for pipeline double-buffering, plus
+  VMEM scratch) must stay under ``vmem_budget_bytes`` (default 16 MiB, a
+  TPU core's VMEM). Dimensions are resolved from literals, parameter
+  defaults and module constants (``min(a, b)`` takes the resolvable
+  bound); unresolvable dimensions assume ``assumed_dim`` lanes — the
+  estimate is a static stand-in for what ``bench_roofline.py`` only
+  measures at runtime.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from tools.fedlint import astutil
+from tools.fedlint.core import Diagnostic, ModuleContext, Rule, WARNING
+
+
+def _is_pallas_call(call: ast.Call) -> bool:
+    name = astutil.call_name(call)
+    return bool(name) and astutil.last_segment(name) == "pallas_call"
+
+
+def _resolve_local(name_node: ast.expr, func: Optional[ast.FunctionDef]
+                   ) -> Optional[ast.expr]:
+    """A local single-assignment value for a Name, else None."""
+    if not isinstance(name_node, ast.Name) or func is None:
+        return None
+    table = astutil._constant_assignments(list(ast.walk(func)),
+                                          stmts_are_nodes=True)
+    return table.get(name_node.id)
+
+
+def _enclosing_function(node: ast.AST) -> Optional[ast.FunctionDef]:
+    while node is not None:
+        node = astutil.parent(node)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return node
+    return None
+
+
+def _grid_elements(call: ast.Call, func: Optional[ast.FunctionDef]
+                   ) -> Optional[List[ast.expr]]:
+    grid = astutil.keyword_arg(call, "grid")
+    if grid is None:
+        return None
+    if isinstance(grid, ast.Name):
+        grid = _resolve_local(grid, func) or grid
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return list(grid.elts)
+    if isinstance(grid, ast.Name):
+        return None                       # unresolvable alias
+    return [grid]                         # single-dim grid
+
+
+def _block_specs(call: ast.Call, func: Optional[ast.FunctionDef]
+                 ) -> List[ast.Call]:
+    specs: List[ast.Call] = []
+    for kw_name in ("in_specs", "out_specs"):
+        node = astutil.keyword_arg(call, kw_name)
+        if node is None:
+            continue
+        if isinstance(node, ast.Name):
+            node = _resolve_local(node, func) or node
+        items = node.elts if isinstance(node, (ast.Tuple, ast.List)) \
+            else [node]
+        for item in items:
+            if isinstance(item, ast.Name):
+                item = _resolve_local(item, func) or item
+            if isinstance(item, ast.Call):
+                name = astutil.call_name(item)
+                if name and astutil.last_segment(name) == "BlockSpec":
+                    specs.append(item)
+    return specs
+
+
+def _scratch_shapes(call: ast.Call, func: Optional[ast.FunctionDef]
+                    ) -> List[ast.Call]:
+    node = astutil.keyword_arg(call, "scratch_shapes")
+    if node is None:
+        return []
+    if isinstance(node, ast.Name):
+        node = _resolve_local(node, func) or node
+    items = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    return [i for i in items if isinstance(i, ast.Call)]
+
+
+def _kernel_function(call: ast.Call, ctx: ModuleContext
+                     ) -> Optional[ast.FunctionDef]:
+    if not call.args:
+        return None
+    target = astutil.unwrap_partial(call.args[0])
+    if isinstance(target, ast.Name):
+        resolved = _resolve_local(target, _enclosing_function(call))
+        if resolved is not None:
+            target = astutil.unwrap_partial(resolved)
+    name = astutil.dotted_name(target)
+    if name is None:
+        return None
+    simple = astutil.last_segment(name)
+    for func in astutil.iter_functions(ctx.tree):
+        if func.name == simple:
+            return func
+    return None
+
+
+def _divisibility_guards(func: Optional[ast.FunctionDef]
+                         ) -> List[Tuple[str, str]]:
+    """(dump(X), dump(B)) pairs guarded by ``assert/raise X % B == 0``."""
+    guards: List[Tuple[str, str]] = []
+    if func is None:
+        return guards
+
+    def compares(test: ast.expr) -> Iterator[ast.Compare]:
+        if isinstance(test, ast.BoolOp):
+            for v in test.values:
+                yield from compares(v)
+        elif isinstance(test, ast.Compare):
+            yield test
+        elif isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            yield from compares(test.operand)
+        elif isinstance(test, ast.BinOp):
+            yield ast.Compare(left=test, ops=[ast.NotEq()],
+                              comparators=[ast.Constant(value=0)])
+
+    def record(cmp: ast.Compare):
+        # match `X % B == 0` / `X % B != 0` / bare `X % B` truthiness
+        if isinstance(cmp.left, ast.BinOp) and isinstance(cmp.left.op,
+                                                          ast.Mod):
+            guards.append((ast.dump(cmp.left.left),
+                           ast.dump(cmp.left.right)))
+
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assert):
+            for cmp in compares(node.test):
+                record(cmp)
+        elif isinstance(node, ast.If):
+            # `if X % B: raise` / `if X % B != 0: raise` guard style
+            if any(isinstance(s, ast.Raise) for s in node.body):
+                for cmp in compares(node.test):
+                    record(cmp)
+    return guards
+
+
+def _uses_masking(kernel: Optional[ast.FunctionDef]) -> bool:
+    if kernel is None:
+        return False
+    for node in ast.walk(kernel):
+        name = None
+        if isinstance(node, ast.Call):
+            name = astutil.call_name(node)
+        elif isinstance(node, ast.Attribute):
+            name = astutil.dotted_name(node)
+        if name and astutil.last_segment(name) == "when":
+            return True
+    return False
+
+
+class PallasTiling(Rule):
+    rule_id = "FL003"
+    name = "pallas-tiling"
+    default_options = {
+        "enabled": True,
+        "vmem_budget_bytes": 16 * 1024 * 1024,
+        "dtype_bytes": 4,         # kernels accumulate in fp32
+        "assumed_dim": 32,        # stand-in for unresolvable dims (e.g. C)
+        "double_buffer": 2,       # Pallas pipelines double-buffer blocks
+    }
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        calls = [c for c in astutil.iter_calls(ctx.tree)
+                 if _is_pallas_call(c)]
+        for call in calls:
+            yield from self._check_call(ctx, call)
+
+    def _check_call(self, ctx: ModuleContext, call: ast.Call
+                    ) -> Iterator[Diagnostic]:
+        wrapper = _enclosing_function(call)
+        kernel = _kernel_function(call, ctx)
+        grid = _grid_elements(call, wrapper)
+        resolver = astutil.ConstResolver(ctx.tree, wrapper)
+
+        if grid is not None:
+            yield from self._check_grid_divisibility(
+                ctx, call, grid, wrapper, kernel, resolver)
+            yield from self._check_program_id(ctx, call, len(grid), kernel)
+        yield from self._check_vmem(ctx, call, wrapper, resolver)
+
+    # ------------------------------------------------------- grid dividing
+    def _check_grid_divisibility(self, ctx, call, grid, wrapper, kernel,
+                                 resolver) -> Iterator[Diagnostic]:
+        guards = _divisibility_guards(wrapper)
+        masked = _uses_masking(kernel)
+        for dim_idx, elem in enumerate(grid):
+            expr = elem
+            if isinstance(expr, ast.Name):
+                expr = _resolve_local(expr, wrapper) or expr
+            if isinstance(expr, ast.Call):
+                name = astutil.call_name(expr)
+                if name and astutil.last_segment(name) == "cdiv":
+                    if not masked:
+                        yield ctx.diag(
+                            elem, self.rule_id,
+                            f"grid dim {dim_idx} uses cdiv (ragged last "
+                            "block) but the kernel body has no pl.when "
+                            "masking — out-of-bounds lanes of the tail "
+                            "block are read/written unguarded")
+                    continue
+            if isinstance(expr, ast.BinOp) and isinstance(expr.op,
+                                                          ast.FloorDiv):
+                num, den = expr.left, expr.right
+                nval = resolver.resolve(num)
+                dval = resolver.resolve(den)
+                if nval is not None and dval is not None and dval != 0:
+                    if nval % dval != 0:
+                        yield ctx.diag(
+                            elem, self.rule_id,
+                            f"grid dim {dim_idx} = {ast.unparse(expr)} "
+                            f"drops a remainder ({nval} % {dval} = "
+                            f"{nval % dval}): the tail elements are "
+                            "never visited — pad, mask, or assert "
+                            "divisibility")
+                    continue
+                pair = (ast.dump(num), ast.dump(den))
+                if pair not in guards and not masked:
+                    yield ctx.diag(
+                        elem, self.rule_id,
+                        f"grid dim {dim_idx} = {ast.unparse(expr)} "
+                        "floor-divides dynamically but nothing guards "
+                        f"divisibility — add `assert "
+                        f"{ast.unparse(num)} % {ast.unparse(den)} == 0` "
+                        "(or mask the tail block with pl.when)")
+
+    # -------------------------------------------------------- program_id
+    def _check_program_id(self, ctx, call, rank: int, kernel
+                          ) -> Iterator[Diagnostic]:
+        if kernel is None:
+            return
+        for node in ast.walk(kernel):
+            if not isinstance(node, ast.Call):
+                continue
+            name = astutil.call_name(node)
+            if not name or astutil.last_segment(name) != "program_id":
+                continue
+            axis = None
+            if node.args and isinstance(node.args[0], ast.Constant):
+                axis = node.args[0].value
+            kw = astutil.keyword_arg(node, "axis")
+            if kw is not None and isinstance(kw, ast.Constant):
+                axis = kw.value
+            if isinstance(axis, int) and axis >= rank:
+                yield ctx.diag(
+                    node, self.rule_id,
+                    f"pl.program_id({axis}) in {kernel.name}() but the "
+                    f"grid has rank {rank} (axes 0..{rank - 1})")
+
+    # ------------------------------------------------------------- VMEM
+    def _check_vmem(self, ctx, call, wrapper, resolver
+                    ) -> Iterator[Diagnostic]:
+        budget = ctx.options["vmem_budget_bytes"]
+        dtype_bytes = ctx.options["dtype_bytes"]
+        assumed = ctx.options["assumed_dim"]
+        dbuf = ctx.options["double_buffer"]
+
+        total = 0
+        approximate = False
+        specs = _block_specs(call, wrapper)
+        if not specs:
+            return
+        for spec in specs:
+            shape = spec.args[0] if spec.args else \
+                astutil.keyword_arg(spec, "block_shape")
+            if shape is None:
+                continue
+            if isinstance(shape, ast.Name):
+                shape = _resolve_local(shape, wrapper) or shape
+            dims = shape.elts if isinstance(shape, (ast.Tuple, ast.List)) \
+                else [shape]
+            n = 1
+            for d in dims:
+                val = resolver.resolve(d)
+                if val is None:
+                    val = assumed
+                    approximate = True
+                n *= max(val, 1)
+            total += n * dtype_bytes * dbuf
+        for scratch in _scratch_shapes(call, wrapper):
+            shape = scratch.args[0] if scratch.args else None
+            if shape is None:
+                continue
+            dims = shape.elts if isinstance(shape, (ast.Tuple, ast.List)) \
+                else [shape]
+            n = 1
+            for d in dims:
+                val = resolver.resolve(d)
+                if val is None:
+                    val = assumed
+                    approximate = True
+                n *= max(val, 1)
+            total += n * dtype_bytes      # scratch is not double-buffered
+
+        if total > budget:
+            approx = " (approximate: unresolved dims assumed " \
+                f"{assumed})" if approximate else ""
+            yield ctx.diag(
+                call, self.rule_id,
+                f"estimated VMEM working set ~{total / 2 ** 20:.1f} MiB "
+                f"exceeds the {budget / 2 ** 20:.0f} MiB budget"
+                f"{approx} — shrink the block shapes or stream over a "
+                "larger grid",
+                severity=WARNING if approximate else "error")

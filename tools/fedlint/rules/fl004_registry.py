@@ -1,0 +1,195 @@
+"""FL004 — strategy-registry protocol conformance.
+
+The engine dispatches strategies structurally: ``driver.py`` calls
+``selector.select(key, N, T, r, scores=...)``, ``program.py`` calls
+``attack.apply(...)`` / ``aggregator.weights(...)`` — nothing type-checks
+those shapes until a round actually runs with that strategy selected,
+which for exotic entries may be never in CI. This rule checks every
+class registered via ``@register(REGISTRY, "name")`` against the
+protocol its registry implies, statically:
+
+* ``SELECTORS`` — a concrete ``select`` somewhere on the (approximate)
+  MRO, and the defining ``select`` must take ``scores`` as a
+  *keyword-only* parameter (the engine always passes ``scores=...`` by
+  keyword; a positional ``scores`` silently binds ``round_idx``).
+* ``ATTACKS`` — a concrete ``corrupt`` **or** both ``apply`` and
+  ``apply_local`` overridden; ``corrupt`` must accept ``ctx`` and
+  ``client_idx`` (or ``**kwargs``) because the engine forwards both.
+  Overriding only one of ``apply`` / ``apply_local`` is a warning: the
+  two paths (batched vs per-client) then disagree on what the attack
+  does — exactly the class of silent local/distributed divergence the
+  parity suite exists to catch.
+* ``AGGREGATORS`` — a concrete ``weights``; if the class defines
+  ``combine`` as a method, it must declare a ``ctx`` parameter
+  (``combine(self, ctx, updates)`` is the engine's call shape).
+* ``COALITIONS`` — a concrete ``transform_reports`` accepting ``key``,
+  ``acc``, ``tester_ids`` and ``ctx`` (or ``**kwargs``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from tools.fedlint import astutil
+from tools.fedlint.core import (ClassInfo, Diagnostic, ModuleContext,
+                                Rule, WARNING)
+
+_REGISTRY_KIND = {
+    "AGGREGATORS": "aggregator",
+    "ATTACKS": "attack",
+    "SELECTORS": "selector",
+    "COALITIONS": "coalition",
+}
+
+
+def _has_kwargs(func: ast.FunctionDef) -> bool:
+    return func.args.kwarg is not None
+
+
+def _accepts(func: ast.FunctionDef, name: str) -> bool:
+    return name in astutil.param_names(func) or _has_kwargs(func)
+
+
+def _concrete_method(ctx: ModuleContext, info: ClassInfo, method: str
+                     ) -> Optional[ast.FunctionDef]:
+    """The def the engine would dispatch to, if it is concrete."""
+    found = ctx.project.find_method(info, method)
+    if found is None:
+        return None
+    _, func = found
+    if astutil.body_is_abstract(func):
+        return None
+    return func
+
+
+def _own_method(info: ClassInfo, method: str) -> Optional[ast.FunctionDef]:
+    for stmt in info.node.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and stmt.name == method:
+            return stmt
+    return None
+
+
+class RegistryConformance(Rule):
+    rule_id = "FL004"
+    name = "registry-conformance"
+    default_options = {"enabled": True}
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = next(
+                (i for i in ctx.project.classes.get(node.name, [])
+                 if i.node is node), None)
+            if info is None:
+                continue
+            for registry, entry in info.registries:
+                kind = _REGISTRY_KIND.get(registry)
+                if kind == "selector":
+                    yield from self._check_selector(ctx, info, entry)
+                elif kind == "attack":
+                    yield from self._check_attack(ctx, info, entry)
+                elif kind == "aggregator":
+                    yield from self._check_aggregator(ctx, info, entry)
+                elif kind == "coalition":
+                    yield from self._check_coalition(ctx, info, entry)
+
+    # --------------------------------------------------------------- selector
+    def _check_selector(self, ctx, info: ClassInfo, entry: str
+                        ) -> Iterator[Diagnostic]:
+        func = _concrete_method(ctx, info, "select")
+        if func is None:
+            yield ctx.diag(
+                info.node, self.rule_id,
+                f"selector {entry!r} ({info.node.name}) has no concrete "
+                "select() — the engine calls "
+                "select(key, num_users, num_testers, round_idx, "
+                "*, scores=None)")
+            return
+        if "scores" not in astutil.kwonly_param_names(func) \
+                and not _has_kwargs(func):
+            where = ("scores is positional"
+                     if "scores" in astutil.positional_param_names(func)
+                     else "scores is missing")
+            yield ctx.diag(
+                func, self.rule_id,
+                f"selector {entry!r}: select() must take `scores` "
+                f"keyword-only ({where}) — the engine passes "
+                "scores=... by keyword; a positional `scores` binds "
+                "round_idx instead")
+
+    # ----------------------------------------------------------------- attack
+    def _check_attack(self, ctx, info: ClassInfo, entry: str
+                      ) -> Iterator[Diagnostic]:
+        corrupt = _concrete_method(ctx, info, "corrupt")
+        apply_own = _own_method(info, "apply")
+        apply_local_own = _own_method(info, "apply_local")
+        if corrupt is None and not (apply_own and apply_local_own):
+            yield ctx.diag(
+                info.node, self.rule_id,
+                f"attack {entry!r} ({info.node.name}) defines neither a "
+                "concrete corrupt() nor both apply()/apply_local() — "
+                "one of the two surfaces the engine dispatches to must "
+                "exist")
+            return
+        if corrupt is not None:
+            missing = [p for p in ("ctx", "client_idx")
+                       if not _accepts(corrupt, p)]
+            if missing:
+                yield ctx.diag(
+                    corrupt, self.rule_id,
+                    f"attack {entry!r}: corrupt() does not accept "
+                    f"{', '.join(missing)} — the engine forwards "
+                    "corrupt(key, trained, global_params, ctx=..., "
+                    "client_idx=...)")
+        if bool(apply_own) != bool(apply_local_own):
+            side = "apply" if apply_own else "apply_local"
+            other = "apply_local" if apply_own else "apply"
+            yield ctx.diag(
+                apply_own or apply_local_own, self.rule_id,
+                f"attack {entry!r} overrides {side}() but not "
+                f"{other}() — the batched and per-client paths now "
+                "disagree on what the attack does; override both or "
+                "express the attack through corrupt()",
+                severity=WARNING)
+
+    # -------------------------------------------------------------- aggregator
+    def _check_aggregator(self, ctx, info: ClassInfo, entry: str
+                          ) -> Iterator[Diagnostic]:
+        weights = _concrete_method(ctx, info, "weights")
+        if weights is None:
+            yield ctx.diag(
+                info.node, self.rule_id,
+                f"aggregator {entry!r} ({info.node.name}) has no "
+                "concrete weights() — the engine calls "
+                "weights(acc, ctx) every round")
+        combine = ctx.project.find_method(info, "combine")
+        if combine is not None:
+            _, func = combine
+            if not astutil.body_is_abstract(func) \
+                    and not _accepts(func, "ctx"):
+                yield ctx.diag(
+                    func, self.rule_id,
+                    f"aggregator {entry!r}: combine() does not declare "
+                    "`ctx` — the engine calls combine(ctx, updates)")
+
+    # --------------------------------------------------------------- coalition
+    def _check_coalition(self, ctx, info: ClassInfo, entry: str
+                         ) -> Iterator[Diagnostic]:
+        func = _concrete_method(ctx, info, "transform_reports")
+        if func is None:
+            yield ctx.diag(
+                info.node, self.rule_id,
+                f"coalition {entry!r} ({info.node.name}) has no concrete "
+                "transform_reports() — the engine calls "
+                "transform_reports(key, acc, tester_ids, ctx)")
+            return
+        missing = [p for p in ("key", "acc", "tester_ids", "ctx")
+                   if not _accepts(func, p)]
+        if missing:
+            yield ctx.diag(
+                func, self.rule_id,
+                f"coalition {entry!r}: transform_reports() does not "
+                f"accept {', '.join(missing)} — the engine passes all "
+                "of key, acc, tester_ids, ctx")

@@ -1,0 +1,271 @@
+"""FL005 — buffer-donation safety.
+
+``jax.jit(..., donate_argnums=...)`` hands the argument's device buffer
+to the compiled computation: after the call the Python binding still
+points at it, but the memory has been reused — touching it raises (on
+TPU/GPU) or, worse, silently aliases under some backends. The engine's
+fast path depends on this (``driver.py`` donates the carried state into
+the scanned multi-round step), so the safe idiom is load-bearing:
+
+    state, chunk = self._scan_fn(state, data)   # rebinds at the call
+
+This rule finds donating call sites — a name bound to
+``jax.jit(f, donate_argnums=...)``, a ``@partial(jax.jit, donate...)``
+decorated function, or an inline ``jax.jit(f, donate...)(args)`` — and
+flags any read of a donated argument *after* the donating call in the
+same scope, until the name is rebound. Block structure is respected:
+statements in sibling ``if``/``elif`` branches do not execute after the
+call and are not flagged (``dryrun.py`` builds per-branch AOT chains
+this way). Inside a loop the whole body re-executes, so a donated name
+not rebound by the call statement itself is flagged even for reads
+textually before the call.
+
+``.lower(...)`` chains are exempt: lowering only traces avals — no real
+buffer is donated until the compiled artifact is executed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from tools.fedlint import astutil
+from tools.fedlint.core import Diagnostic, ModuleContext, Rule
+
+
+def _is_donating_jit(call: ast.Call) -> bool:
+    name = astutil.call_name(call)
+    if not name or astutil.last_segment(name) != "jit":
+        return False
+    return (astutil.keyword_arg(call, "donate_argnums") is not None
+            or astutil.keyword_arg(call, "donate_argnames") is not None)
+
+
+def _donated_positions(jit_call: ast.Call) -> Tuple[List[int], List[str]]:
+    nums_node = astutil.keyword_arg(jit_call, "donate_argnums")
+    names_node = astutil.keyword_arg(jit_call, "donate_argnames")
+    nums = astutil.int_constants(nums_node) if nums_node is not None else []
+    names = (astutil.str_constants(names_node)
+             if names_node is not None else [])
+    return nums, names
+
+
+def _dotted_assignments(tree: ast.Module) -> Dict[str, ast.expr]:
+    """Single-target assignments, keyed by dotted target
+    (``self._scan_fn`` included — driver.py binds its donating jit
+    there)."""
+    table: Dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            name = astutil.dotted_name(node.targets[0])
+            if name:
+                table[name] = node.value
+    return table
+
+
+def _decorated_donators(tree: ast.Module) -> Dict[str, ast.Call]:
+    """function name -> donating jit call, for decorator form."""
+    out: Dict[str, ast.Call] = {}
+    for func in astutil.iter_functions(tree):
+        for deco in func.decorator_list:
+            if not isinstance(deco, ast.Call):
+                continue
+            name = astutil.call_name(deco)
+            if name and astutil.last_segment(name) == "partial" \
+                    and deco.args:
+                inner_name = astutil.dotted_name(deco.args[0])
+                if inner_name \
+                        and astutil.last_segment(inner_name) == "jit" \
+                        and _is_donating_jit_kw(deco):
+                    out[func.name] = deco
+            elif name and astutil.last_segment(name) == "jit" \
+                    and _is_donating_jit(deco):
+                out[func.name] = deco
+    return out
+
+
+def _is_donating_jit_kw(call: ast.Call) -> bool:
+    return (astutil.keyword_arg(call, "donate_argnums") is not None
+            or astutil.keyword_arg(call, "donate_argnames") is not None)
+
+
+def _enclosing_scope(node: ast.AST) -> ast.AST:
+    cur = node
+    while cur is not None:
+        cur = astutil.parent(cur)
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Module)):
+            return cur
+    return node
+
+
+def _stmt_of(node: ast.AST) -> Optional[ast.stmt]:
+    """The statement a node belongs to (its outermost stmt ancestor
+    below the scope boundary)."""
+    cur = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Module)) and cur is not node:
+            return None         # scope boundary — no stmt found
+        if isinstance(cur, ast.stmt):
+            return cur          # innermost statement wins
+        cur = astutil.parent(cur)
+    return None
+
+
+def _blocks_of(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    blocks = []
+    for field in ("body", "orelse", "finalbody"):
+        sub = getattr(stmt, field, None)
+        if isinstance(sub, list):
+            blocks.append(sub)
+    for handler in getattr(stmt, "handlers", []) or []:
+        blocks.append(handler.body)
+    return blocks
+
+
+def _later_statements(scope_body: Sequence[ast.stmt], target: ast.stmt,
+                      ) -> Tuple[List[ast.stmt], bool]:
+    """Statements that (may) execute after ``target`` within the scope,
+    respecting branch structure. Returns (stmts, found). Loop bodies
+    containing the target contribute their whole body (it re-executes)."""
+
+    def search(block: Sequence[ast.stmt]) -> Tuple[List[ast.stmt], bool]:
+        for idx, stmt in enumerate(block):
+            if stmt is target:
+                return list(block[idx + 1:]), True
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue        # separate scope
+            for sub in _blocks_of(stmt):
+                inner, found = search(sub)
+                if found:
+                    later = list(inner)
+                    if isinstance(stmt, (ast.For, ast.AsyncFor,
+                                         ast.While)):
+                        # the loop body re-runs: everything in it —
+                        # including the donating statement itself, which
+                        # re-reads the dead buffer on iteration 2 unless
+                        # the call rebinds it
+                        later += [s for s in sub if s not in inner]
+                    later += list(block[idx + 1:])
+                    return later, True
+        return [], False
+
+    return search(list(scope_body))
+
+
+def _reads_name(stmt: ast.stmt, name: str) -> Optional[ast.AST]:
+    """A Load-context occurrence of ``name`` (dotted) in the statement,
+    skipping nested scopes."""
+    skip_ids: Set[int] = set()
+    if isinstance(stmt, ast.Assign):
+        for tgt in stmt.targets:
+            for n in ast.walk(tgt):
+                skip_ids.add(id(n))
+    elif isinstance(stmt, (ast.AnnAssign,)):
+        for n in ast.walk(stmt.target):
+            skip_ids.add(id(n))
+    for node in ast.walk(stmt):
+        if id(node) in skip_ids:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not stmt:
+            continue
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            if astutil.dotted_name(node) == name:
+                par = astutil.parent(node)
+                if isinstance(par, ast.Attribute):
+                    continue    # inner part of a longer dotted chain
+                return node
+    return None
+
+
+class DonationSafety(Rule):
+    rule_id = "FL005"
+    name = "donation-safety"
+    default_options = {"enabled": True}
+
+    def check_module(self, ctx: ModuleContext) -> Iterator[Diagnostic]:
+        bindings = _dotted_assignments(ctx.tree)
+        decorated = _decorated_donators(ctx.tree)
+
+        for call in astutil.iter_calls(ctx.tree):
+            jit_call = self._donating_jit_for(call, bindings, decorated)
+            if jit_call is None:
+                continue
+            yield from self._check_call_site(ctx, call, jit_call)
+
+    def _donating_jit_for(self, call: ast.Call, bindings, decorated
+                          ) -> Optional[ast.Call]:
+        """The donating jax.jit(...) behind this call site, if any."""
+        func = call.func
+        # .lower(...) is AOT tracing — no buffer donation happens
+        if isinstance(func, ast.Attribute) and func.attr == "lower":
+            return None
+        # inline: jax.jit(f, donate_argnums=...)(args)
+        if isinstance(func, ast.Call) and _is_donating_jit(func):
+            return func
+        name = astutil.dotted_name(func)
+        if name is None:
+            return None
+        # bound: self._scan_fn = jax.jit(f, donate...); self._scan_fn(...)
+        bound = bindings.get(name)
+        if bound is not None:
+            bound_call = bound
+            if isinstance(bound_call, ast.IfExp):
+                # driver.py: jit(...) if rounds>1 else None
+                for side in (bound_call.body, bound_call.orelse):
+                    if isinstance(side, ast.Call) \
+                            and _is_donating_jit(side):
+                        return side
+            if isinstance(bound_call, ast.Call) \
+                    and _is_donating_jit(bound_call):
+                return bound_call
+        # decorator form: @partial(jax.jit, donate...) def f; f(...)
+        deco = decorated.get(astutil.last_segment(name))
+        if deco is not None and astutil.last_segment(name) == name:
+            return deco
+        return None
+
+    def _check_call_site(self, ctx: ModuleContext, call: ast.Call,
+                         jit_call: ast.Call) -> Iterator[Diagnostic]:
+        nums, kw_names = _donated_positions(jit_call)
+        donated: List[str] = []
+        for pos in nums:
+            if 0 <= pos < len(call.args):
+                name = astutil.dotted_name(call.args[pos])
+                if name:
+                    donated.append(name)
+        for kw in call.keywords:
+            if kw.arg in kw_names:
+                name = astutil.dotted_name(kw.value)
+                if name:
+                    donated.append(name)
+        if not donated:
+            return
+
+        stmt = _stmt_of(call)
+        scope = _enclosing_scope(call)
+        if stmt is None:
+            return
+        rebound_here = set(astutil.assign_targets(stmt))
+        later, found = _later_statements(scope.body, stmt)
+        if not found:
+            return
+
+        for name in donated:
+            if name in rebound_here:
+                continue        # state, out = fn(state, ...) — safe idiom
+            for nxt in later:
+                read = _reads_name(nxt, name)
+                if read is not None:
+                    yield ctx.diag(
+                        read, self.rule_id,
+                        f"{name!r} is read after being donated to the "
+                        f"jitted call on line {stmt.lineno} "
+                        "(donate_argnums/donate_argnames) — its buffer "
+                        "is gone; rebind the result (`x, ... = fn(x, "
+                        "...)`) or drop the donation")
+                    break
+                if name in astutil.assign_targets(nxt):
+                    break       # rebound before any read
