@@ -1,0 +1,95 @@
+"""Dropout sweep: FedTest robustness vs client availability
+(EXPERIMENTS.md §Dropout-sweep, DESIGN.md §9).
+
+The availability analogue of the coalition sweep: per-round Bernoulli
+dropout at rate q thins both the aggregation simplex and the tester
+committee, so the question is whether the score separation that
+suppresses an attacker survives when a fraction of every round's
+evidence goes missing. Each row runs the same defended scenario at a
+drop rate and reports final accuracy, the attacker's final aggregate
+weight, its suppression round (first round below 0.1) and the measured
+mean ``dropped_fraction``. A ``straggler_deadline`` row probes the
+non-uniform case (rank-spread finish times) at roughly matched drop
+mass.
+
+The attack is ``random_weights`` (as in the Sec. V-B power sweep):
+its models score badly *regardless* of global convergence, so the
+sweep isolates the availability effect. ``sign_flip`` would confound
+it — once the easy smoke task saturates, flipped updates shrink to
+harmlessness and the attacker legitimately regains weight.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAST, emit
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.models import build_model
+
+SUPPRESSION_BAR = 0.1
+
+
+def _setup():
+    # the reduced CNN on mild-skew shards: a dynamics measurement (who
+    # gets the weight under missing evidence), not a perf one
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(8, 16, 16),
+                                                  cnn_hidden=32)
+    model = build_model(cfg)
+    users = 8
+    data = make_federated_image_dataset(
+        MNIST_LIKE, users, num_samples=4000, global_test=400, seed=1,
+        partition_kwargs={"min_classes": 8, "max_classes": 10})
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=16, grad_clip=0.0, remat=False)
+    return model, users, data, tc
+
+
+def _run(model, users, data, tc, rounds, fault, rate, kwargs=None):
+    fed = FedConfig(num_users=users, num_testers=5, num_malicious=2,
+                    local_steps=10, attack="random_weights",
+                    attack_scale=4.0, fault=fault, fault_rate=rate,
+                    fault_kwargs=kwargs or {})
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=128)
+    state = trainer.init(jax.random.PRNGKey(0))
+    suppressed_at, dropped = None, []
+    for r in range(rounds):
+        state, metrics = trainer.run_round(state, data)
+        mal_w = float(metrics["malicious_weight"])
+        dropped.append(float(metrics["dropped_fraction"]))
+        if suppressed_at is None and mal_w < SUPPRESSION_BAR:
+            suppressed_at = r + 1
+    acc = trainer.global_accuracy(state, data)
+    return acc, mal_w, suppressed_at, sum(dropped) / len(dropped)
+
+
+def dropout_sweep(fast: bool):
+    model, users, data, tc = _setup()
+    rounds = 8 if fast else 20
+    rates = (0.0, 0.2) if fast else (0.0, 0.1, 0.2, 0.3, 0.4, 0.5)
+    for q in rates:
+        fault = "none" if q == 0.0 else "dropout"
+        acc, mal_w, sup, mean_drop = _run(model, users, data, tc,
+                                          rounds, fault, max(q, 0.1))
+        emit(f"faults/dropout_q{q:g}", 0.0,
+             f"final_acc={acc:.4f} final_malicious_weight={mal_w:.5f} "
+             f"suppression_round={sup if sup else f'>{rounds}'} "
+             f"mean_dropped_fraction={mean_drop:.3f}")
+    # non-uniform availability at roughly the same drop mass as q=0.2
+    acc, mal_w, sup, mean_drop = _run(model, users, data, tc, rounds,
+                                      "straggler_deadline", 0.1,
+                                      {"deadline": 2.5})
+    emit("faults/straggler_deadline", 0.0,
+         f"final_acc={acc:.4f} final_malicious_weight={mal_w:.5f} "
+         f"suppression_round={sup if sup else f'>{rounds}'} "
+         f"mean_dropped_fraction={mean_drop:.3f}")
+
+
+def main(fast: bool = FAST):
+    dropout_sweep(fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ SUITES = [
     ("roofline", "benchmarks.bench_roofline"),        # dry-run artifacts
     ("score_power", "benchmarks.bench_score_power"),  # Sec. V-B ablation
     ("testers", "benchmarks.bench_testers"),          # Sec. V-C ablation
+    ("faults", "benchmarks.bench_faults"),            # dropout sweep (§9)
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 

@@ -1,4 +1,7 @@
 from repro.checkpoint.serialization import save_pytree, load_pytree
 from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manifest import (
+    check_manifest, manifest_mismatches, run_manifest)
 
-__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager",
+           "check_manifest", "manifest_mismatches", "run_manifest"]

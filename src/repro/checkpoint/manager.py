@@ -1,46 +1,174 @@
-"""Round-state checkpoint manager for federated training runs."""
+"""Round-state checkpoint manager for federated training runs.
+
+Durability contract (DESIGN.md §9):
+
+* **Atomic saves** — every checkpoint is written to a temporary file in
+  the same directory and moved into place with ``os.replace``, so a
+  crash (or SIGKILL) mid-write can never leave a truncated
+  ``ckpt_*.npz`` masquerading as the latest step. The CI kill-and-resume
+  row relies on this: the process is killed at an arbitrary point and
+  the directory must still restore.
+* **Corrupt-checkpoint skip** — ``restore`` walks the available steps
+  newest-first and skips (with a warning) any checkpoint that fails to
+  load or does not match the template, so one bad file degrades resume
+  by ``save_every`` rounds instead of killing it.
+* **Manifest guard** — ``save`` can attach a run manifest
+  (:mod:`repro.checkpoint.manifest`); ``restore`` hands it back so the
+  caller can refuse a mismatched run before touching the arrays.
+* **Foreign files are ignored** — ``latest_step`` / ``_gc`` skip
+  anything in the directory that does not match ``ckpt_<8 digits>.npz``
+  (stray tmp files, editor droppings), instead of crashing on a
+  non-matching ``re.search``.
+"""
 from __future__ import annotations
 
 import glob
+import json
 import os
 import re
-from typing import Any, Optional
+import tempfile
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.serialization import load_pytree, save_pytree
 
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+MANIFEST_NAME = "manifest.json"
+
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """Keeps the ``keep`` newest round-state checkpoints in a directory.
+
+    ``save_every`` is the cadence policy consumed by ``should_save`` /
+    ``maybe_save`` — drivers call ``maybe_save(step, state)`` after
+    every completed round (or scan chunk) and the manager decides
+    whether ``step`` warrants a write (``save_every <= 0`` disables
+    periodic saves; explicit ``save`` always writes).
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 save_every: int = 0):
         self.directory = directory
-        self.keep = keep
+        self.keep = int(keep)
+        self.save_every = int(save_every)
         os.makedirs(directory, exist_ok=True)
 
+    # ------------------------------------------------------------- paths
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
 
-    def save(self, step: int, state: Any) -> str:
-        path = self._path(step)
-        save_pytree(state, path)
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.directory, MANIFEST_NAME)
+
+    def steps(self) -> List[int]:
+        """Sorted steps of every well-named checkpoint in the directory.
+
+        Non-matching files (``ckpt_tmp.npz``, partial tmp writes) are
+        skipped — a stray file must never crash gc or resume.
+        """
+        steps = []
+        for f in glob.glob(os.path.join(self.directory, "ckpt_*.npz")):
+            m = _CKPT_RE.search(f)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------- saves
+    def _atomic_write(self, path: str, writer) -> None:
+        """Write via tmp file + ``os.replace`` so readers (and crashes)
+        never observe a partial file; the tmp name cannot collide with
+        the ``ckpt_<digits>.npz`` pattern ``steps()`` recognises."""
+        fd, tmp = tempfile.mkstemp(dir=self.directory, prefix="tmp_",
+                                   suffix=".part")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                writer(f)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+
+    def save(self, step: int, state: Any,
+             manifest: Optional[Dict[str, Any]] = None) -> str:
+        """Atomically write ``state`` as step ``step`` (+ the manifest
+        on first save), then gc to the ``keep`` newest."""
+        if manifest is not None:
+            self.write_manifest(manifest)
+        path = self._path(int(step))
+        self._atomic_write(path, lambda f: save_pytree(state, f))
         self._gc()
         return path
 
-    def latest_step(self) -> Optional[int]:
-        steps = []
-        for f in glob.glob(os.path.join(self.directory, "ckpt_*.npz")):
-            m = re.search(r"ckpt_(\d+)\.npz$", f)
-            if m:
-                steps.append(int(m.group(1)))
-        return max(steps) if steps else None
+    def should_save(self, step: int) -> bool:
+        """The ``save_every`` cadence policy (step 0 never saves —
+        nothing has happened yet)."""
+        return (self.save_every > 0 and step > 0
+                and step % self.save_every == 0)
 
+    def maybe_save(self, step: int, state: Any,
+                   manifest: Optional[Dict[str, Any]] = None
+                   ) -> Optional[str]:
+        """``save`` iff the cadence policy asks for it at ``step``."""
+        if not self.should_save(step):
+            return None
+        return self.save(step, state, manifest=manifest)
+
+    # ---------------------------------------------------------- manifest
+    def write_manifest(self, manifest: Dict[str, Any]) -> str:
+        payload = json.dumps(manifest, indent=1, sort_keys=True)
+        self._atomic_write(self.manifest_path,
+                           lambda f: f.write(payload.encode()))
+        return self.manifest_path
+
+    def read_manifest(self) -> Optional[Dict[str, Any]]:
+        if not os.path.exists(self.manifest_path):
+            return None
+        with open(self.manifest_path) as f:
+            return json.load(f)
+
+    # ------------------------------------------------------------ restore
     def restore(self, template: Any, step: Optional[int] = None) -> Any:
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        return load_pytree(template, self._path(step))
+        """Restore the newest loadable checkpoint (or exactly ``step``).
 
+        Walking newest-first, a checkpoint that fails to deserialize
+        into ``template`` is skipped with a warning — a torn or foreign
+        file costs one cadence interval, not the run. Raises
+        ``FileNotFoundError`` when nothing restorable remains.
+        """
+        state, found = self.restore_with_step(template, step)
+        del found
+        return state
+
+    def restore_with_step(self, template: Any,
+                          step: Optional[int] = None) -> Tuple[Any, int]:
+        """Like :meth:`restore` but also returns the restored step."""
+        if step is not None:
+            candidates = [int(step)]
+        else:
+            candidates = list(reversed(self.steps()))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        errors = []
+        for s in candidates:
+            path = self._path(s)
+            try:
+                return load_pytree(template, path), s
+            except Exception as e:  # torn write / wrong run / foreign file
+                errors.append(f"{os.path.basename(path)}: {e}")
+                warnings.warn(
+                    f"skipping corrupt checkpoint {path}: {e}",
+                    RuntimeWarning, stacklevel=2)
+        raise FileNotFoundError(
+            f"no restorable checkpoint in {self.directory} "
+            f"(tried {len(candidates)}):\n  " + "\n  ".join(errors))
+
+    # ----------------------------------------------------------------- gc
     def _gc(self) -> None:
-        steps = sorted(
-            int(re.search(r"ckpt_(\d+)\.npz$", f).group(1))
-            for f in glob.glob(os.path.join(self.directory, "ckpt_*.npz")))
-        for s in steps[:-self.keep]:
+        for s in self.steps()[:-self.keep]:
             os.remove(self._path(s))

@@ -1,0 +1,93 @@
+"""Run manifests: the fingerprint that guards checkpoint resume.
+
+A checkpoint is only as durable as the guarantee that it is restored
+into the *same* run: the FedTest round state (scores, trust, the PRNG
+round schedule) is meaningful only under the exact ``FedConfig`` —
+strategies, placements, participation — and model architecture that
+produced it. Restoring a trajectory into a run with, say, a different
+``score_power`` or attack placement would silently continue a
+*different* experiment while claiming bit-identical resume.
+
+So every checkpoint directory carries a ``manifest.json`` written by the
+first save: the full ``FedConfig`` / ``TrainConfig`` field dicts, the
+architecture identity, and the trainer knobs that shape the traced round
+(``use_trust``, the state's leaf structure). ``check_manifest`` compares
+a saved manifest against the resuming run's and raises with the exact
+mismatched fields (DESIGN.md §9).
+
+Everything is JSON round-tripped before comparison, so tuple-vs-list
+and int-vs-float artefacts of serialization can never produce a false
+mismatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List
+
+MANIFEST_VERSION = 1
+
+
+def _jsonable(obj: Any) -> Any:
+    """Normalise through a JSON round-trip (tuples -> lists, key order)."""
+    return json.loads(json.dumps(obj, sort_keys=True, default=str))
+
+
+def run_manifest(model_cfg, fed, train_cfg, *, use_trust: bool = False,
+                 extra: Dict[str, Any] = None) -> Dict[str, Any]:
+    """The resume-compatibility fingerprint of a federated run.
+
+    ``model_cfg`` / ``fed`` / ``train_cfg`` are the frozen config
+    dataclasses; ``extra`` lets drivers pin additional identity (e.g.
+    the dataset name). Wall-clock, output paths, checkpoint cadence and
+    ``fed.rounds`` deliberately do NOT enter the manifest — they may
+    differ between the interrupted and the resuming invocation
+    (``rounds`` is the run-length target, not run identity: resuming a
+    6-round checkpoint with ``--rounds 10`` trains it longer, it does
+    not continue a different experiment).
+    """
+    fed_dict = dataclasses.asdict(fed)
+    fed_dict.pop("rounds", None)
+    manifest = {
+        "manifest_version": MANIFEST_VERSION,
+        "arch": model_cfg.name,
+        "family": model_cfg.family,
+        "model": dataclasses.asdict(model_cfg),
+        "fed": fed_dict,
+        "train": dataclasses.asdict(train_cfg),
+        "use_trust": bool(use_trust),
+    }
+    if extra:
+        manifest["extra"] = dict(extra)
+    return _jsonable(manifest)
+
+
+def manifest_mismatches(saved: Dict[str, Any], current: Dict[str, Any]
+                        ) -> List[str]:
+    """Dotted paths of every leaf where the two manifests disagree."""
+    saved = _jsonable(saved)
+    current = _jsonable(current)
+    diffs: List[str] = []
+
+    def walk(a: Any, b: Any, path: str) -> None:
+        if isinstance(a, dict) and isinstance(b, dict):
+            for k in sorted(set(a) | set(b)):
+                walk(a.get(k), b.get(k), f"{path}.{k}" if path else str(k))
+        elif a != b:
+            diffs.append(f"{path}: saved={a!r} current={b!r}")
+
+    walk(saved, current, "")
+    return diffs
+
+
+def check_manifest(saved: Dict[str, Any], current: Dict[str, Any]) -> None:
+    """Refuse to resume a mismatched run (DESIGN.md §9).
+
+    Raises ``ValueError`` listing every differing field; a checkpoint
+    from a different config/arch must never silently continue.
+    """
+    diffs = manifest_mismatches(saved, current)
+    if diffs:
+        raise ValueError(
+            "checkpoint manifest does not match this run — refusing to "
+            "resume a different experiment:\n  " + "\n  ".join(diffs))

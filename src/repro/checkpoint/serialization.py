@@ -1,7 +1,6 @@
 """Pytree <-> .npz serialization (path-keyed, restores exact structure)."""
 from __future__ import annotations
 
-import io
 import json
 import os
 from typing import Any
@@ -23,7 +22,9 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def save_pytree(tree: Any, path: str) -> None:
+def save_pytree(tree: Any, path: Any) -> None:
+    """Serialize ``tree`` to ``path`` — a filename or an open binary
+    file object (the manager's atomic writer hands us the latter)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     keys = []
@@ -36,20 +37,38 @@ def save_pytree(tree: Any, path: str) -> None:
             arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
         arrays[k] = arr
         keys.append(_path_str(p))
-    meta = json.dumps({"treedef": str(treedef), "paths": keys})
+    meta = json.dumps({"treedef": str(treedef), "paths": keys,
+                       "num_leaves": len(flat)})
+    blob = np.frombuffer(meta.encode(), dtype=np.uint8)
+    if hasattr(path, "write"):
+        np.savez(path, __meta__=blob, **arrays)
+        return
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "wb") as f:
-        np.savez(f, __meta__=np.frombuffer(meta.encode(), dtype=np.uint8),
-                 **arrays)
+        np.savez(f, __meta__=blob, **arrays)
 
 
 def load_pytree(template: Any, path: str) -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template`` (shapes must match).
+
+    Raises ``ValueError`` when the file's leaf count or shapes disagree
+    with the template — the manager treats that as a corrupt/foreign
+    checkpoint and falls back to an older step.
+    """
     with np.load(path) as z:
         flat_t, treedef = jax.tree_util.tree_flatten(template)
+        stored = sum(1 for k in z.files if k.startswith("leaf_"))
+        if stored != len(flat_t):
+            raise ValueError(
+                f"checkpoint has {stored} leaves, template expects "
+                f"{len(flat_t)} — wrong run or torn write")
         leaves = []
         for i, t in enumerate(flat_t):
             arr = z[f"leaf_{i}"]
+            t_shape = getattr(t, "shape", None)
+            if t_shape is not None and tuple(arr.shape) != tuple(t_shape):
+                raise ValueError(
+                    f"leaf_{i} shape {arr.shape} != template {t_shape}")
             leaves.append(jnp.asarray(arr).astype(t.dtype)
                           if hasattr(t, "dtype") else arr)
         return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -197,11 +197,18 @@ def _freeze_kwargs(kw: Any) -> Tuple[Tuple[str, Any], ...]:
 class FedConfig:
     """The paper's knobs (Sec. III, Algorithm 1).
 
-    ``aggregator`` / ``attack`` / ``selector`` / ``coalition`` are
-    **registry names** resolved against :mod:`repro.strategies`
-    (``AGGREGATORS`` / ``ATTACKS`` / ``SELECTORS`` / ``COALITIONS``);
-    the ``*_kwargs`` mappings are forwarded to the strategy constructor
-    (stored as sorted tuples so the config stays frozen and hashable).
+    ``aggregator`` / ``attack`` / ``selector`` / ``coalition`` /
+    ``fault`` are **registry names** resolved against
+    :mod:`repro.strategies` (``AGGREGATORS`` / ``ATTACKS`` /
+    ``SELECTORS`` / ``COALITIONS`` / ``FAULTS``); the ``*_kwargs``
+    mappings are forwarded to the strategy constructor (stored as
+    sorted tuples so the config stays frozen and hashable).
+
+    ``fault`` names a per-round client-failure model (DESIGN.md §9):
+    its survival mask is ANDed into the participation mask after
+    selection, so a dropped client contributes zero weight, its score
+    freezes, and its tester report row is masked — the exact
+    non-sampled semantics, on every exchange backend.
 
     ``coalition`` names a coordinated multi-client adversary
     (DESIGN.md §7): ``coalition_size`` members (placed via
@@ -229,6 +236,9 @@ class FedConfig:
     coalition: str = "none"        # repro.strategies.COALITIONS name
     coalition_kwargs: Any = ()     # e.g. boost_to=0.9, placement='first'
     coalition_size: int = 0        # coordinated members (DESIGN.md §7)
+    fault: str = "none"            # repro.strategies.FAULTS name (§9)
+    fault_kwargs: Any = ()         # e.g. deadline=2.0, placement='first'
+    fault_rate: float = 0.1        # default drop rate offered to faults
     lying_testers: int = 0          # testers reporting fake accuracies (Sec. V-C)
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
@@ -240,18 +250,21 @@ class FedConfig:
         _require(self.num_malicious < self.num_users, "M < N")
         _require(self.coalition_size < self.num_users,
                  "coalition_size < N")
+        _require(0.0 <= self.fault_rate < 1.0,
+                 "fault_rate in [0, 1)")
         for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs",
-                  "coalition_kwargs"):
+                  "coalition_kwargs", "fault_kwargs"):
             object.__setattr__(self, f, _freeze_kwargs(getattr(self, f)))
         # Validate names against the registries (KeyError lists the
         # registered names). Lazy import: repro.strategies never imports
         # repro.config, so this cannot cycle.
         from repro.strategies import (
-            AGGREGATORS, ATTACKS, COALITIONS, SELECTORS)
+            AGGREGATORS, ATTACKS, COALITIONS, FAULTS, SELECTORS)
         AGGREGATORS.get(self.aggregator)
         ATTACKS.get(self.attack)
         SELECTORS.get(self.selector)
         COALITIONS.get(self.coalition)
+        FAULTS.get(self.fault)
         # a named coalition with no members — or members with no named
         # coalition — would silently deactivate: runs (and CI
         # suppression gates) would measure no adversary. Membership may
@@ -277,8 +290,8 @@ class FedConfig:
                      "the coalition (e.g. coalition='mutual_boost')")
 
     def strategy_kwargs(self, field: str) -> dict:
-        """``aggregator`` | ``attack`` | ``selector`` | ``coalition``
-        kwargs as a dict."""
+        """``aggregator`` | ``attack`` | ``selector`` | ``coalition`` |
+        ``fault`` kwargs as a dict."""
         return dict(getattr(self, field + "_kwargs"))
 
 

@@ -24,15 +24,16 @@ from repro.core.engine.backends import (
     make_pod_round, ring_cross_test)
 from repro.core.engine.driver import FederatedTrainer, RoundState
 from repro.core.engine.program import (
-    RoundKeys, RoundProgram, aggregator_defaults, participation_mask,
-    renormalize_over_subset, resolve_coalition, resolve_strategies,
-    round_keys)
+    RoundKeys, RoundProgram, aggregator_defaults, compose_fault_mask,
+    participation_mask, renormalize_over_subset, resolve_coalition,
+    resolve_fault, resolve_strategies, round_keys)
 
 __all__ = [
     "AllgatherBackend", "ExchangeBackend", "FederatedTrainer",
     "LocalBackend", "PodBackend", "RingBackend", "RoundKeys",
     "RoundProgram", "RoundState", "aggregator_defaults",
-    "make_allgather_round", "make_distributed_round", "make_pod_round",
-    "participation_mask", "renormalize_over_subset", "resolve_coalition",
+    "compose_fault_mask", "make_allgather_round",
+    "make_distributed_round", "make_pod_round", "participation_mask",
+    "renormalize_over_subset", "resolve_coalition", "resolve_fault",
     "resolve_strategies", "ring_cross_test", "round_keys",
 ]

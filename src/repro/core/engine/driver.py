@@ -23,7 +23,9 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.manifest import check_manifest, run_manifest
 from repro.config import FedConfig, TrainConfig
 from repro.core.engine.backends import LocalBackend
 from repro.core.engine.program import RoundProgram, round_keys
@@ -79,6 +81,59 @@ class FederatedTrainer:
                           round_idx=jnp.zeros((), jnp.int32),
                           key=rk)
 
+    # -------------------------------------------------------- durability
+    def manifest(self):
+        """Resume-compatibility fingerprint for this trainer's run
+        (DESIGN.md §9); stored next to checkpoints and checked by
+        ``restore_checkpoint``."""
+        return run_manifest(self.model.cfg, self.fed, self.train,
+                            use_trust=self.use_trust)
+
+    def state_template(self) -> RoundState:
+        """Abstract (shape/dtype-only) RoundState — the template
+        ``load_pytree`` restores into. Built via ``eval_shape`` so no
+        params are materialised and no PRNG key is consumed."""
+        abstract_key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return jax.eval_shape(self.init, abstract_key)
+
+    def state_dict(self, state: RoundState) -> dict:
+        """Host-side (numpy) copy of the complete round state — global
+        params, ScoreState (incl. tester trust), round_idx, PRNG key."""
+        return {k: jax.tree_util.tree_map(np.asarray, v)
+                for k, v in state._asdict().items()}
+
+    def load_state(self, state_dict: dict) -> RoundState:
+        """Rebuild a device RoundState from ``state_dict``, casting to
+        this trainer's template dtypes; refuses shape mismatches."""
+        tmpl = self.state_template()
+
+        def cast(t, leaf):
+            leaf = jnp.asarray(leaf)
+            if tuple(leaf.shape) != tuple(t.shape):
+                raise ValueError(
+                    f"state leaf shape {leaf.shape} != template "
+                    f"{t.shape} — state from a different run?")
+            return leaf.astype(t.dtype)
+
+        loaded = RoundState(**{k: state_dict[k] for k in tmpl._fields})
+        return jax.tree_util.tree_map(cast, tmpl, loaded)
+
+    def save_checkpoint(self, mgr, state: RoundState,
+                        step: Optional[int] = None) -> str:
+        """Atomically persist ``state`` (at its own round_idx unless
+        ``step`` overrides) plus the run manifest."""
+        step = int(state.round_idx) if step is None else int(step)
+        return mgr.save(step, state, manifest=self.manifest())
+
+    def restore_checkpoint(self, mgr, step: Optional[int] = None):
+        """Restore ``(state, step)`` from the newest loadable
+        checkpoint, refusing a manifest mismatch (different config or
+        architecture) before touching any arrays."""
+        saved = mgr.read_manifest()
+        if saved is not None:
+            check_manifest(saved, self.manifest())
+        return mgr.restore_with_step(self.state_template(), step)
+
     # ------------------------------------------------------------- internals
     def _round_body(self, state: RoundState, data: FederatedDataset):
         self.num_traces += 1        # python side-effect: runs per trace only
@@ -124,7 +179,9 @@ class FederatedTrainer:
                                        data.global_y[:max_samples]))
 
     def run(self, key, data: FederatedDataset, rounds: Optional[int] = None,
-            eval_every: int = 1, verbose: bool = False):
+            eval_every: int = 1, verbose: bool = False,
+            state: Optional[RoundState] = None, ckpt=None,
+            should_stop: Optional[Callable[[], bool]] = None):
         """Full training loop; returns (final_state, history dict).
 
         With ``rounds_per_call > 1`` the steady state runs through the
@@ -133,14 +190,30 @@ class FederatedTrainer:
         driver-call boundaries. A remainder of ``rounds %
         rounds_per_call`` rounds falls back to the single-round driver
         (a second compiled program, still one trace each).
+
+        Durability (DESIGN.md §9): pass ``state`` (e.g. from
+        ``restore_checkpoint``) to resume — ``rounds`` is the *total*
+        target, so a state at round k runs k..rounds and the result is
+        bit-identical to an uninterrupted run (the round body re-derives
+        every key from the carried ``state.key`` and ``round_idx``).
+        ``ckpt`` is a :class:`~repro.checkpoint.CheckpointManager` whose
+        ``save_every`` cadence is honoured at driver-call boundaries;
+        ``should_stop()`` is polled between driver calls so a signal
+        handler can end the loop cleanly (the caller saves the returned
+        state).
         """
         rounds = rounds if rounds is not None else self.fed.rounds
-        state = self.init(key)
+        if state is None:
+            state = self.init(key)
         history = {"round": [], "global_accuracy": [], "local_loss": [],
                    "malicious_weight": []}
         programs_used = set()
-        done = 0
+        done = int(state.round_idx)
+        if ckpt is not None and ckpt.read_manifest() is None:
+            ckpt.write_manifest(self.manifest())
         while done < rounds:
+            if should_stop is not None and should_stop():
+                break
             if (self._scan_fn is not None
                     and rounds - done >= self.rounds_per_call):
                 state, chunk = self._scan_fn(state, data)
@@ -152,6 +225,8 @@ class FederatedTrainer:
                 programs_used.add("single")
                 step = 1
             done += step
+            if ckpt is not None:
+                ckpt.maybe_save(done, state)
             if done % eval_every == 0 or done >= rounds or step > 1:
                 ga = self.global_accuracy(state, data)
                 history["round"].append(done)

@@ -43,6 +43,13 @@ same two seams: the coalition's model attack composes into step 3
 and its report transform runs as step 5b on the replicated accuracy
 matrix — shared code on every backend, so the three exchange backends
 stay bit-identical under coalition attacks too.
+
+Client failures (``FedConfig.fault``, DESIGN.md §9) enter as step 2b: a
+:class:`~repro.strategies.base.Fault` model turns the round schedule's
+``keys.fault`` stream into a ``[N]`` survival mask that is ANDed into
+the participation mask after selection (:func:`compose_fault_mask`) —
+dropped clients inherit the non-sampled semantics wholesale, and the
+round emits a ``dropped_fraction`` metric.
 """
 from __future__ import annotations
 
@@ -76,14 +83,21 @@ class RoundKeys(NamedTuple):
     lie: jnp.ndarray        # lying testers' fake reports
     agg: jnp.ndarray        # randomised aggregation strategies
     part: jnp.ndarray       # participation (client-sampling) mask
+    fault: jnp.ndarray      # client-failure (fault-injection) mask
 
 
 def round_keys(key) -> RoundKeys:
-    """Derive the :class:`RoundKeys` bundle from a round's base key."""
+    """Derive the :class:`RoundKeys` bundle from a round's base key.
+
+    New streams extend the bundle with further ``fold_in`` constants
+    (``fault`` = 7) so the historical streams — and therefore every
+    committed trajectory — stay bit-identical.
+    """
     k_batch, k_attack, k_test, k_lie = jax.random.split(key, 4)
     return RoundKeys(batch=k_batch, attack=k_attack, test=k_test, lie=k_lie,
                      agg=jax.random.fold_in(key, 5),
-                     part=jax.random.fold_in(key, 6))
+                     part=jax.random.fold_in(key, 6),
+                     fault=jax.random.fold_in(key, 7))
 
 
 def participation_mask(key, num_users: int, participation: float
@@ -98,6 +112,22 @@ def participation_mask(key, num_users: int, participation: float
     bern = jax.random.bernoulli(key, participation, (num_users,))
     return jnp.where(jnp.any(bern), bern.astype(jnp.float32),
                      jnp.ones((num_users,), jnp.float32))
+
+
+def compose_fault_mask(part_mask: jnp.ndarray, alive: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """AND the fault survival mask into the participation mask (§2b).
+
+    A dropped client is indistinguishable from a non-sampled one — it
+    transmitted nothing — so the composed mask feeds the existing
+    non-sampled machinery unchanged. If *every* selected client dropped,
+    the faults are ignored for the round (the round must stay well
+    defined; mirrors :func:`participation_mask`'s zero-participant
+    fallback). One formula, applied once in :meth:`RoundProgram.run`,
+    so local/ring/allgather stay bit-identical under faults.
+    """
+    combined = part_mask * alive
+    return jnp.where(jnp.sum(combined) > 0, combined, part_mask)
 
 
 def renormalize_over_subset(weights: jnp.ndarray, part_mask: jnp.ndarray
@@ -156,6 +186,18 @@ def resolve_strategies(fed: FedConfig, use_trust: bool = False,
     sel = SELECTORS.build(fed.selector, fed.strategy_kwargs("selector"),
                           dict(seed=fed.seed))
     return agg, atk, sel
+
+
+def resolve_fault(fed: FedConfig):
+    """Name -> object resolution for ``fed.fault`` (DESIGN.md §9).
+
+    ``rate`` defaults to ``fed.fault_rate`` (silently dropped when the
+    fault model's constructor does not accept it — ``targeted`` and
+    ``straggler_deadline`` have their own knobs).
+    """
+    from repro.strategies import FAULTS
+    return FAULTS.build(fed.fault, fed.strategy_kwargs("fault"),
+                        dict(rate=fed.fault_rate))
 
 
 def resolve_coalition(fed: FedConfig):
@@ -220,6 +262,10 @@ class RoundProgram:
         self.malicious_idx = self.attack.malicious_indices(fed.num_users)
         self.malicious_mask = self.attack.malicious_mask(fed.num_users)
         self.use_participation = fed.participation < 1.0
+        # fault injection (DESIGN.md §9): resolved pre-trace like every
+        # strategy; the static flag keeps honest rounds branch-free.
+        self.fault = resolve_fault(fed)
+        self.use_faults = fed.fault != "none"
 
     # ---------------------------------------------------------- local phase
     def batchify(self, bx, by) -> Dict[str, jnp.ndarray]:
@@ -293,6 +339,19 @@ class RoundProgram:
         """
         fed = self.fed
         pmask = part_mask if self.use_participation else None
+
+        # 2b. fault injection (DESIGN.md §9): the survival mask from the
+        # round schedule's keys.fault stream is ANDed into the
+        # participation mask *after* selection — a dropped client is a
+        # non-sampled client from here on (zero weight, frozen score,
+        # masked tester row), so every downstream path is shared code.
+        dropped_fraction = jnp.zeros(())
+        if self.use_faults:
+            alive = self.fault.mask(keys.fault, fed.num_users, round_idx)
+            effective = compose_fault_mask(part_mask, alive)
+            dropped_fraction = ((jnp.sum(part_mask) - jnp.sum(effective))
+                                / jnp.maximum(jnp.sum(part_mask), 1.0))
+            pmask = effective
 
         # 1-2. broadcast + local training; losses come back as a
         # replicated [N] vector whatever the backend topology
@@ -398,5 +457,8 @@ class RoundProgram:
             "participation_rate": (jnp.mean(pmask)
                                    if pmask is not None
                                    else jnp.ones(())),
+            # fraction of *selected* clients lost to faults this round
+            # (0 under fault='none'; DESIGN.md §9)
+            "dropped_fraction": dropped_fraction,
         }
         return new_global, new_scores, metrics

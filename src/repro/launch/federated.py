@@ -38,6 +38,7 @@ _FED_CLI_DEFAULTS = dict(
     num_malicious=0, attack="none", attack_kwargs={}, attack_scale=1.0,
     aggregator="fedtest", selector="rotating", participation=1.0,
     coalition="none", coalition_kwargs={}, coalition_size=0,
+    fault="none", fault_kwargs={}, fault_rate=0.1,
     local_steps=6)
 
 
@@ -89,6 +90,15 @@ def main():
     ap.add_argument("--coalition-kwargs", default=None, type=json.loads,
                     help="JSON kwargs for the coalition ctor, e.g. "
                          '\'{"boost_to": 0.9}\'')
+    ap.add_argument("--fault", default=None,
+                    help="repro.strategies.FAULTS name (DESIGN.md §9): "
+                         "availability fault ANDed into the "
+                         "participation mask after tester selection")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="per-round drop probability for the fault model")
+    ap.add_argument("--fault-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the fault ctor, e.g. "
+                         '\'{"deadline": 2.0}\'')
     ap.add_argument("--assert-malicious-below", type=float, default=None,
                     help="exit non-zero unless the final round's "
                          "malicious_weight is below this bar (the CI "
@@ -149,6 +159,8 @@ def main():
                   coalition=args.coalition,
                   coalition_size=args.coalition_size,
                   coalition_kwargs=args.coalition_kwargs,
+                  fault=args.fault, fault_kwargs=args.fault_kwargs,
+                  fault_rate=args.fault_rate,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:
@@ -181,7 +193,8 @@ def main():
     run_key = jax.random.PRNGKey(args.seed + 1)
 
     history = {"round": [], "acc": [], "local_loss": [],
-               "malicious_weight": [], "participation_rate": []}
+               "malicious_weight": [], "participation_rate": [],
+               "dropped_fraction": []}
     t0 = time.time()
     for r in range(args.rounds):
         # the engine derives the tester set and the participation mask
@@ -202,10 +215,13 @@ def main():
             float(metrics["malicious_weight"]))
         history["participation_rate"].append(
             float(metrics["participation_rate"]))
+        history["dropped_fraction"].append(
+            float(metrics["dropped_fraction"]))
         print(f"round {r + 1}: global_acc={acc:.4f} "
               f"local_loss={float(metrics['local_loss']):.4f} "
               f"mal_w={float(metrics['malicious_weight']):.4f} "
               f"part={float(metrics['participation_rate']):.2f} "
+              f"drop={float(metrics['dropped_fraction']):.2f} "
               f"({args.exchange} exchange)", flush=True)
     history["wall_s"] = time.time() - t0
     history["config"] = {"clients": N, "aggregator": fed.aggregator,
@@ -215,6 +231,7 @@ def main():
                          "participation": fed.participation,
                          "coalition": fed.coalition,
                          "coalition_size": fed.coalition_size,
+                         "fault": fed.fault, "fault_rate": fed.fault_rate,
                          "scenario": args.scenario,
                          "exchange": args.exchange}
 

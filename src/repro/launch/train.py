@@ -28,6 +28,7 @@ import argparse
 import dataclasses
 import json
 import os
+import signal
 import time
 
 import jax
@@ -37,7 +38,8 @@ import numpy as np
 from repro.config import FedConfig, TrainConfig, reduce_for_smoke
 from repro.configs import get_config, get_scenario, list_scenarios
 from repro.core import FederatedTrainer
-from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, SELECTORS
+from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, FAULTS, \
+    SELECTORS
 from repro.checkpoint import CheckpointManager
 from repro.data import (
     CIFAR_LIKE, MNIST_LIKE, make_federated_image_dataset, make_token_stream)
@@ -90,7 +92,8 @@ _FED_CLI_DEFAULTS = dict(
     aggregator="fedtest", aggregator_kwargs={},
     attack="random_weights", attack_kwargs={}, attack_scale=1.0,
     selector="rotating", selector_kwargs={},
-    coalition="none", coalition_kwargs={}, coalition_size=0, seed=0)
+    coalition="none", coalition_kwargs={}, coalition_size=0,
+    fault="none", fault_kwargs={}, fault_rate=0.1, seed=0)
 
 
 def main():
@@ -145,8 +148,31 @@ def main():
     ap.add_argument("--score-decay", type=float, default=None)
     ap.add_argument("--samples", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--fault", default=None, choices=list(FAULTS.names()),
+                    help="availability fault injected after tester "
+                         "selection (repro.strategies.FAULTS; "
+                         "DESIGN.md §9)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="per-round drop probability offered to the "
+                         "fault model (dropout)")
+    ap.add_argument("--fault-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the fault ctor, e.g. "
+                         '\'{"placement": "first", "size": 2}\'')
+    ap.add_argument("--assert-malicious-below", type=float, default=None,
+                    help="exit non-zero unless the final round's "
+                         "malicious_weight is below this bar (the CI "
+                         "dropout-suppression gate)")
     ap.add_argument("--out", default="experiments/train")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (final state is always "
+                         "saved there; periodic saves via --ckpt-every)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the full round state every N completed "
+                         "rounds (0 = final save only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint from --ckpt-dir "
+                         "and continue to --rounds; refuses a manifest "
+                         "mismatch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -170,6 +196,8 @@ def main():
                   coalition=args.coalition,
                   coalition_size=args.coalition_size,
                   coalition_kwargs=args.coalition_kwargs,
+                  fault=args.fault, fault_kwargs=args.fault_kwargs,
+                  fault_rate=args.fault_rate,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:
@@ -192,30 +220,75 @@ def main():
 
     trainer = FederatedTrainer(model, fed, tc,
                                rounds_per_call=args.rounds_per_call)
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir,
+                                save_every=args.ckpt_every)
+    init_state = None
+    if args.resume:
+        if mgr is None:
+            raise SystemExit("--resume requires --ckpt-dir")
+        init_state, at = trainer.restore_checkpoint(mgr)
+        print(f"resuming from round {at} in {args.ckpt_dir}")
+
+    # SIGTERM drains the loop at the next driver-call boundary; the
+    # state returned by run() is then saved below like any other exit,
+    # so an orchestrator's soft kill never loses completed rounds.
+    stop = {"flag": False}
+
+    def _on_sigterm(signum, frame):
+        stop["flag"] = True
+        print("SIGTERM: finishing current chunk, then checkpointing")
+
+    prev_handler = signal.signal(signal.SIGTERM, _on_sigterm)
+
     t0 = time.time()
     state, history = trainer.run(jax.random.PRNGKey(fed.seed), data,
-                                 verbose=True)
+                                 verbose=True, state=init_state,
+                                 ckpt=mgr,
+                                 should_stop=lambda: stop["flag"])
+    signal.signal(signal.SIGTERM, prev_handler)
+
+    completed = int(state.round_idx)   # NOT fed.rounds: the run may have
+    if mgr is not None:                # stopped early (SIGTERM/resume)
+        trainer.save_checkpoint(mgr, state, step=completed)
+        print(f"checkpoint saved at round {completed} -> {args.ckpt_dir}")
+    if stop["flag"]:
+        raise SystemExit(f"interrupted at round {completed} (state saved)")
+
     history["wall_s"] = time.time() - t0
     history["config"] = {"arch": cfg.name, "dataset": args.dataset,
                          "aggregator": fed.aggregator,
                          "attack": fed.attack, "selector": fed.selector,
                          "coalition": fed.coalition,
                          "coalition_size": fed.coalition_size,
+                         "fault": fed.fault, "fault_rate": fed.fault_rate,
                          "scenario": args.scenario,
                          "users": fed.num_users, "testers": fed.num_testers,
-                         "malicious": fed.num_malicious}
+                         "malicious": fed.num_malicious,
+                         "resumed": bool(args.resume)}
 
     os.makedirs(args.out, exist_ok=True)
     tag = (f"{cfg.name}__{args.dataset}__{fed.aggregator}"
            f"__{fed.attack}__m{fed.num_malicious}")
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(history, f, indent=1)
-    print(f"final accuracy: {history['global_accuracy'][-1]:.4f} "
-          f"({history['wall_s']:.0f}s) -> {args.out}/{tag}.json")
+    if history["global_accuracy"]:
+        print(f"final accuracy: {history['global_accuracy'][-1]:.4f} "
+              f"({history['wall_s']:.0f}s) -> {args.out}/{tag}.json")
+    else:   # resumed past the target: nothing ran, nothing to report
+        print(f"no rounds to run (already at {completed}/{fed.rounds})")
 
-    if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir)
-        mgr.save(fed.rounds, state.global_params)
+    if args.assert_malicious_below is not None:
+        final = history["malicious_weight"][-1]
+        if not final < args.assert_malicious_below:
+            raise SystemExit(
+                f"malicious_weight={final:.4f} did not drop below "
+                f"{args.assert_malicious_below} after {completed} "
+                "rounds")
+        print(f"assert ok: malicious_weight={final:.4f} < "
+              f"{args.assert_malicious_below}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,12 @@ and resolved to plain Python objects before jit tracing:
   (``none``, ``mutual_boost``, ``sybil_split``, ``full_collusion``):
   a :class:`Coalition` binds a member set to a coordinated model
   attack and/or a report-matrix transform (DESIGN.md §7).
+* :data:`FAULTS` — per-round client-failure models (``none``,
+  ``dropout``, ``straggler_deadline``, ``targeted``): a :class:`Fault`
+  produces the round's ``[N]`` survival mask, ANDed into the
+  participation mask after selection so dropped clients inherit the
+  non-sampled semantics — zero weight, frozen score, masked tester row
+  (DESIGN.md §9).
 
 Adding a strategy is one file anywhere that runs::
 
@@ -34,18 +40,19 @@ Adding a strategy is one file anywhere that runs::
 See README.md §"Writing a strategy".
 """
 from repro.strategies.base import (
-    AGGREGATORS, ATTACKS, COALITIONS, SELECTORS,
-    Aggregator, Attack, AttackContext, Registry, RoundContext, Selector,
-    register, resolve_placement, uses_combine)
+    AGGREGATORS, ATTACKS, COALITIONS, FAULTS, SELECTORS,
+    Aggregator, Attack, AttackContext, Fault, Registry, RoundContext,
+    Selector, register, resolve_placement, uses_combine)
 # importing the submodules populates the registries
 from repro.strategies import aggregators as _aggregators  # noqa: F401
 from repro.strategies import attacks as _attacks          # noqa: F401
+from repro.strategies import faults as _faults            # noqa: F401
 from repro.strategies import selectors as _selectors      # noqa: F401
 from repro.strategies.coalition import Coalition, CoalitionAttack
 
 __all__ = [
-    "AGGREGATORS", "ATTACKS", "COALITIONS", "SELECTORS",
+    "AGGREGATORS", "ATTACKS", "COALITIONS", "FAULTS", "SELECTORS",
     "Aggregator", "Attack", "AttackContext", "Coalition",
-    "CoalitionAttack", "Selector", "Registry", "RoundContext",
+    "CoalitionAttack", "Fault", "Selector", "Registry", "RoundContext",
     "register", "resolve_placement", "uses_combine",
 ]

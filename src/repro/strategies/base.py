@@ -362,6 +362,35 @@ class Attack:
                 f"placement={self.placement}>")
 
 
+class Fault:
+    """Per-round client-failure model (DESIGN.md §9).
+
+    ``mask(key, num_users, round_idx)`` returns the ``[N]`` 0/1 float
+    *survival* mask — 1 means the client completes the round, 0 means it
+    crashed, timed out, or was partitioned away mid-round. The engine
+    ANDs this mask into the participation mask *after* selection
+    (:meth:`RoundProgram.run` step 2b), so a dropped client inherits the
+    exact non-sampled semantics the score-freezing machinery already
+    defines: zero aggregation weight, a frozen score, and a masked
+    report row if it was this round's tester.
+
+    ``key`` is the round schedule's ``keys.fault`` stream
+    (``RoundKeys``), so fault patterns replay bit-identically on every
+    exchange backend — never draw from a fresh ``PRNGKey`` here (FL001).
+    Deterministic models (``targeted``) may ignore the key but must
+    remain traced functions of ``round_idx`` (no Python branching on
+    traced values).
+    """
+
+    name = "base"
+
+    def mask(self, key, num_users: int, round_idx) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<fault {self.name}>"
+
+
 class Selector:
     """Picks the K tester ids for a round.
 
@@ -387,3 +416,4 @@ AGGREGATORS = Registry("aggregator")
 ATTACKS = Registry("attack")
 SELECTORS = Registry("selector")
 COALITIONS = Registry("coalition")
+FAULTS = Registry("fault")

@@ -1,0 +1,128 @@
+"""Registered client-failure models (DESIGN.md §9).
+
+Production federations lose clients mid-round — crashes, network
+partitions, stragglers past the server's deadline. The FL evaluation
+literature treats dropout / partial participation as a first-class
+evaluation axis, and FedTest specifically must keep its *defence state*
+(scores, trust) coherent under failures: a client that dropped this
+round transmitted nothing, so the testers measured the stale global copy
+in its slot — no evidence about the client itself.
+
+Each fault model produces a per-round ``[N]`` 0/1 *survival* mask that
+the engine ANDs into the participation mask after selection
+(:meth:`~repro.core.engine.program.RoundProgram.run`); the existing
+non-sampled semantics then do all the work — zero aggregation weight,
+frozen score, masked tester row — identically on every exchange backend
+(the parity matrix in ``tests/test_pod_parity.py`` pins a ``dropout``
+case bit-identical across local/ring/allgather).
+
+* ``none``                — no failures (what ``FedConfig.fault``
+  defaults to).
+* ``dropout``             — i.i.d. per-round Bernoulli failures: each
+  client independently fails with probability ``rate``.
+* ``straggler_deadline``  — heterogeneous-speed model: client ``c``'s
+  round latency is ``mean_c * jitter`` where ``mean_c`` ramps linearly
+  from 1 to ``1 + spread`` across the client index (a deterministic
+  speed rank) and ``jitter`` is per-round Exponential(1) noise from the
+  round schedule; clients whose latency exceeds ``deadline`` are
+  treated as dropped (the server aggregates without waiting).
+* ``targeted``            — placement-aware adversarial drops (a DoS /
+  partition on specific clients): the placed index set —
+  ``placement='last'|'first'|'spread'`` or explicit ``indices=``, the
+  same vocabulary attacks and coalitions use — is dropped every round
+  from ``start_round`` on. Pointing it at the scenario's honest
+  top-scorers models an attacker silencing the testers that would
+  convict it.
+
+All masks derive from the round schedule's ``keys.fault`` stream
+(``RoundKeys``; FL001 pins this in ``tests/fedlint_fixtures/``), so a
+resumed run replays the identical failure pattern and the three exchange
+backends agree bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.strategies.base import (
+    FAULTS, Fault, normalize_placement, placement_mask, register,
+    resolve_placement)
+
+
+@register(FAULTS, "none")
+class NoFault(Fault):
+    """Every client survives every round."""
+
+    def mask(self, key, num_users, round_idx):
+        return jnp.ones((num_users,), jnp.float32)
+
+
+@register(FAULTS, "dropout")
+class Dropout(Fault):
+    """I.i.d. per-round Bernoulli client failures at ``rate``."""
+
+    def __init__(self, *, rate: float = 0.1):
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"dropout rate in [0, 1), got {rate}")
+        self.rate = float(rate)
+
+    def mask(self, key, num_users, round_idx):
+        alive = jax.random.bernoulli(key, 1.0 - self.rate, (num_users,))
+        return alive.astype(jnp.float32)
+
+
+@register(FAULTS, "straggler_deadline")
+class StragglerDeadline(Fault):
+    """Clients slower than ``deadline`` this round are dropped.
+
+    Latency model: ``mean_c * jitter_c`` with ``mean_c = 1 + spread *
+    c / (N - 1)`` (client index as deterministic speed rank — client 0
+    is the fastest, client N-1 the slowest) and ``jitter_c`` per-round
+    i.i.d. Exponential(1). With the defaults (``deadline=2.5``,
+    ``spread=1.0``) the fastest client misses ~8% of rounds and the
+    slowest ~29% — persistent, asymmetric dropout, which is what
+    distinguishes a straggler population from i.i.d. ``dropout``.
+    """
+
+    def __init__(self, *, deadline: float = 2.5, spread: float = 1.0):
+        if deadline <= 0.0:
+            raise ValueError(f"deadline must be > 0, got {deadline}")
+        if spread < 0.0:
+            raise ValueError(f"spread must be >= 0, got {spread}")
+        self.deadline = float(deadline)
+        self.spread = float(spread)
+
+    def mask(self, key, num_users, round_idx):
+        rank = jnp.arange(num_users, dtype=jnp.float32)
+        mean = 1.0 + self.spread * rank / jnp.maximum(num_users - 1, 1)
+        jitter = jax.random.exponential(key, (num_users,))
+        latency = mean * jitter
+        return (latency <= self.deadline).astype(jnp.float32)
+
+
+@register(FAULTS, "targeted")
+class Targeted(Fault):
+    """Placement-aware drops: the placed set fails every round from
+    ``start_round`` on (an adversarial partition / DoS)."""
+
+    def __init__(self, *, size: int = 0, placement: str = "last",
+                 indices: Optional[Tuple[int, ...]] = None,
+                 start_round: int = 0):
+        self.size, self.placement, self._indices = normalize_placement(
+            size, placement, indices)
+        if start_round < 0:
+            raise ValueError(
+                f"start_round must be >= 0, got {start_round}")
+        self.start_round = int(start_round)
+
+    def target_indices(self, num_users: int) -> Tuple[int, ...]:
+        return resolve_placement(num_users, self.size, self.placement,
+                                 self._indices)
+
+    def mask(self, key, num_users, round_idx):
+        dropped = placement_mask(num_users,
+                                 self.target_indices(num_users))
+        active = (round_idx >= self.start_round).astype(jnp.float32)
+        return 1.0 - dropped * active

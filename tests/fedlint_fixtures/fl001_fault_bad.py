@@ -1,0 +1,35 @@
+"""FL001 bad fixture, fault edition: an availability fault whose
+survival mask is NOT derived from the round schedule.
+
+The contract (DESIGN.md §9): ``Fault.mask`` consumes ``keys.fault`` —
+the ``fold_in(key, 7)`` member of the per-round bundle — so the drop
+pattern replays identically across backends and across save/restore.
+A fault minting its own key (or reusing one) silently breaks both
+parity and bit-identical resume.
+"""
+import jax
+import jax.numpy as jnp
+
+
+class Dropout:
+    """Drop pattern unkeyed by the run: fresh literal every round."""
+
+    def __init__(self, rate: float = 0.1):
+        self.rate = rate
+
+    def mask(self, key, num_users, round_idx):
+        fresh = jax.random.PRNGKey(7)                  # literal, not keys.fault
+        keep = jax.random.bernoulli(fresh, 1.0 - self.rate, (num_users,))
+        return keep.astype(jnp.float32)
+
+
+class StragglerDeadline:
+    """Reuses one key for two independent draws."""
+
+    def __init__(self, deadline: float = 2.5):
+        self.deadline = deadline
+
+    def mask(self, key, num_users, round_idx):
+        jitter = jax.random.exponential(key, (num_users,))   # consume 1
+        tie = jax.random.uniform(key, (num_users,))          # consume 2 -> reuse
+        return ((jitter + tie) <= self.deadline).astype(jnp.float32)

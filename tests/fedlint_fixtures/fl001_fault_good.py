@@ -1,0 +1,26 @@
+"""FL001 good fixture, fault edition: survival masks derived from the
+round schedule — ``mask`` consumes only the ``keys.fault`` stream it is
+handed (split before any second draw), so drops replay identically
+across backends and across save/restore (DESIGN.md §9)."""
+import jax
+import jax.numpy as jnp
+
+
+class Dropout:
+    def __init__(self, rate: float = 0.1):
+        self.rate = rate
+
+    def mask(self, key, num_users, round_idx):
+        keep = jax.random.bernoulli(key, 1.0 - self.rate, (num_users,))
+        return keep.astype(jnp.float32)
+
+
+class StragglerDeadline:
+    def __init__(self, deadline: float = 2.5):
+        self.deadline = deadline
+
+    def mask(self, key, num_users, round_idx):
+        k_jitter, k_tie = jax.random.split(key)
+        jitter = jax.random.exponential(k_jitter, (num_users,))
+        tie = jax.random.uniform(k_tie, (num_users,))
+        return ((jitter + tie) <= self.deadline).astype(jnp.float32)

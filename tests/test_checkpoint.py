@@ -1,9 +1,16 @@
-"""Checkpoint round-trips."""
+"""Checkpoint round-trips, manager durability and manifest guards."""
+import glob
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint import (CheckpointManager, check_manifest,
+                              load_pytree, manifest_mismatches,
+                              run_manifest, save_pytree)
+from repro.core.engine import RoundState
+from repro.core.scoring import ScoreState, init_scores
 
 
 def test_pytree_roundtrip(tmp_path):
@@ -21,6 +28,35 @@ def test_pytree_roundtrip(tmp_path):
                                    np.asarray(b, np.float32))
 
 
+def test_round_state_roundtrip(tmp_path):
+    """The full RoundState — nested ScoreState with trust, int32
+    scalars, the uint32 PRNG key — must survive save/restore exactly
+    (the tentpole resume contract rests on this)."""
+    n = 5
+    scores = ScoreState(
+        scores=jnp.linspace(0.1, 0.9, n),
+        rounds_seen=jnp.asarray(11, jnp.int32),
+        tester_trust=jnp.linspace(1.0, 0.2, n))
+    state = RoundState(
+        global_params={"dense": {"w": jnp.ones((3, 2), jnp.bfloat16),
+                                 "b": jnp.zeros((2,))}},
+        scores=scores,
+        round_idx=jnp.asarray(7, jnp.int32),
+        key=jax.random.PRNGKey(3))
+    path = str(tmp_path / "state.npz")
+    save_pytree(state, path)
+    out = load_pytree(state, path)
+    assert isinstance(out, RoundState) and isinstance(out.scores,
+                                                     ScoreState)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert out.key.dtype == jnp.uint32
+    assert int(out.round_idx) == 7
+
+
 def test_manager_latest_and_gc(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     tree = {"w": jnp.zeros(3)}
@@ -31,5 +67,92 @@ def test_manager_latest_and_gc(tmp_path):
     np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
     # gc kept only the last 2
     assert mgr.latest_step() == 4
-    import glob
     assert len(glob.glob(str(tmp_path / "ckpt_*.npz"))) == 2
+
+
+def test_manager_ignores_foreign_filenames(tmp_path):
+    """Regression: a stray ``ckpt_*.npz`` whose name doesn't match the
+    step pattern used to crash ``_gc``/``latest_step`` with an
+    AttributeError on ``re.search(...) == None``."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    (tmp_path / "ckpt_tmp.npz").write_bytes(b"not a checkpoint")
+    tree = {"w": jnp.zeros(3)}
+    for step in (1, 2, 3):
+        mgr.save(step, tree)     # save() runs _gc(); must not raise
+    assert mgr.latest_step() == 3
+    assert mgr.steps() == [2, 3]
+    # the foreign file is left alone, not gc'd and not restorable
+    assert (tmp_path / "ckpt_tmp.npz").exists()
+
+
+def test_save_is_atomic_no_partial_files(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.arange(4.0)})
+    leftovers = [f for f in glob.glob(str(tmp_path / "*"))
+                 if "ckpt_00000001.npz" not in f]
+    assert leftovers == []      # tmp file was replaced, not left behind
+
+
+def test_restore_skips_corrupt_checkpoint(tmp_path):
+    """A torn/corrupt newest checkpoint costs one cadence interval, not
+    the run: restore warns and falls back to the previous step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.zeros(3)}
+    mgr.save(1, jax.tree_util.tree_map(lambda x: x + 1, tree))
+    mgr.save(2, jax.tree_util.tree_map(lambda x: x + 2, tree))
+    (tmp_path / "ckpt_00000003.npz").write_bytes(b"torn write garbage")
+    with pytest.warns(RuntimeWarning, match="skipping corrupt"):
+        restored, step = mgr.restore_with_step(tree)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(restored["w"]), 2.0)
+    # all checkpoints corrupt -> a clear error, not a crash
+    (tmp_path / "ckpt_00000001.npz").write_bytes(b"x")
+    (tmp_path / "ckpt_00000002.npz").write_bytes(b"x")
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="no restorable"):
+            mgr.restore(tree)
+
+
+def test_restore_rejects_wrong_leaf_count(tmp_path):
+    """A checkpoint from a different model refuses to load into the
+    template instead of silently mis-assigning leaves."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros(3), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="leaves"):
+        load_pytree({"w": jnp.zeros(3)}, str(tmp_path / "ckpt_00000001.npz"))
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree({"w": jnp.zeros(4), "b": jnp.zeros(2)},
+                    str(tmp_path / "ckpt_00000001.npz"))
+
+
+def test_save_every_policy(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=3)
+    tree = {"w": jnp.zeros(2)}
+    saved = [s for s in range(10) if mgr.maybe_save(s, tree)]
+    assert saved == [3, 6, 9]
+    disabled = CheckpointManager(str(tmp_path / "off"), save_every=0)
+    assert disabled.maybe_save(3, tree) is None
+
+
+def test_manifest_roundtrip_and_refuse(tmp_path):
+    from repro.config import FedConfig, TrainConfig
+    from repro.configs import get_config
+    cfg = get_config("fedtest-cnn-mnist")
+    fed = FedConfig(num_users=4, num_testers=2, seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=8, grad_clip=0.0, remat=False)
+    m = run_manifest(cfg, fed, tc, use_trust=True)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros(2)}, manifest=m)
+    assert manifest_mismatches(mgr.read_manifest(), m) == []
+    check_manifest(mgr.read_manifest(), m)          # same run: fine
+    # rounds is a run-length target, not identity: extending is allowed
+    import dataclasses
+    longer = run_manifest(cfg, dataclasses.replace(fed, rounds=999), tc,
+                          use_trust=True)
+    check_manifest(mgr.read_manifest(), longer)
+    # but a different strategy config must refuse
+    other = run_manifest(cfg, dataclasses.replace(fed, attack="sign_flip"),
+                         tc, use_trust=True)
+    with pytest.raises(ValueError, match="fed.attack"):
+        check_manifest(mgr.read_manifest(), other)

@@ -67,6 +67,19 @@ def test_fl001_catches_the_coverage_selector_bug():
     assert not good
 
 
+def test_fl001_pins_fault_mask_key_derivation():
+    """DESIGN.md §9: an availability fault must derive its survival
+    mask from the handed-in ``keys.fault`` stream (the round schedule),
+    never from a fresh PRNGKey literal or a reused key — either breaks
+    backend parity and bit-identical resume."""
+    diags = lint_fixture("fl001_fault_bad.py", "FL001")
+    msgs = "\n".join(d.message for d in diags)
+    assert "PRNGKey(7)" in msgs, [d.format() for d in diags]
+    assert len(diags) >= 2            # the literal AND the key reuse
+    # the schedule-keyed twins of both faults are clean
+    assert lint_fixture("fl001_fault_good.py", "FL001") == []
+
+
 def test_fl004_severity_split():
     """One-sided apply/apply_local override is a warning (does not
     gate); missing protocol surface is an error."""

@@ -7,7 +7,9 @@ schedule across {no_attack, sign_flip, adaptive_scale} x
 {participation 1.0, 0.75} — plus the coalition scenarios
 {mutual_boost, sybil_split} x {participation 1.0, 0.75}
 (DESIGN.md §7: the report transform runs on the replicated matrix, the
-sybil split through the composed attack seam) — must produce
+sybil split through the composed attack seam) and the availability
+faults {dropout, straggler_deadline} (DESIGN.md §9: the survival mask
+is derived from ``keys.fault`` inside the program) — must produce
 **bit-identical** weights, scores and malicious-weight trajectories on
 all three — the backends exchange models differently but score the
 identical replicated accuracy matrix through identical code.
@@ -28,24 +30,30 @@ import numpy as np
 import pytest
 
 ROUNDS = 4
-# (attack, participation, coalition, selector): coalition scenarios run
-# the mutual_boost report transform / sybil_split composed model attack
-# with 2 of the 4 clients coordinated (attack "none" isolates the
-# coalition machinery; the members still count as malicious); the
-# score_weighted / coverage cases pin the scores= threading into
-# Selector.select across backends (DESIGN.md §4)
-CASES = [("none", 1.0, "none", "rotating"),
-         ("none", 0.75, "none", "rotating"),
-         ("sign_flip", 1.0, "none", "rotating"),
-         ("sign_flip", 0.75, "none", "rotating"),
-         ("adaptive_scale", 1.0, "none", "rotating"),
-         ("adaptive_scale", 0.75, "none", "rotating"),
-         ("none", 1.0, "mutual_boost", "rotating"),
-         ("none", 0.75, "mutual_boost", "rotating"),
-         ("none", 1.0, "sybil_split", "rotating"),
-         ("none", 0.75, "sybil_split", "rotating"),
-         ("none", 1.0, "mutual_boost", "score_weighted"),
-         ("none", 0.75, "none", "coverage")]
+# (attack, participation, coalition, selector, fault): coalition
+# scenarios run the mutual_boost report transform / sybil_split composed
+# model attack with 2 of the 4 clients coordinated (attack "none"
+# isolates the coalition machinery; the members still count as
+# malicious); the score_weighted / coverage cases pin the scores=
+# threading into Selector.select across backends (DESIGN.md §4); the
+# fault rows pin the availability mask (DESIGN.md §9) — it is composed
+# inside the shared program from keys.fault, so dropped clients must
+# zero out identically on every exchange topology
+CASES = [("none", 1.0, "none", "rotating", "none"),
+         ("none", 0.75, "none", "rotating", "none"),
+         ("sign_flip", 1.0, "none", "rotating", "none"),
+         ("sign_flip", 0.75, "none", "rotating", "none"),
+         ("adaptive_scale", 1.0, "none", "rotating", "none"),
+         ("adaptive_scale", 0.75, "none", "rotating", "none"),
+         ("none", 1.0, "mutual_boost", "rotating", "none"),
+         ("none", 0.75, "mutual_boost", "rotating", "none"),
+         ("none", 1.0, "sybil_split", "rotating", "none"),
+         ("none", 0.75, "sybil_split", "rotating", "none"),
+         ("none", 1.0, "mutual_boost", "score_weighted", "none"),
+         ("none", 0.75, "none", "coverage", "none"),
+         ("none", 1.0, "none", "rotating", "dropout"),
+         ("sign_flip", 0.75, "none", "rotating", "dropout"),
+         ("none", 1.0, "none", "rotating", "straggler_deadline")]
 
 SCRIPT = r"""
 import os
@@ -60,8 +68,8 @@ from repro.config import FedConfig, TrainConfig
 from repro.configs import get_config
 from repro.core import FederatedTrainer
 from repro.core.engine import (
-    make_allgather_round, make_distributed_round, participation_mask,
-    round_keys)
+    compose_fault_mask, make_allgather_round, make_distributed_round,
+    participation_mask, resolve_fault, round_keys)
 from repro.core.scoring import init_scores
 from repro.data import MNIST_LIKE, make_federated_image_dataset, \
     sample_client_batches
@@ -83,7 +91,7 @@ mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
 tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
 
 results = {}
-for attack, participation, coalition, selector in CASES:
+for attack, participation, coalition, selector, fault in CASES:
     # a K < N committee makes the selector cases non-trivial (which
     # clients tester actually varies with the scores / schedule)
     fed = FedConfig(num_users=N,
@@ -92,16 +100,19 @@ for attack, participation, coalition, selector in CASES:
                     attack=attack, attack_scale=4.0,
                     coalition=coalition,
                     coalition_size=0 if coalition == "none" else 2,
-                    selector=selector,
+                    selector=selector, fault=fault, fault_rate=0.25,
                     participation=participation, local_steps=6, seed=0)
 
     # ---- local (vmap) backend via the single-host driver --------------
     trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
     state = trainer.init(jax.random.PRNGKey(0))
     run_key = state.key
-    traj = {"local": {"w": [], "s": [], "mal_w": [], "rate": []},
-            "ring": {"w": [], "s": [], "mal_w": [], "rate": []},
-            "allgather": {"w": [], "s": [], "mal_w": [], "rate": []},
+    traj = {"local": {"w": [], "s": [], "mal_w": [], "rate": [],
+                      "drop": []},
+            "ring": {"w": [], "s": [], "mal_w": [], "rate": [],
+                     "drop": []},
+            "allgather": {"w": [], "s": [], "mal_w": [], "rate": [],
+                          "drop": []},
             "pmask": []}
     for r in range(ROUNDS):
         state, m = trainer.run_round(state, data)
@@ -109,10 +120,15 @@ for attack, participation, coalition, selector in CASES:
         traj["local"]["s"].append(np.asarray(m["scores"]).tolist())
         traj["local"]["mal_w"].append(float(m["malicious_weight"]))
         traj["local"]["rate"].append(float(m["participation_rate"]))
+        traj["local"]["drop"].append(float(m["dropped_fraction"]))
         # replay the engine's own mask derivation to pin zero patterns
         keys = round_keys(jax.random.fold_in(run_key, r))
         pmask = (participation_mask(keys.part, N, participation)
                  if participation < 1.0 else jnp.ones((N,)))
+        if fault != "none":
+            alive = resolve_fault(fed).mask(keys.fault, N,
+                                            jnp.asarray(r, jnp.int32))
+            pmask = compose_fault_mask(pmask, alive)
         traj["pmask"].append(np.asarray(pmask).tolist())
     assert trainer.num_traces == 1, trainer.num_traces
 
@@ -136,7 +152,10 @@ for attack, participation, coalition, selector in CASES:
             traj[exchange]["mal_w"].append(float(m["malicious_weight"]))
             traj[exchange]["rate"].append(
                 float(m["participation_rate"]))
-    results[f"{attack}|{participation}|{coalition}|{selector}"] = traj
+            traj[exchange]["drop"].append(
+                float(m["dropped_fraction"]))
+    results["|".join(map(str, (attack, participation, coalition,
+                               selector, fault)))] = traj
 
 print(json.dumps(results))
 """ % {"rounds": ROUNDS, "cases": CASES}
@@ -151,12 +170,14 @@ def test_three_backend_equivalence_matrix():
     assert proc.returncode == 0, proc.stderr[-3000:]
     results = json.loads(proc.stdout.strip().splitlines()[-1])
 
-    for attack, participation, coalition, selector in CASES:
-        traj = results[f"{attack}|{participation}|{coalition}|{selector}"]
+    for attack, participation, coalition, selector, fault in CASES:
+        traj = results["|".join(map(str, (attack, participation,
+                                          coalition, selector, fault)))]
         ref = traj["local"]
         for backend in ("ring", "allgather"):
             other = traj[backend]
-            tag = (attack, participation, coalition, selector, backend)
+            tag = (attack, participation, coalition, selector, fault,
+                   backend)
             for r in range(ROUNDS):
                 # bit-identical round dynamics: the three backends run
                 # the same program on the same replicated arrays
@@ -168,27 +189,35 @@ def test_three_backend_equivalence_matrix():
                     err_msg=f"scores diverged {tag} round {r}")
                 assert ref["mal_w"][r] == other["mal_w"][r], (tag, r)
                 assert ref["rate"][r] == other["rate"][r], (tag, r)
+                assert ref["drop"][r] == other["drop"][r], (tag, r)
 
         for r in range(ROUNDS):
             w = np.asarray(ref["w"][r])
             pmask = np.asarray(traj["pmask"][r])
-            # sampled-subset renormalisation: non-participants get
-            # *exactly* zero weight, the rest renormalise to a simplex
+            # sampled-subset renormalisation: non-participants (sampled
+            # out OR dropped by the fault) get *exactly* zero weight,
+            # the rest renormalise to a simplex
             np.testing.assert_array_equal(w[pmask == 0.0], 0.0)
             assert abs(w.sum() - 1.0) < 1e-4, (attack, participation, r)
-            if participation < 1.0:
+            if participation < 1.0 or fault != "none":
                 assert ref["rate"][r] == pytest.approx(pmask.mean())
 
     # the adversarial cases actually engage the attacker: its weight
     # trajectory must differ from the honest run's last slot
-    honest = results["none|1.0|none|rotating"]["local"]["w"]
-    flipped = results["sign_flip|1.0|none|rotating"]["local"]["w"]
+    honest = results["none|1.0|none|rotating|none"]["local"]["w"]
+    flipped = results["sign_flip|1.0|none|rotating|none"]["local"]["w"]
     assert honest != flipped
     # ...and the coalition cases actually engage the coalition: both
     # the report transform (mutual_boost) and the composed model attack
     # (sybil_split) must move the dynamics off the honest trajectory,
     # and the members (clients 2, 3) must register as malicious weight
     for coalition in ("mutual_boost", "sybil_split"):
-        coal = results[f"none|1.0|{coalition}|rotating"]["local"]
+        coal = results[f"none|1.0|{coalition}|rotating|none"]["local"]
         assert coal["w"] != honest, coalition
         assert any(m > 0.0 for m in coal["mal_w"]), coalition
+    # ...and the fault rows actually drop someone at rate 0.25 over
+    # 4 clients x 4 rounds (the composed mask is also pinned above via
+    # the zero-weight pattern replay)
+    for fault in ("dropout", "straggler_deadline"):
+        faulty = results[f"none|1.0|none|rotating|{fault}"]["local"]
+        assert any(d > 0.0 for d in faulty["drop"]), fault

@@ -1,0 +1,301 @@
+"""Durable-trainer service contract (DESIGN.md §9).
+
+The tentpole guarantee: training N rounds straight and training k
+rounds + save + restore + (N-k) rounds are THE SAME RUN — bitwise-equal
+weights, scores, tester trust and malicious-weight trajectory. This
+holds because the round body re-derives every key from the carried
+``state.key`` and ``round_idx`` (``round_keys(fold_in(key, round))``),
+so the only state that matters is exactly what the checkpoint stores.
+
+The same must hold with availability faults active (the survival mask
+comes from ``keys.fault``, part of the same schedule) and on the
+ring/allgather exchange backends (subprocess, host-platform devices —
+mirroring ``test_pod_parity.py``).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.launch.serve import load_serving_params
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                                  cnn_hidden=16)
+    model = build_model(cfg)
+    data = make_federated_image_dataset(MNIST_LIKE, 6, num_samples=900,
+                                        global_test=200, seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=8, grad_clip=0.0, remat=False)
+    fed = FedConfig(num_users=6, num_testers=3, num_malicious=2,
+                    attack="sign_flip", attack_scale=4.0, rounds=12,
+                    local_steps=4, seed=0)
+    return cfg, model, data, tc, fed
+
+
+def _trainer(model, fed, tc, **kw):
+    return FederatedTrainer(model, fed, tc, eval_batch=64,
+                            use_trust=True, **kw)
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ----------------------------------------------------- resume identity
+def test_resume_is_bit_identical(setup, tmp_path):
+    """12 rounds straight == 6 + save + restore-in-a-fresh-trainer + 6:
+    weights, scores, trust, rounds_seen, PRNG key, malicious_weight."""
+    cfg, model, data, tc, fed = setup
+    sA, hA = _trainer(model, fed, tc).run(jax.random.PRNGKey(0), data,
+                                          rounds=12, eval_every=1)
+
+    mgr = CheckpointManager(str(tmp_path))
+    first = _trainer(model, fed, tc)
+    s6, _ = first.run(jax.random.PRNGKey(0), data, rounds=6, eval_every=1)
+    first.save_checkpoint(mgr, s6)
+
+    fresh = _trainer(model, fed, tc)
+    restored, step = fresh.restore_checkpoint(mgr)
+    assert step == 6 and int(restored.round_idx) == 6
+    sB, hB = fresh.run(None, data, rounds=12, eval_every=1,
+                       state=restored)
+
+    _assert_states_equal(sA, sB)
+    assert int(sB.round_idx) == 12
+    # the per-round trajectory matches too, not just the endpoint
+    assert hA["malicious_weight"][6:] == hB["malicious_weight"]
+    assert hA["global_accuracy"][6:] == hB["global_accuracy"]
+
+
+def test_resume_bit_identical_under_faults(setup, tmp_path):
+    """Faults draw from keys.fault — part of the same per-round key
+    schedule — so a resumed run replays the identical drop pattern."""
+    cfg, model, data, tc, fed = setup
+    import dataclasses
+    fed = dataclasses.replace(fed, fault="dropout", fault_rate=0.3)
+    sA, _ = _trainer(model, fed, tc).run(jax.random.PRNGKey(0), data,
+                                         rounds=10, eval_every=10)
+    mgr = CheckpointManager(str(tmp_path))
+    first = _trainer(model, fed, tc)
+    s4, _ = first.run(jax.random.PRNGKey(0), data, rounds=4, eval_every=4)
+    first.save_checkpoint(mgr, s4)
+    fresh = _trainer(model, fed, tc)
+    restored, _ = fresh.restore_checkpoint(mgr)
+    sB, _ = fresh.run(None, data, rounds=10, eval_every=10,
+                      state=restored)
+    _assert_states_equal(sA, sB)
+
+
+def test_resume_through_scanned_driver(setup, tmp_path):
+    """The scanned multi-round driver resumes bit-identically with the
+    single-round driver's trajectory (same body, same keys)."""
+    cfg, model, data, tc, fed = setup
+    sA, _ = _trainer(model, fed, tc).run(jax.random.PRNGKey(0), data,
+                                         rounds=12, eval_every=12)
+    mgr = CheckpointManager(str(tmp_path))
+    first = _trainer(model, fed, tc, rounds_per_call=3)
+    s6, _ = first.run(jax.random.PRNGKey(0), data, rounds=6, eval_every=6)
+    first.save_checkpoint(mgr, s6)
+    fresh = _trainer(model, fed, tc, rounds_per_call=3)
+    restored, _ = fresh.restore_checkpoint(mgr)
+    sB, _ = fresh.run(None, data, rounds=12, eval_every=12,
+                      state=restored)
+    _assert_states_equal(sA, sB)
+
+
+# ------------------------------------------------- run() service hooks
+def test_cadence_saves_during_run(setup, tmp_path):
+    cfg, model, data, tc, fed = setup
+    mgr = CheckpointManager(str(tmp_path), keep=10, save_every=2)
+    tr = _trainer(model, fed, tc)
+    tr.run(jax.random.PRNGKey(0), data, rounds=5, eval_every=5, ckpt=mgr)
+    assert mgr.steps() == [2, 4]
+    assert mgr.read_manifest() is not None   # written on first use
+
+
+def test_should_stop_drains_cleanly(setup, tmp_path):
+    """should_stop() ends the loop at a driver-call boundary; the
+    returned state is at the completed round, resumable as usual."""
+    cfg, model, data, tc, fed = setup
+    calls = {"n": 0}
+
+    def stop_after_two():
+        calls["n"] += 1
+        return calls["n"] > 2
+
+    tr = _trainer(model, fed, tc)
+    state, _ = tr.run(jax.random.PRNGKey(0), data, rounds=50,
+                      eval_every=50, should_stop=stop_after_two)
+    assert int(state.round_idx) == 2        # 2 rounds ran, then drained
+    # saving at the actual completed index (not fed.rounds) keeps the
+    # checkpoint resumable
+    mgr = CheckpointManager(str(tmp_path))
+    tr.save_checkpoint(mgr, state)
+    assert mgr.latest_step() == 2
+
+
+def test_state_dict_load_state_roundtrip(setup):
+    cfg, model, data, tc, fed = setup
+    tr = _trainer(model, fed, tc)
+    state, _ = tr.run(jax.random.PRNGKey(0), data, rounds=2, eval_every=2)
+    back = tr.load_state(tr.state_dict(state))
+    _assert_states_equal(state, back)
+    assert back.key.dtype == state.key.dtype
+    assert back.scores.rounds_seen.dtype == jnp.int32
+
+
+def test_restore_refuses_mismatched_run(setup, tmp_path):
+    cfg, model, data, tc, fed = setup
+    mgr = CheckpointManager(str(tmp_path))
+    tr = _trainer(model, fed, tc)
+    tr.save_checkpoint(mgr, tr.init(jax.random.PRNGKey(0)))
+    import dataclasses
+    other = _trainer(model, dataclasses.replace(fed, attack="none"), tc)
+    with pytest.raises(ValueError, match="fed.attack"):
+        other.restore_checkpoint(mgr)
+
+
+# ------------------------------------------------------ fault dynamics
+def test_targeted_fault_zeroes_weight_and_freezes_score(setup):
+    """A dropped client contributes exactly zero aggregation weight and
+    its score/rounds_seen freeze for the round (placement-aware
+    ``targeted`` fault makes the drop set deterministic)."""
+    cfg, model, data, tc, fed = setup
+    import dataclasses
+    fed = dataclasses.replace(fed, fault="targeted",
+                              fault_kwargs={"size": 2,
+                                            "placement": "first"})
+    tr = _trainer(model, fed, tc)
+    state = tr.init(jax.random.PRNGKey(0))
+    s0 = np.asarray(state.scores.scores)
+    new_state, m = tr.run_round(state, data)
+    w = np.asarray(m["weights"])
+    np.testing.assert_array_equal(w[:2], 0.0)
+    assert w[2:].sum() == pytest.approx(1.0, abs=1e-4)
+    s1 = np.asarray(new_state.scores.scores)
+    np.testing.assert_array_equal(s1[:2], s0[:2])            # frozen
+    assert float(m["dropped_fraction"]) == pytest.approx(2 / 6)
+
+
+def test_dropped_fraction_zero_without_faults(setup):
+    cfg, model, data, tc, fed = setup
+    tr = _trainer(model, fed, tc)
+    _, m = tr.run_round(tr.init(jax.random.PRNGKey(0)), data)
+    assert float(m["dropped_fraction"]) == 0.0
+
+
+# ------------------------------------------------------ serve read path
+def test_serve_reads_latest_checkpoint(setup, tmp_path):
+    cfg, model, data, tc, fed = setup
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        load_serving_params(mgr, model, wait_secs=0.0)
+    tr = _trainer(model, fed, tc)
+    state, _ = tr.run(jax.random.PRNGKey(0), data, rounds=2, eval_every=2)
+    tr.save_checkpoint(mgr, state)
+    params, step = load_serving_params(mgr, model, arch=cfg.name)
+    assert step == 2
+    _assert_states_equal(state.global_params, params)
+    with pytest.raises(SystemExit, match="refusing"):
+        load_serving_params(mgr, model, arch="some-other-arch")
+
+
+# ------------------------------------- pod backends resume (subprocess)
+POD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core.engine import (
+    make_allgather_round, make_distributed_round, round_keys)
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset, \
+    sample_client_batches
+from repro.models import build_model
+
+N, ROUNDS, SPLIT = 4, 8, 4
+cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                              cnn_hidden=16)
+model = build_model(cfg)
+fed = FedConfig(num_users=N, num_testers=N, num_malicious=1,
+                attack="sign_flip", attack_scale=4.0, local_steps=4,
+                fault="dropout", fault_rate=0.25, seed=0)
+tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                 batch_size=8, grad_clip=0.0, remat=False)
+data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1200,
+                                    global_test=128, seed=0)
+mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
+pk, run_key = jax.random.split(jax.random.PRNGKey(0))
+ckpt_dir = %(ckpt_dir)r
+
+out = {}
+for exchange, make in [("ring", make_distributed_round),
+                       ("allgather", make_allgather_round)]:
+    round_fn = jax.jit(make(model, fed, tc, mesh,
+                            counts=data.train.counts))
+
+    def play(g, s, start, stop):
+        for r in range(start, stop):
+            key = jax.random.fold_in(run_key, r)
+            bx, by = sample_client_batches(round_keys(key).batch,
+                                           data.train, fed.local_steps,
+                                           tc.batch_size)
+            g, s, _ = round_fn(g, s, bx, by, tx, ty, key,
+                               jnp.asarray(r, jnp.int32))
+        return g, s
+
+    gA, sA = play(model.init(pk), init_scores(N), 0, ROUNDS)
+
+    # interrupted run: stop at SPLIT, checkpoint, restore, finish
+    g, s = play(model.init(pk), init_scores(N), 0, SPLIT)
+    mgr = CheckpointManager(os.path.join(ckpt_dir, exchange))
+    mgr.save(SPLIT, {"g": g, "s": s})
+    rest = mgr.restore({"g": g, "s": s})
+    gB, sB = play(rest["g"], rest["s"], SPLIT, ROUNDS)
+
+    same = all(bool(jnp.all(a == b)) for a, b in zip(
+        jax.tree_util.tree_leaves((gA, sA)),
+        jax.tree_util.tree_leaves((gB, sB))))
+    out[exchange] = bool(same)
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_pod_backends_resume_bit_identical(tmp_path):
+    """Ring and allgather runs interrupted at round 4, checkpointed
+    through the manager and resumed, land bit-identically on the
+    uninterrupted round-8 state — with a dropout fault active."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    script = POD_SCRIPT % {"ckpt_dir": str(tmp_path)}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out == {"ring": True, "allgather": True}
