@@ -1,0 +1,135 @@
+"""Cross-testing fast-path benchmark: the K×N eval matrix per round.
+
+Sweeps {mlp, cnn, decoder} × N ∈ {8, 16, 32} clients at K = 4 testers
+(EXPERIMENTS.md §Crosstest-bench) and times one full [K, N] accuracy
+matrix through both dispatch models of DESIGN.md §10:
+
+* ``reference`` — N sequential eval dispatches inside the tester vmap
+  (the historical loop, kept as the parity oracle);
+* ``batched``   — one fused [N, batch] forward per tester via vmap over
+  the model axis.
+
+Each batched row carries ``eval_GBps`` (bytes a tester sweep must touch:
+K × (N × params + eval batch)) and ``roofline_frac`` against the
+measured ``weighted_aggregate`` streaming reference — the fraction is
+what ``tools/check_bench.py`` gates (>15% regression fails CI). The
+``dispatches`` fields count trace-time ``eval_fn`` call sites, the
+machine-checkable form of the ≥3× fewer-dispatches claim: batched
+traces 1 eval per tester sweep where reference traces N.
+
+LM eval routes through the kernel ops (``make_eval_fn`` defaults to
+:func:`~repro.core.cross_testing.kernel_route_model`), so the decoder
+rows measure the flash-attention path, not the naive oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, emit, timeit
+from repro.config import reduce_for_smoke
+from repro.configs import get_config
+from repro.core.cross_testing import cross_test_accuracies, make_eval_fn
+from repro.kernels.weighted_aggregate.ops import weighted_aggregate
+
+K = 4                       # testers per sweep
+CLIENTS = (8, 16, 32)       # N sweep
+
+
+def _param_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def _arch_case(arch: str, fast: bool):
+    """(model, tester_x, tester_y, batch_bytes) for one sweep arch."""
+    if arch == "decoder":
+        cfg = reduce_for_smoke(get_config("qwen2-0.5b")).replace(
+            dtype="float32")
+        model = get_model(cfg)
+        B, S = (2, 64) if fast else (8, 256)
+        tx = jax.random.randint(jax.random.PRNGKey(1), (K, B, S), 0,
+                                cfg.vocab_size)
+        ty = jax.random.randint(jax.random.PRNGKey(2), (K, B, S), -1,
+                                cfg.vocab_size)
+        batch_bytes = tx.size * 4 + ty.size * 4
+        return model, tx, ty, batch_bytes
+    arch_id = "fedtest-mlp-mnist" if arch == "mlp" else "fedtest-cnn-mnist"
+    cfg = get_config(arch_id)
+    if fast and arch == "cnn":
+        cfg = cfg.replace(cnn_channels=(4, 8), cnn_hidden=32)
+    model = get_model(cfg)
+    B = (32 if arch == "cnn" else 64) if fast else 512
+    tx = jax.random.normal(
+        jax.random.PRNGKey(1),
+        (K, B, cfg.image_size, cfg.image_size, cfg.image_channels),
+        jnp.float32)
+    ty = jax.random.randint(jax.random.PRNGKey(2), (K, B), 0,
+                            cfg.num_classes)
+    batch_bytes = tx.size * 4 + ty.size * 4
+    return model, tx, ty, batch_bytes
+
+
+def get_model(cfg):
+    from repro.models import build_model
+    return build_model(cfg)
+
+
+def main(fast: bool = FAST):
+    # the streaming-bandwidth roofline reference, measured on this host
+    # back-to-back with the eval rows (same rationale as bench_kernels)
+    C, M = (16, 1 << 20) if fast else (16, 1 << 22)
+    xw = jax.random.normal(jax.random.PRNGKey(3), (C, M), jnp.float32)
+    ww = jax.random.uniform(jax.random.PRNGKey(4), (C,))
+    fn = jax.jit(lambda x, w: weighted_aggregate(x, w, impl="auto"))
+    us = timeit(fn, xw, ww)
+    ref_gbps = C * M * 4 / (us / 1e6) / 1e9
+    emit(f"crosstest/stream_ref_C{C}_M{M}", us,
+         f"read_GBps={ref_gbps:.2f}", gbps=round(ref_gbps, 2),
+         roofline_frac=1.0)
+
+    for arch in ("mlp", "cnn", "decoder"):
+        model, tx, ty, batch_bytes = _arch_case(arch, fast)
+        eval_fn = make_eval_fn(model)
+        for n in CLIENTS:
+            keys = jax.random.split(jax.random.PRNGKey(0), n)
+            stacked = jax.vmap(model.init)(keys)
+            pbytes = _param_bytes(stacked) // n
+
+            # trace-time dispatch counter: every eval_fn call site in the
+            # traced sweep is one fused eval dispatch per tester
+            calls = {"n": 0}
+
+            def counted(p, x, y):
+                calls["n"] += 1
+                return eval_fn(p, x, y)
+
+            results = {}
+            for impl in ("reference", "batched"):
+                calls["n"] = 0
+                fn = jax.jit(lambda s, x, y, _i=impl: cross_test_accuracies(
+                    counted, s, x, y, impl=_i))
+                us = timeit(fn, stacked, tx, ty, iters=3)
+                results[impl] = (us, calls["n"])
+
+            ref_us, ref_disp = results["reference"]
+            bat_us, bat_disp = results["batched"]
+            # bytes one [K, N] sweep must touch: every tester reads all N
+            # models plus its own eval batch
+            sweep_bytes = K * (n * pbytes + batch_bytes)
+            gbps = sweep_bytes / (bat_us / 1e6) / 1e9
+            emit(f"crosstest/{arch}_N{n}_reference", ref_us,
+                 f"dispatches={ref_disp}", dispatches=ref_disp)
+            emit(f"crosstest/{arch}_N{n}", bat_us,
+                 f"dispatches={bat_disp} speedup={ref_us / bat_us:.2f}x "
+                 f"eval_GBps={gbps:.2f}",
+                 dispatches=bat_disp, speedup=round(ref_us / bat_us, 2),
+                 gbps=round(gbps, 2),
+                 roofline_frac=round(gbps / ref_gbps, 4))
+            assert ref_disp >= 3 * bat_disp, (
+                f"{arch}_N{n}: batched path must cut eval dispatches "
+                f">=3x (got {ref_disp} vs {bat_disp})")
+
+
+if __name__ == "__main__":
+    main()

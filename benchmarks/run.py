@@ -19,6 +19,7 @@ from benchmarks import common
 
 SUITES = [
     ("kernels", "benchmarks.bench_kernels"),          # kernel micro
+    ("crosstest", "benchmarks.bench_crosstest"),      # K×N eval fast path
     ("aggregation", "benchmarks.bench_aggregation"),  # FedTest server op
     ("comm", "benchmarks.bench_comm"),                # Sec. V-A accounting
     ("roofline", "benchmarks.bench_roofline"),        # dry-run artifacts
@@ -28,7 +29,7 @@ SUITES = [
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 
-JSON_SUITES = {"aggregation", "kernels"}
+JSON_SUITES = {"aggregation", "kernels", "crosstest"}
 
 
 def main() -> int:

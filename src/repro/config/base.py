@@ -28,6 +28,7 @@ class ModelConfig:
       * ``encdec`` — Whisper-style encoder-decoder (audio frontend stubbed).
       * ``vlm``    — decoder-only consuming stubbed patch embeddings + text.
       * ``cnn``    — the paper's own 3-conv/2-fc CIFAR classifier.
+      * ``mlp``    — the paper's MNIST fully-connected classifier.
     """
 
     name: str
@@ -82,6 +83,9 @@ class ModelConfig:
     cnn_hidden: int = 0
     num_classes: int = 0
 
+    # --- mlp (paper's MNIST model) ---------------------------------------------
+    mlp_hidden: Tuple[int, ...] = ()
+
     # --- numerics / misc -------------------------------------------------------
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
@@ -90,8 +94,14 @@ class ModelConfig:
 
     def __post_init__(self) -> None:
         _require(self.family in
-                 ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "cnn"),
+                 ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "cnn",
+                  "mlp"),
                  f"unknown family {self.family!r}")
+        if self.family == "mlp":
+            _require(len(self.mlp_hidden) > 0 and self.num_classes > 0
+                     and self.image_size > 0,
+                     f"{self.name}: mlp needs mlp_hidden, num_classes "
+                     "and image_size")
         if self.family in ("dense", "moe", "encdec", "vlm", "hybrid"):
             _require(self.num_heads > 0 and self.num_kv_heads > 0,
                      f"{self.name}: attention archs need heads")
@@ -242,6 +252,7 @@ class FedConfig:
     lying_testers: int = 0          # testers reporting fake accuracies (Sec. V-C)
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
+    crosstest_impl: str = "batched"  # cross-testing dispatch (DESIGN.md §10)
     seed: int = 0
 
     def __post_init__(self) -> None:
@@ -252,6 +263,9 @@ class FedConfig:
                  "coalition_size < N")
         _require(0.0 <= self.fault_rate < 1.0,
                  "fault_rate in [0, 1)")
+        _require(self.crosstest_impl in ("batched", "reference"),
+                 f"crosstest_impl must be 'batched'|'reference', "
+                 f"got {self.crosstest_impl!r}")
         for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs",
                   "coalition_kwargs", "fault_kwargs"):
             object.__setattr__(self, f, _freeze_kwargs(getattr(self, f)))
@@ -366,4 +380,6 @@ def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
     if cfg.family == "cnn":
         kw.update(cnn_channels=tuple(min(c, 16) for c in cfg.cnn_channels),
                   cnn_hidden=min(cfg.cnn_hidden, 64))
+    if cfg.family == "mlp":
+        kw.update(mlp_hidden=tuple(min(h, 64) for h in cfg.mlp_hidden))
     return cfg.replace(**kw)

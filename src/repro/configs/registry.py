@@ -21,6 +21,7 @@ ARCH_IDS: Dict[str, str] = {
     # the paper's own model (CIFAR-10 CNN, Sec. III)
     "fedtest-cnn": "fedtest_cnn",
     "fedtest-cnn-mnist": "fedtest_cnn_mnist",
+    "fedtest-mlp-mnist": "fedtest_mlp_mnist",
 }
 
 

@@ -1,22 +1,86 @@
-"""Cross-testing (the heart of FedTest, Fig. 3b).
+"""Cross-testing (the heart of FedTest, Fig. 3b) — and its fast path.
 
 Each selected tester evaluates *every* client's model on the tester's own
-local held-out data. On the local exchange backend this is a ``vmap``
-over the client axis of the stacked params (N models evaluated in one
-XLA call per tester); on a pod the same computation is the ring schedule
-in ``repro.core.engine.backends.ring_cross_test`` (see DESIGN.md §3).
+local held-out data: K×N model evaluations per round, the dominant
+per-round cost of the whole scheme. This module owns the three pieces of
+the fast path (DESIGN.md §10):
+
+* **dispatch model** — two interchangeable implementations of the
+  ``[K, N]`` accuracy matrix: ``reference`` evaluates one client model at
+  a time inside the tester vmap (N eval dispatches per tester — the
+  parity oracle), ``batched`` stacks the client parameters and runs one
+  fused ``[N, batch]`` forward per tester (a single dispatch via vmap
+  over the model axis). The two are pinned **bitwise identical** by
+  ``tests/test_crosstest.py`` on every backend.
+* **kernel routing** — LM eval always goes through the
+  ``flash_attention`` / ``ssd_scan`` kernel ops, never the naive
+  reference oracle, even when the model handle was built with
+  ``attn_impl='naive'`` for serving tests
+  (:func:`kernel_route_model`).
+* **eval-batch caching** — per-tester eval batches are reusable across
+  rounds; the gather indices are a pure function of the run key and the
+  round-schedule *bucket* (:func:`eval_batch_indices`), so the cache key
+  is derived, never stashed — FL001 key discipline holds and the cached
+  path is bit-insensitive to hit/miss.
+
+On a pod the same computation is the ring schedule in
+``repro.core.engine.backends.ring_cross_test`` (see DESIGN.md §3), whose
+fast path overlaps each hop's eval with the next ``ppermute``.
 """
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
+# the eval-batch stream's fold_in constant — disjoint from the RoundKeys
+# constants (5/6/7 in repro.core.engine.program.round_keys) so adding the
+# stream cannot perturb any committed trajectory
+EVAL_BATCH_STREAM = 11
 
-def make_eval_fn(model) -> Callable:
-    """Returns eval_fn(params, bx, by) -> accuracy in [0, 1]."""
-    if model.cfg.family == "cnn":
+CROSSTEST_IMPLS = ("batched", "reference")
+
+
+# ------------------------------------------------------------- kernel routing
+def resolve_eval_impl() -> str:
+    """The concrete kernel backend eval routes through on this host."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def kernel_route_model(model):
+    """Route a model handle's eval forward through the kernel ops.
+
+    ``auto`` resolves to the host's kernel backend and ``naive`` — the
+    small-shape test oracle — is upgraded to it: the K×N eval path must
+    hit ``flash_attention`` / ``ssd_scan``, not the quadratic reference.
+    Explicit ``pallas`` / ``xla`` choices are respected. CNN/MLP
+    families have no kernel path and pass through unchanged.
+    ``tests/test_crosstest_kernels.py`` pins the routed eval against the
+    naive forward to tolerance on the bench shapes.
+    """
+    if model.cfg.family in ("cnn", "mlp"):
+        return model
+    impl = resolve_eval_impl()
+    attn = impl if model.attn_impl in ("auto", "naive") else model.attn_impl
+    ssm = impl if model.ssm_impl in ("auto", "naive") else model.ssm_impl
+    if (attn, ssm) == (model.attn_impl, model.ssm_impl):
+        return model
+    return dataclasses.replace(model, attn_impl=attn, ssm_impl=ssm)
+
+
+def make_eval_fn(model, *, route_kernels: bool = True) -> Callable:
+    """Returns eval_fn(params, bx, by) -> accuracy in [0, 1].
+
+    ``route_kernels`` (the default) sends LM forwards through the kernel
+    ops via :func:`kernel_route_model`; pass ``False`` to evaluate with
+    the model's own impl choices (the naive-oracle side of the
+    kernel-consistency tests).
+    """
+    if route_kernels:
+        model = kernel_route_model(model)
+    if model.cfg.family in ("cnn", "mlp"):
         def eval_fn(params, bx, by):
             logits, _ = model.forward_train(params, {"images": bx})
             return jnp.mean((jnp.argmax(logits, -1) == by)
@@ -30,13 +94,126 @@ def make_eval_fn(model) -> Callable:
     return eval_fn
 
 
-def cross_test_accuracies(eval_fn, stacked_params, tester_x, tester_y
-                          ) -> jnp.ndarray:
-    """Accuracy matrix A[k, c] = acc of client c's model on tester k's data.
-
-    stacked_params: leaves [N, ...]; tester_x/y: [K, batch, ...].
-    """
+# ------------------------------------------------------------ dispatch model
+def cross_test_batched(eval_fn, stacked_params, tester_x, tester_y
+                       ) -> jnp.ndarray:
+    """One fused [N, batch] eval dispatch per tester (the fast path)."""
     def one_tester(bx, by):
         return jax.vmap(lambda p: eval_fn(p, bx, by))(stacked_params)
 
     return jax.vmap(one_tester)(tester_x, tester_y)     # [K, N]
+
+
+def cross_test_reference(eval_fn, stacked_params, tester_x, tester_y
+                         ) -> jnp.ndarray:
+    """One eval dispatch per (tester, client) pair — the parity oracle.
+
+    N sequential evals inside the tester vmap, exactly the per-client
+    loop the batched path replaces; kept as the bitwise reference the
+    fast path is pinned against (and as the honest baseline
+    ``benchmarks/bench_crosstest.py`` measures speedups over).
+    """
+    n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+
+    def one_tester(bx, by):
+        accs = [eval_fn(jax.tree_util.tree_map(lambda l, c=c: l[c],
+                                               stacked_params), bx, by)
+                for c in range(n)]
+        return jnp.stack(accs)
+
+    return jax.vmap(one_tester)(tester_x, tester_y)     # [K, N]
+
+
+def cross_test_accuracies(eval_fn, stacked_params, tester_x, tester_y,
+                          *, impl: str = "batched") -> jnp.ndarray:
+    """Accuracy matrix A[k, c] = acc of client c's model on tester k's data.
+
+    stacked_params: leaves [N, ...]; tester_x/y: [K, batch, ...].
+    ``impl`` picks the dispatch model (``batched`` | ``reference``,
+    DESIGN.md §10); both produce the bitwise-identical matrix.
+    """
+    if impl == "batched":
+        return cross_test_batched(eval_fn, stacked_params,
+                                  tester_x, tester_y)
+    if impl == "reference":
+        return cross_test_reference(eval_fn, stacked_params,
+                                    tester_x, tester_y)
+    raise ValueError(
+        f"crosstest impl must be one of {CROSSTEST_IMPLS}, got {impl!r}")
+
+
+# --------------------------------------------------------- eval-batch caching
+def eval_batch_indices(run_key, counts: jnp.ndarray, eval_batch: int,
+                       bucket) -> jnp.ndarray:
+    """[N, eval_batch] per-tester gather indices for one schedule bucket.
+
+    The key is re-derived on every call — ``fold_in(run_key,
+    EVAL_BATCH_STREAM)`` then ``fold_in(·, bucket)`` — so the indices are
+    a pure function of (run key, bucket): rounds in the same bucket share
+    a batch (the cache hit), a new bucket resamples (the miss), and no
+    key is ever stashed across rounds (FL001, DESIGN.md §10). Works
+    traced (bucket may be a scalar array inside jit/scan) and on the
+    host.
+    """
+    k = jax.random.fold_in(
+        jax.random.fold_in(run_key, EVAL_BATCH_STREAM), bucket)
+    u = jax.random.uniform(k, (counts.shape[0], eval_batch))
+    return (u * counts[:, None]).astype(jnp.int32)
+
+
+def gather_eval_batches(xs, ys, idx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialise [N, eval_batch, ...] tester batches from stacked data."""
+    tx = jax.vmap(lambda x, i: x[i])(xs, idx)
+    ty = jax.vmap(lambda y, i: y[i])(ys, idx)
+    return tx, ty
+
+
+def sampled_eval_batches(run_key, test_data, eval_batch: int, round_idx,
+                         resample_every: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The round's tester eval batches under the resampling schedule.
+
+    Pure function of (run key, round bucket) — the in-trace path the
+    drivers use; :class:`EvalBatchCache` wraps it for host loops and must
+    return bitwise-identical arrays (pinned by the hit/miss-insensitivity
+    property test).
+    """
+    idx = eval_batch_indices(run_key, test_data.counts, eval_batch,
+                             round_idx // resample_every)
+    return gather_eval_batches(test_data.xs, test_data.ys, idx)
+
+
+class EvalBatchCache:
+    """Cross-round cache of materialised tester eval batches (host loops).
+
+    The pod drivers and benches feed rounds from a host loop, so the
+    per-tester eval batches would be regathered every round; this cache
+    reuses them while the round stays in the same schedule bucket
+    (``round_idx // resample_every``). The bucket — not a PRNG key — is
+    the cache key: on a miss the indices are re-derived from the run key
+    via :func:`eval_batch_indices`, so a cold cache, a warm cache and the
+    in-trace :func:`sampled_eval_batches` all produce the same arrays.
+    """
+
+    def __init__(self, resample_every: int):
+        if resample_every < 1:
+            raise ValueError("resample_every must be >= 1")
+        self.resample_every = resample_every
+        self.hits = 0
+        self.misses = 0
+        self._bucket = None
+        self._batches = None
+
+    def get(self, run_key, test_data, eval_batch: int, round_idx: int
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        bucket = int(round_idx) // self.resample_every
+        if self._bucket == bucket and self._batches is not None:
+            self.hits += 1
+            return self._batches
+        self.misses += 1
+        idx = eval_batch_indices(run_key, test_data.counts, eval_batch,
+                                 bucket)
+        self._bucket = bucket
+        self._batches = gather_eval_batches(test_data.xs, test_data.ys,
+                                            idx)
+        return self._batches

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.config import FedConfig, TrainConfig
-from repro.core.cross_testing import cross_test_accuracies
+from repro.core.cross_testing import CROSSTEST_IMPLS, cross_test_accuracies
 from repro.core.engine.program import RoundProgram, round_keys
 from repro.kernels.weighted_aggregate import aggregate_pytree
 
@@ -107,8 +107,12 @@ class LocalBackend(ExchangeBackend):
 
     name = "local"
 
-    def __init__(self, num_users: int):
+    def __init__(self, num_users: int, crosstest_impl: str = "batched"):
+        if crosstest_impl not in CROSSTEST_IMPLS:
+            raise ValueError(f"crosstest_impl must be one of "
+                             f"{CROSSTEST_IMPLS}, got {crosstest_impl!r}")
         self.num_users = num_users
+        self.crosstest_impl = crosstest_impl
 
     def train(self, local_train, global_params, bx, by):
         stacked = jax.tree_util.tree_map(
@@ -130,7 +134,8 @@ class LocalBackend(ExchangeBackend):
     def cross_test(self, eval_fn, models, tx, ty, tester_ids):
         acc = cross_test_accuracies(
             lambda p, x, y: eval_fn(p, x, y), models,
-            tx[tester_ids], ty[tester_ids])                  # [K, N]
+            tx[tester_ids], ty[tester_ids],
+            impl=self.crosstest_impl)                        # [K, N]
         return acc, None
 
     def updates(self, models, global_params, cache):
@@ -143,24 +148,36 @@ class LocalBackend(ExchangeBackend):
         return aggregate_pytree(models, weights, impl=impl)
 
 
-def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int):
+def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int,
+                    impl: str = "batched"):
     """Every device measures every client's model on its own test data.
 
     Returns acc_row [num_clients]: accuracy of client c's model on *my*
     local test shard. Implemented as N-1 ``ppermute`` hops around the ring
     (visiting models), so peak memory is own + visiting model.
+
+    ``impl`` picks the hop schedule (DESIGN.md §10): ``reference`` runs
+    eval-then-permute (the historical serial hop); ``batched`` issues the
+    next ``ppermute`` *before* the eval so the collective overlaps with
+    the hop's compute. Both read the identical pre-permute ``visiting``
+    value — the dataflow is unchanged, only the issue order — so the two
+    schedules are bit-identical (pinned by ``tests/test_crosstest.py``).
     """
     my_idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % num_clients) for i in range(num_clients)]
+    overlap = impl == "batched"
 
     def hop(step, carry):
         visiting, acc_row = carry
         # who owned `visiting` before `step` hops reached me?
         owner = (my_idx - step) % num_clients
+        if overlap:
+            nxt = jax.lax.ppermute(visiting, axis, perm)
         acc = eval_fn(visiting, tx, ty)
         acc_row = acc_row.at[owner].set(acc)
-        visiting = jax.lax.ppermute(visiting, axis, perm)
-        return (visiting, acc_row)
+        if not overlap:
+            nxt = jax.lax.ppermute(visiting, axis, perm)
+        return (nxt, acc_row)
 
     acc_row = jnp.zeros((num_clients,), jnp.float32)
     (_, acc_row) = jax.lax.fori_loop(
@@ -178,9 +195,14 @@ class PodBackend(ExchangeBackend):
 
     name = "pod"
 
-    def __init__(self, axis: str, num_clients: int):
+    def __init__(self, axis: str, num_clients: int,
+                 crosstest_impl: str = "batched"):
+        if crosstest_impl not in CROSSTEST_IMPLS:
+            raise ValueError(f"crosstest_impl must be one of "
+                             f"{CROSSTEST_IMPLS}, got {crosstest_impl!r}")
         self.axis = axis
         self.num_clients = num_clients
+        self.crosstest_impl = crosstest_impl
 
     def train(self, local_train, global_params, bx, by):
         params, loss = local_train(global_params, bx, by)
@@ -235,7 +257,8 @@ class RingBackend(PodBackend):
 
     def cross_test(self, eval_fn, models, tx, ty, tester_ids):
         acc_row = ring_cross_test(eval_fn, models, tx, ty, self.axis,
-                                  self.num_clients)
+                                  self.num_clients,
+                                  impl=self.crosstest_impl)
         return self._acc_matrix(acc_row, tester_ids), None
 
 
@@ -249,14 +272,23 @@ class AllgatherBackend(PodBackend):
     def cross_test(self, eval_fn, models, tx, ty, tester_ids):
         everyone = jax.tree_util.tree_map(
             lambda x: jax.lax.all_gather(x, self.axis), models)  # [N, ...]
-        acc_row = jax.vmap(lambda p: eval_fn(p, tx, ty))(everyone)
+        if self.crosstest_impl == "batched":
+            # one fused [N, batch] forward over the gathered stack
+            acc_row = jax.vmap(lambda p: eval_fn(p, tx, ty))(everyone)
+        else:
+            # reference: N sequential per-client eval dispatches
+            acc_row = jnp.stack([
+                eval_fn(jax.tree_util.tree_map(lambda l, c=c: l[c],
+                                               everyone), tx, ty)
+                for c in range(self.num_clients)])
         return self._acc_matrix(acc_row, tester_ids), everyone
 
 
 # --------------------------------------------------------------- builders
 def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
                    axis: str = "clients", aggregator=None, counts=None,
-                   server_data=None, exchange: str = "ring"):
+                   server_data=None, exchange: str = "ring",
+                   crosstest_impl: str = None):
     """Builds the shard_map FedTest round for ``mesh[axis]`` clients.
 
     The returned function runs the *same* :class:`RoundProgram` as the
@@ -276,10 +308,17 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
     (static host data, closed over); without them fedavg degenerates to
     uniform weighting. ``server_data`` — optional ``(sx, sy)`` replicated
     server eval set, required only by ``needs_server_eval`` aggregators.
+    ``crosstest_impl`` — cross-testing dispatch model (DESIGN.md §10);
+    defaults to ``fed.crosstest_impl``.
     """
     if exchange not in ("ring", "allgather"):
         raise ValueError(f"exchange must be 'ring'|'allgather', "
                          f"got {exchange!r}")
+    crosstest_impl = crosstest_impl or getattr(fed, "crosstest_impl",
+                                               "batched")
+    if crosstest_impl not in CROSSTEST_IMPLS:
+        raise ValueError(f"crosstest_impl must be one of "
+                         f"{CROSSTEST_IMPLS}, got {crosstest_impl!r}")
     num_clients = mesh.shape[axis]
     if fed.num_users != num_clients:
         raise ValueError(
@@ -306,7 +345,7 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
         # shard_map gives per-client leading axes of size 1 — drop them
         bx, by = bx[0], by[0]
         tx, ty = tx[0], ty[0]
-        backend = backend_cls(axis, num_clients)
+        backend = backend_cls(axis, num_clients, crosstest_impl)
         keys = round_keys(key)
         tester_ids, part_mask = program.select_round(keys, round_idx,
                                                      scores=scores.scores)

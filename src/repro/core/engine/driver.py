@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.checkpoint.manifest import check_manifest, run_manifest
 from repro.config import FedConfig, TrainConfig
+from repro.core.cross_testing import sampled_eval_batches
 from repro.core.engine.backends import LocalBackend
 from repro.core.engine.program import RoundProgram, round_keys
 from repro.core.scoring import ScoreState, init_scores
@@ -50,6 +51,11 @@ class FederatedTrainer:
     use_trust: bool = False
     batch_builder: Optional[Callable] = None   # (bx, by) -> model batch
     rounds_per_call: int = 1        # >1 routes run() through lax.scan
+    crosstest_impl: Optional[str] = None  # None -> fed.crosstest_impl
+    # 0 keeps the legacy fixed eval prefix (first eval_batch test rows,
+    # every round); r > 0 draws schedule-keyed per-tester eval batches
+    # that resample every r rounds (DESIGN.md §10)
+    eval_resample_every: int = 0
 
     def __post_init__(self):
         # the program resolves every strategy once, pre-trace (the jitted
@@ -57,7 +63,9 @@ class FederatedTrainer:
         self.program = RoundProgram(
             self.model, self.fed, self.train, use_trust=self.use_trust,
             agg_impl=self.agg_impl, batch_builder=self.batch_builder)
-        self.backend = LocalBackend(self.fed.num_users)
+        impl = self.crosstest_impl or getattr(self.fed, "crosstest_impl",
+                                              "batched")
+        self.backend = LocalBackend(self.fed.num_users, impl)
         # strategy handles (public API, also used by tests/benchmarks)
         self.opt = self.program.opt
         self.aggregator = self.program.aggregator
@@ -144,11 +152,19 @@ class FederatedTrainer:
         bx, by = sample_client_batches(keys.batch, data.train,
                                        fed.local_steps,
                                        self.train.batch_size)
+        if self.eval_resample_every > 0:
+            # schedule-keyed eval batches: a pure function of the carried
+            # run key and the round bucket, derived in-trace — nothing is
+            # stashed, so resume stays bit-identical (DESIGN.md §10)
+            tx, ty = sampled_eval_batches(
+                state.key, data.test, self.eval_batch, state.round_idx,
+                self.eval_resample_every)
+        else:
+            tx = data.test.xs[:, :self.eval_batch]
+            ty = data.test.ys[:, :self.eval_batch]
         new_global, new_scores, metrics = self.program.run(
             self.backend, state.global_params, state.scores,
-            bx=bx, by=by,
-            tx=data.test.xs[:, :self.eval_batch],
-            ty=data.test.ys[:, :self.eval_batch],
+            bx=bx, by=by, tx=tx, ty=ty,
             tester_ids=tester_ids, part_mask=part_mask, keys=keys,
             round_idx=state.round_idx, counts=data.train.counts,
             server_data=(data.server_x[:self.eval_batch],

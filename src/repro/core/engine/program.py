@@ -271,7 +271,7 @@ class RoundProgram:
     def batchify(self, bx, by) -> Dict[str, jnp.ndarray]:
         if self.batch_builder is not None:
             return self.batch_builder(bx, by)
-        if self.model.cfg.family == "cnn":
+        if self.model.cfg.family in ("cnn", "mlp"):
             return {"images": bx, "labels": by}
         return {"tokens": bx, "labels": by}
 

@@ -45,7 +45,7 @@ from repro.roofline.analysis import (
     collective_bytes_per_device, roofline_terms)
 from repro.sharding import logical_rules
 
-ASSIGNED = [a for a in list_configs() if not a.startswith("fedtest-cnn")]
+ASSIGNED = [a for a in list_configs() if not a.startswith("fedtest-")]
 
 
 def _layer_period(cfg) -> int:

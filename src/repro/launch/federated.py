@@ -105,6 +105,11 @@ def main():
                          "coalition smoke gate)")
     ap.add_argument("--testers", type=int, default=None,
                     help="K testers per round (default: all clients)")
+    ap.add_argument("--crosstest-impl", default=None,
+                    choices=["batched", "reference"],
+                    help="cross-testing dispatch model (DESIGN.md §10): "
+                         "overlapped/batched fast path vs the reference "
+                         "schedule (bit-identical)")
     ap.add_argument("--dataset", default="mnist_like",
                     choices=["mnist_like", "cifar_like"])
     ap.add_argument("--min-classes", type=int, default=None,
@@ -161,6 +166,7 @@ def main():
                   coalition_kwargs=args.coalition_kwargs,
                   fault=args.fault, fault_kwargs=args.fault_kwargs,
                   fault_rate=args.fault_rate,
+                  crosstest_impl=args.crosstest_impl,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:

@@ -162,6 +162,15 @@ def main():
                     help="exit non-zero unless the final round's "
                          "malicious_weight is below this bar (the CI "
                          "dropout-suppression gate)")
+    ap.add_argument("--crosstest-impl", default=None,
+                    choices=["batched", "reference"],
+                    help="cross-testing dispatch model (DESIGN.md §10): "
+                         "one fused [N, batch] eval per tester vs the "
+                         "per-client reference loop (bit-identical)")
+    ap.add_argument("--eval-resample-every", type=int, default=0,
+                    help="resample the schedule-keyed tester eval "
+                         "batches every N rounds (0 = fixed prefix "
+                         "slice, the legacy behaviour)")
     ap.add_argument("--out", default="experiments/train")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (final state is always "
@@ -198,6 +207,7 @@ def main():
                   coalition_kwargs=args.coalition_kwargs,
                   fault=args.fault, fault_kwargs=args.fault_kwargs,
                   fault_rate=args.fault_rate,
+                  crosstest_impl=args.crosstest_impl,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
     if args.scenario:
@@ -219,7 +229,8 @@ def main():
                                             seed=fed.seed)
 
     trainer = FederatedTrainer(model, fed, tc,
-                               rounds_per_call=args.rounds_per_call)
+                               rounds_per_call=args.rounds_per_call,
+                               eval_resample_every=args.eval_resample_every)
 
     mgr = None
     if args.ckpt_dir:

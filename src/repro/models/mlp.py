@@ -1,5 +1,9 @@
-"""Feed-forward blocks: SwiGLU (qwen/jamba/pixtral) and GELU (whisper)."""
+"""Feed-forward blocks: SwiGLU (qwen/jamba/pixtral) and GELU (whisper) —
+plus the paper's MNIST fully-connected classifier (family ``mlp``), the
+lightest cross-testing workload ``benchmarks/bench_crosstest.py`` sweeps."""
 from __future__ import annotations
+
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -40,3 +44,24 @@ def gelu_mlp(p, x):
     h = jax.nn.gelu((x @ p["w_in"] + p["b_in"]).astype(jnp.float32))
     h = shard_hint(h.astype(x.dtype), ("batch", "seq", "mlp"))
     return shard_hint(h @ p["w_out"] + p["b_out"], ("batch", "seq", "embed"))
+
+
+# --------------------------------------------- MNIST classifier (family mlp)
+def init_mlp(cfg, key, dtype=jnp.float32) -> Dict:
+    """Flattened-image classifier: image -> cfg.mlp_hidden -> classes."""
+    ks = key_iter(key)
+    dims = ((cfg.image_size * cfg.image_size * max(cfg.image_channels, 1),)
+            + tuple(cfg.mlp_hidden) + (cfg.num_classes,))
+    return {f"fc{i}": {"w": dense_init(next(ks), (dims[i], dims[i + 1]),
+                                       dtype=dtype),
+                       "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)}
+
+
+def mlp_forward(p, cfg, images: jnp.ndarray) -> jnp.ndarray:
+    """images [B, H, W, C] (or [B, D]) -> logits [B, num_classes]."""
+    x = images.reshape(images.shape[0], -1)
+    for i in range(len(cfg.mlp_hidden)):
+        x = jax.nn.relu(x @ p[f"fc{i}"]["w"] + p[f"fc{i}"]["b"])
+    last = len(cfg.mlp_hidden)
+    return x @ p[f"fc{last}"]["w"] + p[f"fc{last}"]["b"]

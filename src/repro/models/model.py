@@ -13,7 +13,7 @@ Batch conventions:
 * vlm:    + {"patches": [B,P,D]}; logits cover patches+text, labels must be
   -1 (ignored) on the patch prefix.
 * encdec: {"frames": [B,T_enc,D], "tokens": [B,S], "labels": [B,S]}
-* cnn:    {"images": [B,H,W,C], "labels": [B]}
+* cnn/mlp: {"images": [B,H,W,C], "labels": [B]}
 """
 from __future__ import annotations
 
@@ -27,6 +27,7 @@ from repro.config import ModelConfig
 from repro.models import cnn as cnn_mod
 from repro.models import decoder as dec_mod
 from repro.models import encdec as encdec_mod
+from repro.models import mlp as mlp_mod
 from repro.models.common import softmax_cross_entropy, token_accuracy
 
 _DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
@@ -55,6 +56,8 @@ class Model:
         cfg = self.cfg
         if cfg.family == "cnn":
             return cnn_mod.init_cnn(cfg, key, self.dtype)
+        if cfg.family == "mlp":
+            return mlp_mod.init_mlp(cfg, key, self.dtype)
         if cfg.family == "encdec":
             return encdec_mod.init_encdec(
                 cfg, key, self.dtype,
@@ -68,6 +71,9 @@ class Model:
         cfg = self.cfg
         if cfg.family == "cnn":
             return cnn_mod.cnn_forward(params, cfg, batch["images"]), \
+                jnp.zeros((), jnp.float32)
+        if cfg.family == "mlp":
+            return mlp_mod.mlp_forward(params, cfg, batch["images"]), \
                 jnp.zeros((), jnp.float32)
         if cfg.family == "encdec":
             enc = encdec_mod.encode(params, cfg, batch["frames"],
@@ -139,11 +145,11 @@ class Model:
     def loss(self, params, batch, *, remat: bool = False
              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
         cfg = self.cfg
-        if self.ce_chunk and cfg.family not in ("cnn", "encdec"):
+        if self.ce_chunk and cfg.family not in ("cnn", "mlp", "encdec"):
             return self._chunked_ce(params, batch, remat=remat)
         logits, aux = self.forward_train(params, batch, remat=remat)
         labels = batch["labels"]
-        if cfg.family == "cnn":
+        if cfg.family in ("cnn", "mlp"):
             onehot_nll = softmax_cross_entropy(logits, labels)
             acc = token_accuracy(logits, labels)
             return onehot_nll, {"nll": onehot_nll, "accuracy": acc}
@@ -161,8 +167,8 @@ class Model:
     def prefill(self, params, batch, *, cache_len: int = 0
                 ) -> Tuple[jnp.ndarray, Dict]:
         cfg = self.cfg
-        if cfg.family == "cnn":
-            raise ValueError("cnn has no serving path")
+        if cfg.family in ("cnn", "mlp"):
+            raise ValueError(f"{cfg.family} has no serving path")
         if cfg.family == "encdec":
             enc = encdec_mod.encode(params, cfg, batch["frames"],
                                     attn_impl=self.attn_impl,

@@ -14,7 +14,7 @@ def rng():
 def make_lm_batch(cfg, B=2, S=16, key=0):
     ks = jax.random.split(jax.random.PRNGKey(key), 4)
     from repro.models.frontend_stub import stub_embeddings
-    if cfg.family == "cnn":
+    if cfg.family in ("cnn", "mlp"):
         return {
             "images": jax.random.normal(
                 ks[0], (B, cfg.image_size, cfg.image_size,

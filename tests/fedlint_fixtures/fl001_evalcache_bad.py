@@ -1,0 +1,34 @@
+"""FL001 bad fixture, eval-cache edition: a cross-round eval-batch
+cache that breaks the key discipline of DESIGN.md §10.
+
+The contract: cached tester eval batches must be a pure function of the
+handed-in run key and the schedule bucket — the gather indices are
+re-derived via ``fold_in`` on every miss. This cache instead mints a
+fresh PRNG literal per refill and reuses one key for two independent
+draws, so a cold cache, a warm cache and a restored run all sample
+different batches: the cache *key* (hit/miss pattern) leaks into the
+trajectory.
+"""
+import jax
+import jax.numpy as jnp
+
+
+class LeakyEvalBatchCache:
+    """Refills from a literal key, then double-draws it."""
+
+    def __init__(self, resample_every: int):
+        self.resample_every = resample_every
+        self._bucket = None
+        self._idx = None
+
+    def get(self, run_key, counts, eval_batch, round_idx):
+        bucket = round_idx // self.resample_every
+        if self._bucket == bucket and self._idx is not None:
+            return self._idx
+        fresh = jax.random.PRNGKey(11)          # literal, not the run key
+        u = jax.random.uniform(fresh, (counts.shape[0], eval_batch))
+        jitter = jax.random.uniform(fresh, (counts.shape[0], 1))  # reuse
+        self._bucket = bucket
+        self._idx = ((u + jitter) % 1.0 * counts[:, None]).astype(
+            jnp.int32)
+        return self._idx

@@ -1,0 +1,27 @@
+"""FL001 good fixture, eval-cache edition: the schedule-bucket cache of
+DESIGN.md §10 done right — the gather indices are a pure function of
+the handed-in run key and the round bucket, re-derived with ``fold_in``
+on every miss. No key is ever minted from a literal or stashed across
+rounds, so cold cache == warm cache == in-trace derivation, bitwise."""
+import jax
+import jax.numpy as jnp
+
+EVAL_BATCH_STREAM = 11
+
+
+class BucketEvalBatchCache:
+    def __init__(self, resample_every: int):
+        self.resample_every = resample_every
+        self._bucket = None
+        self._idx = None
+
+    def get(self, run_key, counts, eval_batch, round_idx):
+        bucket = round_idx // self.resample_every
+        if self._bucket == bucket and self._idx is not None:
+            return self._idx
+        k = jax.random.fold_in(
+            jax.random.fold_in(run_key, EVAL_BATCH_STREAM), bucket)
+        u = jax.random.uniform(k, (counts.shape[0], eval_batch))
+        self._bucket = bucket
+        self._idx = (u * counts[:, None]).astype(jnp.int32)
+        return self._idx

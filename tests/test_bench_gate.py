@@ -96,6 +96,45 @@ def test_main_end_to_end_with_baseline_dir(tmp_path):
                              "--baseline-dir", str(baseline)]) == 1
 
 
+def test_crosstest_rows_are_gated(tmp_path):
+    """The crosstest suite's batched rows carry roofline_frac and sit in
+    the same gate as the kernel rows: a synthetic >15% regression on a
+    crosstest row fails, the dispatch-only reference rows (no fraction)
+    are reported but never gated, and a tree with no crosstest baseline
+    yet (the suite's first landing) passes."""
+    base = [row("crosstest/stream_ref_C16_M1048576", 1.0),
+            row("crosstest/mlp_N8_reference", dispatches=8),
+            row("crosstest/mlp_N8", 0.30, dispatches=1, speedup=5.0)]
+    fresh_ok = [row("crosstest/stream_ref_C16_M1048576", 1.0),
+                row("crosstest/mlp_N8_reference", dispatches=8),
+                row("crosstest/mlp_N8", 0.28, dispatches=1, speedup=4.6)]
+    assert check_bench.compare_rows(base, fresh_ok,
+                                    suite="crosstest") == []
+
+    regressed = [row("crosstest/stream_ref_C16_M1048576", 1.0),
+                 row("crosstest/mlp_N8_reference", dispatches=8),
+                 row("crosstest/mlp_N8", 0.18, dispatches=1)]   # -40%
+    errs = check_bench.compare_rows(base, regressed, suite="crosstest")
+    assert len(errs) == 1 and "crosstest/mlp_N8" in errs[0]
+
+    # first landing: baseline dir has kernels but no crosstest file
+    baseline = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    baseline.mkdir()
+    fresh.mkdir()
+    (baseline / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.9)]))
+    (fresh / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.9)]))
+    (fresh / "BENCH_crosstest.json").write_text(json.dumps(regressed))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 0
+    # ...and once the baseline exists the same regression gates
+    (baseline / "BENCH_crosstest.json").write_text(json.dumps(base))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 1
+
+
 def _git(repo, *args):
     import subprocess
     subprocess.run(["git", *args], cwd=repo, check=True,

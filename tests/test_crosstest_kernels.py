@@ -1,0 +1,106 @@
+"""Kernel-routed eval consistency (DESIGN.md §10).
+
+The K×N cross-testing path always evaluates LMs through the kernel ops
+(``flash_attention`` / ``decode_attention`` / ``ssd_scan`` via
+:func:`~repro.core.cross_testing.kernel_route_model`), never the naive
+small-shape oracle. That routing must be behaviour-preserving: on the
+``benchmarks/bench_crosstest.py`` shapes the routed forward matches the
+naive XLA forward to the same tolerance ``test_decode_consistency``
+uses, and the resulting [K, N] accuracy matrices agree. The second half
+pins the dispatch discipline itself: the batched eval under the scanned
+driver traces the round body exactly once (``num_traces == 1``) — the
+fast path may not buy its speed with retraces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, TrainConfig, reduce_for_smoke
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.core.cross_testing import (cross_test_accuracies,
+                                      kernel_route_model, make_eval_fn,
+                                      resolve_eval_impl)
+from repro.data import MNIST_LIKE, make_federated_image_dataset
+from repro.models import build_model
+
+# the attention and SSM sides of the kernel routing, on the fast-mode
+# bench shapes (B, S) = (2, 64)
+LM_ARCHS = ["qwen2-0.5b", "mamba2-2.7b"]
+B, S = 2, 64
+K, N = 2, 3
+
+
+def _lm_case(arch):
+    cfg = reduce_for_smoke(get_config(arch)).replace(dtype="float32")
+    naive = build_model(cfg, attn_impl="naive", ssm_impl="naive")
+    tx = jax.random.randint(jax.random.PRNGKey(1), (K, B, S), 0,
+                            cfg.vocab_size)
+    ty = jax.random.randint(jax.random.PRNGKey(2), (K, B, S), -1,
+                            cfg.vocab_size)
+    return naive, tx, ty
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_routing_upgrades_naive(arch):
+    cfg = reduce_for_smoke(get_config(arch)).replace(dtype="float32")
+    naive = build_model(cfg, attn_impl="naive", ssm_impl="naive")
+    routed = kernel_route_model(naive)
+    impl = resolve_eval_impl()
+    assert routed.attn_impl == impl, routed.attn_impl
+    assert routed.ssm_impl == impl, routed.ssm_impl
+    # explicit impl choices are respected, cnn/mlp pass through untouched
+    pinned = build_model(cfg, attn_impl="xla", ssm_impl="xla")
+    assert kernel_route_model(pinned) is pinned
+    mlp = build_model(get_config("fedtest-mlp-mnist"))
+    assert kernel_route_model(mlp) is mlp
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_routed_forward_matches_naive(arch):
+    naive, tx, ty = _lm_case(arch)
+    routed = kernel_route_model(naive)
+    p = naive.init(jax.random.PRNGKey(0))
+    lg_naive, _ = jax.jit(naive.forward_train)(p, {"tokens": tx[0]})
+    lg_routed, _ = jax.jit(routed.forward_train)(p, {"tokens": tx[0]})
+    err = np.abs(np.asarray(lg_naive) - np.asarray(lg_routed)).max()
+    assert err < 3e-4, (arch, err)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_routed_eval_matrix_matches_naive(arch):
+    naive, tx, ty = _lm_case(arch)
+    stacked = jax.vmap(naive.init)(jax.random.split(jax.random.PRNGKey(0),
+                                                    N))
+    mats = {}
+    for label, route in (("routed", True), ("naive", False)):
+        eval_fn = make_eval_fn(naive, route_kernels=route)
+        fn = jax.jit(lambda s, x, y, _f=eval_fn: cross_test_accuracies(
+            _f, s, x, y, impl="batched"))
+        mats[label] = np.asarray(fn(stacked, tx, ty))
+    # accuracy is an argmax statistic: a sub-3e-4 logit wobble on random
+    # weights does not flip a vocab-sized argmax
+    np.testing.assert_allclose(mats["routed"], mats["naive"], atol=1e-6,
+                               err_msg=arch)
+    assert mats["routed"].shape == (K, N)
+
+
+def test_batched_eval_no_retrace_under_scan():
+    """The batched fast path under the scanned multi-round driver (with
+    the schedule-keyed eval-batch resampling active) must trace the
+    round body exactly once across all rounds."""
+    cfg = get_config("fedtest-mlp-mnist").replace(mlp_hidden=(32,))
+    model = build_model(cfg)
+    fed = FedConfig(num_users=4, num_testers=3, num_malicious=0,
+                    attack="none", participation=0.75, local_steps=2,
+                    crosstest_impl="batched", seed=0)
+    tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                     batch_size=8, grad_clip=0.0, remat=False)
+    data = make_federated_image_dataset(MNIST_LIKE, 4, num_samples=400,
+                                        global_test=64, seed=0)
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=16,
+                               rounds_per_call=2, eval_resample_every=2)
+    _, history = trainer.run(jax.random.PRNGKey(0), data, rounds=4)
+    assert trainer.num_traces == 1, trainer.num_traces
+    assert history["round"][-1] == 4

@@ -80,6 +80,20 @@ def test_fl001_pins_fault_mask_key_derivation():
     assert lint_fixture("fl001_fault_good.py", "FL001") == []
 
 
+def test_fl001_pins_eval_cache_key_derivation():
+    """DESIGN.md §10: a cross-round eval-batch cache must re-derive its
+    gather indices from the handed-in run key via ``fold_in`` on every
+    miss — a cache refilling from a PRNGKey literal (or double-drawing
+    one key) makes the trajectory depend on the hit/miss pattern."""
+    diags = lint_fixture("fl001_evalcache_bad.py", "FL001")
+    msgs = "\n".join(d.message for d in diags)
+    assert "PRNGKey(11)" in msgs, [d.format() for d in diags]
+    assert len(diags) >= 2            # the literal AND the key reuse
+    # the bucket-keyed fold_in cache (the shipped EvalBatchCache shape)
+    # is clean
+    assert lint_fixture("fl001_evalcache_good.py", "FL001") == []
+
+
 def test_fl004_severity_split():
     """One-sided apply/apply_local override is a warning (does not
     gate); missing protocol surface is an error."""

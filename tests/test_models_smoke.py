@@ -24,7 +24,7 @@ def test_forward_shapes_and_finite(arch):
     B, S = 2, 16
     batch = make_lm_batch(cfg, B, S)
     logits, aux = jax.jit(model.forward_train)(params, batch)
-    if cfg.family == "cnn":
+    if cfg.family in ("cnn", "mlp"):
         assert logits.shape == (B, cfg.num_classes)
     elif cfg.family == "vlm":
         assert logits.shape == (B, S + cfg.num_patches, cfg.vocab_size)

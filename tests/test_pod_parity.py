@@ -30,30 +30,40 @@ import numpy as np
 import pytest
 
 ROUNDS = 4
-# (attack, participation, coalition, selector, fault): coalition
-# scenarios run the mutual_boost report transform / sybil_split composed
-# model attack with 2 of the 4 clients coordinated (attack "none"
-# isolates the coalition machinery; the members still count as
-# malicious); the score_weighted / coverage cases pin the scores=
-# threading into Selector.select across backends (DESIGN.md §4); the
-# fault rows pin the availability mask (DESIGN.md §9) — it is composed
-# inside the shared program from keys.fault, so dropped clients must
-# zero out identically on every exchange topology
-CASES = [("none", 1.0, "none", "rotating", "none"),
-         ("none", 0.75, "none", "rotating", "none"),
-         ("sign_flip", 1.0, "none", "rotating", "none"),
-         ("sign_flip", 0.75, "none", "rotating", "none"),
-         ("adaptive_scale", 1.0, "none", "rotating", "none"),
-         ("adaptive_scale", 0.75, "none", "rotating", "none"),
-         ("none", 1.0, "mutual_boost", "rotating", "none"),
-         ("none", 0.75, "mutual_boost", "rotating", "none"),
-         ("none", 1.0, "sybil_split", "rotating", "none"),
-         ("none", 0.75, "sybil_split", "rotating", "none"),
-         ("none", 1.0, "mutual_boost", "score_weighted", "none"),
-         ("none", 0.75, "none", "coverage", "none"),
-         ("none", 1.0, "none", "rotating", "dropout"),
-         ("sign_flip", 0.75, "none", "rotating", "dropout"),
-         ("none", 1.0, "none", "rotating", "straggler_deadline")]
+# (attack, participation, coalition, selector, fault, crosstest_impl):
+# coalition scenarios run the mutual_boost report transform /
+# sybil_split composed model attack with 2 of the 4 clients coordinated
+# (attack "none" isolates the coalition machinery; the members still
+# count as malicious); the score_weighted / coverage cases pin the
+# scores= threading into Selector.select across backends (DESIGN.md §4);
+# the fault rows pin the availability mask (DESIGN.md §9) — it is
+# composed inside the shared program from keys.fault, so dropped clients
+# must zero out identically on every exchange topology. The
+# crosstest_impl axis (DESIGN.md §10) runs the same matrix through the
+# batched fast path (the shipped default) and keeps "reference" rows so
+# the serial dispatch schedule stays pinned across backends too — the
+# batched == reference comparison itself is asserted below on the rows
+# that differ only in impl.
+CASES = [("none", 1.0, "none", "rotating", "none", "batched"),
+         ("none", 0.75, "none", "rotating", "none", "batched"),
+         ("sign_flip", 1.0, "none", "rotating", "none", "batched"),
+         ("sign_flip", 0.75, "none", "rotating", "none", "batched"),
+         ("adaptive_scale", 1.0, "none", "rotating", "none", "batched"),
+         ("adaptive_scale", 0.75, "none", "rotating", "none", "batched"),
+         ("none", 1.0, "mutual_boost", "rotating", "none", "batched"),
+         ("none", 0.75, "mutual_boost", "rotating", "none", "batched"),
+         ("none", 1.0, "sybil_split", "rotating", "none", "batched"),
+         ("none", 0.75, "sybil_split", "rotating", "none", "batched"),
+         ("none", 1.0, "mutual_boost", "score_weighted", "none",
+          "batched"),
+         ("none", 0.75, "none", "coverage", "none", "batched"),
+         ("none", 1.0, "none", "rotating", "dropout", "batched"),
+         ("sign_flip", 0.75, "none", "rotating", "dropout", "batched"),
+         ("none", 1.0, "none", "rotating", "straggler_deadline",
+          "batched"),
+         ("none", 1.0, "none", "rotating", "none", "reference"),
+         ("sign_flip", 0.75, "none", "rotating", "none", "reference"),
+         ("none", 1.0, "none", "rotating", "dropout", "reference")]
 
 SCRIPT = r"""
 import os
@@ -91,7 +101,7 @@ mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
 tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
 
 results = {}
-for attack, participation, coalition, selector, fault in CASES:
+for attack, participation, coalition, selector, fault, impl in CASES:
     # a K < N committee makes the selector cases non-trivial (which
     # clients tester actually varies with the scores / schedule)
     fed = FedConfig(num_users=N,
@@ -101,7 +111,8 @@ for attack, participation, coalition, selector, fault in CASES:
                     coalition=coalition,
                     coalition_size=0 if coalition == "none" else 2,
                     selector=selector, fault=fault, fault_rate=0.25,
-                    participation=participation, local_steps=6, seed=0)
+                    participation=participation, local_steps=6,
+                    crosstest_impl=impl, seed=0)
 
     # ---- local (vmap) backend via the single-host driver --------------
     trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
@@ -155,7 +166,7 @@ for attack, participation, coalition, selector, fault in CASES:
             traj[exchange]["drop"].append(
                 float(m["dropped_fraction"]))
     results["|".join(map(str, (attack, participation, coalition,
-                               selector, fault)))] = traj
+                               selector, fault, impl)))] = traj
 
 print(json.dumps(results))
 """ % {"rounds": ROUNDS, "cases": CASES}
@@ -170,14 +181,15 @@ def test_three_backend_equivalence_matrix():
     assert proc.returncode == 0, proc.stderr[-3000:]
     results = json.loads(proc.stdout.strip().splitlines()[-1])
 
-    for attack, participation, coalition, selector, fault in CASES:
+    for attack, participation, coalition, selector, fault, impl in CASES:
         traj = results["|".join(map(str, (attack, participation,
-                                          coalition, selector, fault)))]
+                                          coalition, selector, fault,
+                                          impl)))]
         ref = traj["local"]
         for backend in ("ring", "allgather"):
             other = traj[backend]
             tag = (attack, participation, coalition, selector, fault,
-                   backend)
+                   impl, backend)
             for r in range(ROUNDS):
                 # bit-identical round dynamics: the three backends run
                 # the same program on the same replicated arrays
@@ -204,20 +216,33 @@ def test_three_backend_equivalence_matrix():
 
     # the adversarial cases actually engage the attacker: its weight
     # trajectory must differ from the honest run's last slot
-    honest = results["none|1.0|none|rotating|none"]["local"]["w"]
-    flipped = results["sign_flip|1.0|none|rotating|none"]["local"]["w"]
+    honest = results["none|1.0|none|rotating|none|batched"]["local"]["w"]
+    flipped = results[
+        "sign_flip|1.0|none|rotating|none|batched"]["local"]["w"]
     assert honest != flipped
     # ...and the coalition cases actually engage the coalition: both
     # the report transform (mutual_boost) and the composed model attack
     # (sybil_split) must move the dynamics off the honest trajectory,
     # and the members (clients 2, 3) must register as malicious weight
     for coalition in ("mutual_boost", "sybil_split"):
-        coal = results[f"none|1.0|{coalition}|rotating|none"]["local"]
+        coal = results[
+            f"none|1.0|{coalition}|rotating|none|batched"]["local"]
         assert coal["w"] != honest, coalition
         assert any(m > 0.0 for m in coal["mal_w"]), coalition
     # ...and the fault rows actually drop someone at rate 0.25 over
     # 4 clients x 4 rounds (the composed mask is also pinned above via
     # the zero-weight pattern replay)
     for fault in ("dropout", "straggler_deadline"):
-        faulty = results[f"none|1.0|none|rotating|{fault}"]["local"]
+        faulty = results[
+            f"none|1.0|none|rotating|{fault}|batched"]["local"]
         assert any(d > 0.0 for d in faulty["drop"]), fault
+    # the crosstest_impl axis (DESIGN.md §10): rows that differ only in
+    # the dispatch model must have bit-identical full trajectories on
+    # every backend — the fast path may not move a single bit
+    for key in ("none|1.0|none|rotating|none",
+                "sign_flip|0.75|none|rotating|none",
+                "none|1.0|none|rotating|dropout"):
+        batched, reference = (results[f"{key}|batched"],
+                              results[f"{key}|reference"])
+        for backend in ("local", "ring", "allgather"):
+            assert batched[backend] == reference[backend], (key, backend)

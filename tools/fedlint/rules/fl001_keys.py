@@ -98,8 +98,12 @@ class KeyDiscipline(Rule):
         # still checked there).
         "check_helper_reuse": True,
         # repo-sanctioned derivation helpers: like fold_in, calling them
-        # does not consume the key they derive from.
-        "non_consuming_helpers": ["round_keys"],
+        # does not consume the key they derive from. The eval-batch
+        # helpers (repro.core.cross_testing, DESIGN.md §10) fold_in the
+        # EVAL_BATCH_STREAM constant before any draw, so handing them
+        # the run key leaves it unconsumed.
+        "non_consuming_helpers": ["round_keys", "sampled_eval_batches",
+                                  "eval_batch_indices"],
         # names assigned from these constructors hold a *bundle* of
         # already-derived keys (RoundKeys); handing the bundle to the
         # engine's entry points is the schedule, not a reuse.
