@@ -1,8 +1,12 @@
 """Communication-cost accounting (paper Sec. V-A): orthogonal-RB uplink
-volume per round, D2D tester traffic, and the pod-side ring vs all-gather
-exchange volume for the distributed FedTest round."""
+volume per round, D2D tester traffic, the pod-side ring vs all-gather
+exchange volume for the distributed FedTest round, and the *measured*
+cohort-gather volume of the population tier (DESIGN.md §11) next to the
+modelled dense exchange it replaces."""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
@@ -30,6 +34,38 @@ def main(fast: bool = True):
             emit(f"comm/pod_ring_{arch}_N{N}", 0.0,
                  f"exchange_GB_per_client={ring / 1e9:.2f} "
                  f"peak_mem_models=2 allgather_peak_models={N}")
+
+    # measured bytes one population-tier round moves (DESIGN.md §11):
+    # the *actual* ``.nbytes`` of the arrays a cohort round gathers —
+    # C model uploads + the cohort's train batches + the K testers'
+    # eval rows + the dense [N] score/mask vectors — next to the
+    # modelled dense exchange at the same N, which is what the cohort
+    # gather replaces. The dense rows above are closed-form; these are
+    # summed off concrete device arrays so the accounting cannot drift
+    # from the engine's real gather surface.
+    from repro.data.population import make_synthetic_population
+    from repro.models import build_model
+
+    cfg = get_config("fedtest-mlp-mnist").replace(mlp_hidden=(32,))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    pbytes = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(params))
+    K, eval_batch, local_steps, batch = 4, 8, 1, 4
+    for N, C in [(10_000, 64), (100_000, 64)]:
+        data = make_synthetic_population(N, per_client=16, global_test=64,
+                                         server=64, seed=0)
+        cx, cy = data.cohort_train(jnp.arange(C))
+        bx, by = (cx[:, :local_steps * batch], cy[:, :local_steps * batch])
+        tx, ty = data.tester_batches(jnp.arange(K), eval_batch)
+        scores = jnp.zeros((N,), jnp.float32)
+        batch_bytes = sum(int(a.nbytes) for a in (bx, by, tx, ty))
+        state_bytes = 3 * int(scores.nbytes)    # scores + mask + losses
+        gather = C * pbytes + batch_bytes + state_bytes
+        dense_ring = (N - 1) * pbytes
+        emit(f"comm/population_gather_N{N}_C{C}", 0.0,
+             f"measured_MB={gather / 1e6:.2f} "
+             f"dense_ring_MB={dense_ring / 1e6:.1f} "
+             f"reduction={dense_ring / gather:.0f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,152 @@
+"""Population-tier N-sweep: per-round cost flat in N (DESIGN.md §11).
+
+Times one steady-state jitted round of the cohort engine
+(:class:`~repro.core.engine.population.PopulationTrainer`, C = 64) over
+N ∈ {10³, 10⁴, 10⁵} synthetic clients — :class:`~repro.data.population.
+SyntheticPopulation` derives shards on gather, so no [N, ...] data
+stack ever exists — next to dense :class:`~repro.core.engine.driver.
+FederatedTrainer` reference rows at N ≤ 10³. The dense engine
+replicates the [N, D] model stack every round, so its wall time and
+model memory are linear in N where the population rows stay flat
+(EXPERIMENTS.md §Population-bench); the in-bench assertion pins the
+headline: the 10⁵-client round must cost < 3× the 10³-client round.
+
+Each row carries ``clients`` / ``cohort`` / ``model_mem_bytes`` (the
+per-device model high-water mark: C × params for the cohort engine,
+N × params for dense). ``population/cohort_aggregate`` carries
+``roofline_frac`` against the measured ``weighted_aggregate`` stream
+reference — the row ``tools/check_bench.py`` gates; the wall-time
+sweep rows ride in the artifact as the committed trajectory.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAST, emit, timeit
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core.engine.driver import FederatedTrainer
+from repro.core.engine.population import PopulationTrainer
+from repro.data.builders import make_federated_image_dataset
+from repro.data.population import make_synthetic_population
+from repro.data.synthetic import MNIST_LIKE
+from repro.kernels.weighted_aggregate.ops import weighted_aggregate
+
+COHORT = 64
+POPULATIONS = (1_000, 10_000, 100_000)   # cohort-engine sweep
+DENSE = (250, 1_000)                     # linear reference rows
+K = 4                                    # testers
+EVAL_BATCH = 8
+BLOCK = 16                               # [K, block_C] eval tiles
+
+
+def _param_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def _model():
+    from repro.models import build_model
+    cfg = get_config("fedtest-mlp-mnist").replace(mlp_hidden=(32,))
+    return build_model(cfg)
+
+
+def _train_cfg() -> TrainConfig:
+    return TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                       batch_size=4, grad_clip=0.0, remat=False)
+
+
+def _time_population(n: int, model, iters: int):
+    fed = FedConfig(num_users=n, num_testers=K, num_malicious=0,
+                    attack="none", local_steps=1, cohort=COHORT,
+                    participation=COHORT / n, rounds=1)
+    data = make_synthetic_population(n, per_client=16, global_test=64,
+                                     server=64, seed=0)
+    trainer = PopulationTrainer(model, fed, _train_cfg(),
+                                eval_batch=EVAL_BATCH,
+                                crosstest_block=BLOCK,
+                                testers_from_cohort=True)
+    state = trainer.init(jax.random.PRNGKey(0))
+    return timeit(trainer._round_fn, state, data, iters=iters)
+
+
+def _time_dense(n: int, model, iters: int):
+    fed = FedConfig(num_users=n, num_testers=K, num_malicious=0,
+                    attack="none", local_steps=1, rounds=1)
+    # iid partition so every client holds enough rows for the holdout
+    # eval slice; ~45 rows/client keeps the [N, M, ...] stack modest
+    data = make_federated_image_dataset(MNIST_LIKE, n,
+                                        num_samples=45 * n,
+                                        partition="iid", global_test=64,
+                                        seed=0)
+    trainer = FederatedTrainer(model, fed, _train_cfg(),
+                               eval_batch=EVAL_BATCH)
+    state = trainer.init(jax.random.PRNGKey(0))
+    return timeit(trainer._round_fn, state, data, iters=iters)
+
+
+def main(fast: bool = FAST):
+    iters = 3 if fast else 5
+    model = _model()
+    pbytes = _param_bytes(model.init(jax.random.PRNGKey(0)))
+
+    # the streaming-bandwidth roofline reference, measured on this host
+    # back-to-back with the gated row (same idiom as bench_crosstest)
+    C, M = (16, 1 << 20) if fast else (16, 1 << 22)
+    xw = jax.random.normal(jax.random.PRNGKey(3), (C, M), jax.numpy.float32)
+    ww = jax.random.uniform(jax.random.PRNGKey(4), (C,))
+    fn = jax.jit(lambda x, w: weighted_aggregate(x, w, impl="auto"))
+    us = timeit(fn, xw, ww)
+    ref_gbps = C * M * 4 / (us / 1e6) / 1e9
+    emit(f"population/stream_ref_C{C}_M{M}", us,
+         f"read_GBps={ref_gbps:.2f}", gbps=round(ref_gbps, 2),
+         roofline_frac=1.0)
+
+    # the cohort engine's server op: one fused weighted sum over the
+    # gathered [C, D] stack — the bandwidth-bound row the perf gate
+    # tracks across commits
+    Ma = (1 << 18) if fast else (1 << 20)
+    xa = jax.random.normal(jax.random.PRNGKey(5), (COHORT, Ma),
+                           jax.numpy.float32)
+    wa = jax.random.uniform(jax.random.PRNGKey(6), (COHORT,))
+    us = timeit(fn, xa, wa)
+    gbps = COHORT * Ma * 4 / (us / 1e6) / 1e9
+    emit(f"population/cohort_aggregate_C{COHORT}", us,
+         f"read_GBps={gbps:.2f}", gbps=round(gbps, 2),
+         roofline_frac=round(gbps / ref_gbps, 4))
+
+    dense_us = {}
+    for n in DENSE:
+        us = _time_dense(n, model, iters)
+        dense_us[n] = us
+        emit(f"population/dense_N{n}", us,
+             f"model_mem_MB={n * pbytes / 1e6:.1f}",
+             clients=n, model_mem_bytes=n * pbytes)
+
+    pop_us = {}
+    for n in POPULATIONS:
+        us = _time_population(n, model, iters)
+        pop_us[n] = us
+        emit(f"population/pop_N{n}_C{COHORT}", us,
+             f"model_mem_MB={COHORT * pbytes / 1e6:.2f} "
+             f"vs_dense_mem={n / COHORT:.0f}x",
+             clients=n, cohort=COHORT,
+             model_mem_bytes=COHORT * pbytes)
+
+    # the headline: per-round cost flat in N across two decades where
+    # the dense engine is linear by construction
+    lo, hi = pop_us[POPULATIONS[0]], pop_us[POPULATIONS[-1]]
+    emit(f"population/flatness_N{POPULATIONS[0]}_to_N{POPULATIONS[-1]}",
+         hi, f"ratio={hi / lo:.2f}x_over_{POPULATIONS[-1] // POPULATIONS[0]}x_clients",
+         ratio=round(hi / lo, 2))
+    assert hi < 3.0 * lo, (
+        f"population round not flat in N: {hi:.0f}us at "
+        f"N={POPULATIONS[-1]} vs {lo:.0f}us at N={POPULATIONS[0]} "
+        f"(ratio {hi / lo:.2f}x >= 3x)")
+    assert pop_us[1_000] < dense_us[1_000], (
+        f"cohort engine slower than dense at N=1000: "
+        f"{pop_us[1_000]:.0f}us vs {dense_us[1_000]:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

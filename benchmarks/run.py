@@ -22,6 +22,7 @@ SUITES = [
     ("crosstest", "benchmarks.bench_crosstest"),      # K×N eval fast path
     ("aggregation", "benchmarks.bench_aggregation"),  # FedTest server op
     ("comm", "benchmarks.bench_comm"),                # Sec. V-A accounting
+    ("population", "benchmarks.bench_population"),    # cohort N-sweep (§11)
     ("roofline", "benchmarks.bench_roofline"),        # dry-run artifacts
     ("score_power", "benchmarks.bench_score_power"),  # Sec. V-B ablation
     ("testers", "benchmarks.bench_testers"),          # Sec. V-C ablation
@@ -29,7 +30,7 @@ SUITES = [
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 
-JSON_SUITES = {"aggregation", "kernels", "crosstest"}
+JSON_SUITES = {"aggregation", "kernels", "crosstest", "population"}
 
 
 def main() -> int:

@@ -253,11 +253,25 @@ class FedConfig:
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
     crosstest_impl: str = "batched"  # cross-testing dispatch (DESIGN.md §10)
+    # population tier (DESIGN.md §11): per-round cohort slot capacity.
+    # 0 = dense (every backend materialises all N models); C > 0 runs
+    # the round on the C sampled clients' gathered models only.
+    cohort: int = 0
     seed: int = 0
 
     def __post_init__(self) -> None:
         _require(0 < self.num_testers <= self.num_users,
                  "need 0 < K <= N")
+        _require(0 <= self.cohort <= self.num_users,
+                 f"cohort={self.cohort} must be in [0, "
+                 f"num_users={self.num_users}] (C > N gathers clients "
+                 "that do not exist)")
+        if 0 < self.cohort < self.num_users:
+            _require(self.participation < 1.0,
+                     "cohort < num_users requires participation < 1.0 "
+                     "(with everyone sampled, cohort truncation would "
+                     "bias toward low client indices); set "
+                     "participation ≈ cohort/num_users")
         _require(self.num_malicious < self.num_users, "M < N")
         _require(self.coalition_size < self.num_users,
                  "coalition_size < N")

@@ -6,8 +6,9 @@ CLI ``--arch`` id (dashes allowed) to the config.
 """
 from repro.configs.registry import ARCH_IDS, get_config, list_configs
 from repro.configs.scenarios import (
-    SCENARIOS, get_scenario, list_scenarios, scenario_for_pod)
+    SCENARIOS, get_scenario, list_scenarios, scenario_for_pod,
+    scenario_for_population)
 
 __all__ = ["get_config", "list_configs", "ARCH_IDS",
            "get_scenario", "list_scenarios", "scenario_for_pod",
-           "SCENARIOS"]
+           "scenario_for_population", "SCENARIOS"]

@@ -163,3 +163,33 @@ def scenario_for_pod(name: str, num_clients: int) -> FedConfig:
         # name with the members or FedConfig rejects the vacuous config
         coalition=fed.coalition if coal else "none",
         coalition_kwargs=ckw, coalition_size=coal)
+
+
+def scenario_for_population(name: str, population: int, cohort: int
+                            ) -> FedConfig:
+    """Refit a named preset onto the population tier (DESIGN.md §11).
+
+    Reuses :func:`scenario_for_pod`'s size refit — ``num_users`` becomes
+    the population, testers/malicious clamp, coalitions rescale by
+    fraction (so a preset's static member set can never land outside
+    the population) — then sets the cohort capacity and refits the
+    Bernoulli sampling rate to ``cohort / population`` so the expected
+    per-round cohort matches the buffer. A preset's own partial
+    participation is *replaced*, not composed: on the population tier
+    the sampling rate **is** the cohort budget, and keeping a dense
+    preset's 0.75 at N = 10⁴ would oversubscribe a C = 64 buffer ~100×
+    (truncation would then bias toward low client indices). Raises
+    loudly when ``cohort > population``.
+    """
+    if not 1 <= cohort <= population:
+        raise ValueError(
+            f"cohort={cohort} must be in [1, population={population}] — "
+            "a cohort larger than the population gathers clients that "
+            "do not exist")
+    fed = scenario_for_pod(name, population)
+    if cohort < population:
+        fed = dataclasses.replace(fed, cohort=cohort,
+                                  participation=cohort / population)
+    else:
+        fed = dataclasses.replace(fed, cohort=cohort)
+    return fed

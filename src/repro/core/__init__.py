@@ -19,19 +19,20 @@ from repro.core.aggregation import (
 from repro.core.attacks import apply_attacks, ATTACKS
 from repro.core.cross_testing import (
     CROSSTEST_IMPLS, EvalBatchCache, cross_test_accuracies,
-    cross_test_batched, cross_test_reference, eval_batch_indices,
-    kernel_route_model, make_eval_fn, sampled_eval_batches)
+    cross_test_batched, cross_test_reference, cross_test_tiled,
+    eval_batch_indices, kernel_route_model, make_eval_fn,
+    sampled_eval_batches)
 from repro.core.selection import select_testers, rb_schedule
 from repro.core.engine import (
-    FederatedTrainer, RoundState, resolve_strategies)
+    FederatedTrainer, PopulationTrainer, RoundState, resolve_strategies)
 
 __all__ = [
     "ScoreState", "init_scores", "update_scores", "score_weights",
     "fedavg_weights", "accuracy_based_weights", "aggregate_models",
     "apply_attacks", "ATTACKS", "CROSSTEST_IMPLS", "EvalBatchCache",
     "cross_test_accuracies", "cross_test_batched", "cross_test_reference",
-    "eval_batch_indices", "kernel_route_model", "make_eval_fn",
-    "sampled_eval_batches",
-    "select_testers", "rb_schedule", "FederatedTrainer", "RoundState",
-    "resolve_strategies",
+    "cross_test_tiled", "eval_batch_indices", "kernel_route_model",
+    "make_eval_fn", "sampled_eval_batches",
+    "select_testers", "rb_schedule", "FederatedTrainer",
+    "PopulationTrainer", "RoundState", "resolve_strategies",
 ]

@@ -142,6 +142,42 @@ def cross_test_accuracies(eval_fn, stacked_params, tester_x, tester_y,
         f"crosstest impl must be one of {CROSSTEST_IMPLS}, got {impl!r}")
 
 
+def cross_test_tiled(eval_fn, stacked_params, tester_x, tester_y, *,
+                     block: int = 0, impl: str = "batched") -> jnp.ndarray:
+    """Stream the accuracy matrix in [K, block] tiles over the model axis.
+
+    The population tier's entry point (DESIGN.md §11): instead of one
+    fused [K, C] dispatch whose live eval activations scale with the
+    whole cohort, ``lax.map`` walks the cohort in blocks of ``block``
+    models, bounding peak activation memory at [K, block] while the
+    parameter stack stays gathered once. ``block <= 0`` (or >= C)
+    degenerates to the single fused call. A ragged tail is wrap-padded
+    with leading cohort rows and sliced off after the map — padding rows
+    are recomputed work, never values that reach the caller, so the
+    result is bitwise identical to the untiled matrix for every block
+    size (pinned by ``tests/test_population.py``).
+    """
+    c = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    if block <= 0 or block >= c:
+        return cross_test_accuracies(eval_fn, stacked_params,
+                                     tester_x, tester_y, impl=impl)
+    num_blocks = -(-c // block)
+    pad = num_blocks * block - c
+
+    def to_blocks(t):
+        if pad:
+            t = jnp.concatenate([t, t[:pad]], axis=0)
+        return t.reshape((num_blocks, block) + t.shape[1:])
+
+    blocks = jax.tree_util.tree_map(to_blocks, stacked_params)
+    acc = jax.lax.map(
+        lambda blk: cross_test_accuracies(eval_fn, blk, tester_x,
+                                          tester_y, impl=impl),
+        blocks)                                         # [nb, K, block]
+    k = acc.shape[1]
+    return jnp.moveaxis(acc, 0, 1).reshape(k, num_blocks * block)[:, :c]
+
+
 # --------------------------------------------------------- eval-batch caching
 def eval_batch_indices(run_key, counts: jnp.ndarray, eval_batch: int,
                        bucket) -> jnp.ndarray:

@@ -17,22 +17,31 @@ topology-specific mechanics:
 ``tests/test_pod_parity.py`` pins the three backends bit-identical on
 weights, scores and malicious-weight trajectories across the
 attack x participation matrix.
+
+Above the dense backends sits the **population tier** (DESIGN.md §11):
+:class:`PopulationBackend` / :class:`PopulationTrainer` run the same
+``RoundProgram`` on a gathered [C]-cohort model stack with dense [N]
+score state — per-round cost flat in N, pinned bit-identical to the
+``local`` backend at small N (``tests/test_population.py``).
 """
 from repro.core.engine.backends import (
     AllgatherBackend, ExchangeBackend, LocalBackend, PodBackend,
     RingBackend, make_allgather_round, make_distributed_round,
     make_pod_round, ring_cross_test)
 from repro.core.engine.driver import FederatedTrainer, RoundState
+from repro.core.engine.population import (
+    CohortModels, PopulationBackend, PopulationTrainer, cohort_from_mask)
 from repro.core.engine.program import (
     RoundKeys, RoundProgram, aggregator_defaults, compose_fault_mask,
     participation_mask, renormalize_over_subset, resolve_coalition,
     resolve_fault, resolve_strategies, round_keys)
 
 __all__ = [
-    "AllgatherBackend", "ExchangeBackend", "FederatedTrainer",
-    "LocalBackend", "PodBackend", "RingBackend", "RoundKeys",
+    "AllgatherBackend", "CohortModels", "ExchangeBackend",
+    "FederatedTrainer", "LocalBackend", "PodBackend",
+    "PopulationBackend", "PopulationTrainer", "RingBackend", "RoundKeys",
     "RoundProgram", "RoundState", "aggregator_defaults",
-    "compose_fault_mask", "make_allgather_round",
+    "cohort_from_mask", "compose_fault_mask", "make_allgather_round",
     "make_distributed_round", "make_pod_round", "participation_mask",
     "renormalize_over_subset", "resolve_coalition", "resolve_fault",
     "resolve_strategies", "ring_cross_test", "round_keys",

@@ -65,7 +65,7 @@ class FederatedTrainer:
             agg_impl=self.agg_impl, batch_builder=self.batch_builder)
         impl = self.crosstest_impl or getattr(self.fed, "crosstest_impl",
                                               "batched")
-        self.backend = LocalBackend(self.fed.num_users, impl)
+        self.backend = self._make_backend(impl)
         # strategy handles (public API, also used by tests/benchmarks)
         self.opt = self.program.opt
         self.aggregator = self.program.aggregator
@@ -79,6 +79,10 @@ class FederatedTrainer:
         self._scan_fn = (jax.jit(self._multi_round, donate_argnums=0)
                          if self.rounds_per_call > 1 else None)
         self._global_eval = jax.jit(self._global_eval_impl)
+
+    def _make_backend(self, impl: str):
+        """Backend factory hook — the population tier overrides this."""
+        return LocalBackend(self.fed.num_users, impl)
 
     # ------------------------------------------------------------------ init
     def init(self, key) -> RoundState:

@@ -6,10 +6,14 @@ from repro.data.pipeline import (
     ClientData, FederatedDataset, sample_client_batches,
     split_client_holdout)
 from repro.data.builders import make_federated_image_dataset
+from repro.data.population import (
+    DensePopulationData, SyntheticPopulation, make_synthetic_population)
 
 __all__ = [
     "make_image_dataset", "make_token_stream", "CIFAR_LIKE", "MNIST_LIKE",
     "paper_noniid_partition", "dirichlet_partition", "build_client_arrays",
     "ClientData", "FederatedDataset", "sample_client_batches",
     "split_client_holdout", "make_federated_image_dataset",
+    "DensePopulationData", "SyntheticPopulation",
+    "make_synthetic_population",
 ]

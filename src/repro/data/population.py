@@ -1,0 +1,168 @@
+"""Population-scale data providers for the cohort engine (DESIGN.md §11).
+
+The dense :class:`~repro.data.pipeline.FederatedDataset` materialises
+every client's shard as rows of one [N, M, ...] stack — at N = 10⁵ the
+stack alone is tens of GB, and the population tier never reads more
+than the sampled cohort's rows anyway. A *population provider* exposes
+exactly the gather surface :class:`~repro.core.engine.population.
+PopulationTrainer` needs:
+
+* ``train_counts``            — [N] per-client sample counts (cheap)
+* ``cohort_train(idx)``       — the cohort's [C, M, ...] train shards
+* ``tester_batches(ids, b)``  — the K testers' [K, b, ...] eval rows
+* ``server_batch(b)``         — the server's (sx, sy) eval slice
+* ``global_x`` / ``global_y`` — the convergence-curve eval set
+
+Two implementations:
+
+:class:`DensePopulationData` wraps an existing materialised dataset —
+the parity bridge: its gathers return bitwise the rows the dense driver
+reads, so small-N population runs pin against ``FederatedTrainer``
+exactly (``tests/test_population.py``).
+
+:class:`SyntheticPopulation` materialises nothing per-client: shards
+are derived on demand from ``fold_in(key, client)`` streams over shared
+class prototypes, so a 10⁵-client population costs O(prototypes), and
+only the sampled cohort's images ever exist on device — the provider
+behind ``benchmarks/bench_population.py``'s N-sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import FederatedDataset
+
+# disjoint fold_in constants deriving the per-client data streams from
+# the provider's base key (FL001: derive, never reuse)
+TRAIN_STREAM = 0
+TEST_STREAM = 1
+GLOBAL_STREAM = 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DensePopulationData:
+    """Population view over a materialised :class:`FederatedDataset`.
+
+    Gathers return the same rows (bitwise) the dense driver reads from
+    the stacked arrays — the small-N parity bridge.
+    """
+
+    dense: FederatedDataset
+
+    @property
+    def num_clients(self) -> int:
+        return self.dense.train.num_clients
+
+    @property
+    def train_counts(self) -> jnp.ndarray:
+        return self.dense.train.counts
+
+    @property
+    def global_x(self) -> jnp.ndarray:
+        return self.dense.global_x
+
+    @property
+    def global_y(self) -> jnp.ndarray:
+        return self.dense.global_y
+
+    def cohort_train(self, idx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.dense.train.xs[idx], self.dense.train.ys[idx]
+
+    def tester_batches(self, tester_ids, eval_batch: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        # gather-then-slice == the dense driver's slice-then-gather
+        return (self.dense.test.xs[tester_ids][:, :eval_batch],
+                self.dense.test.ys[tester_ids][:, :eval_batch])
+
+    def server_batch(self, eval_batch: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (self.dense.server_x[:eval_batch],
+                self.dense.server_y[:eval_batch])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SyntheticPopulation:
+    """Derive-on-gather population: shards exist only while sampled.
+
+    Client ``i``'s train shard is a pure function of
+    ``fold_in(fold_in(key, TRAIN_STREAM), i)`` over the shared class
+    prototypes (class-conditional images + Gaussian noise, the
+    ``repro.data.synthetic`` recipe), its tester shard of the disjoint
+    ``TEST_STREAM`` — so gathers are deterministic, resume-stable, and
+    O(cohort) in memory regardless of the population size.
+    """
+
+    key: jnp.ndarray                 # base data key
+    protos: jnp.ndarray              # [num_classes, H, W, C] prototypes
+    global_x: jnp.ndarray
+    global_y: jnp.ndarray
+    server_x: jnp.ndarray
+    server_y: jnp.ndarray
+    num_clients: int = dataclasses.field(metadata=dict(static=True))
+    per_client: int = dataclasses.field(metadata=dict(static=True))
+    noise: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_classes(self) -> int:
+        return self.protos.shape[0]
+
+    @property
+    def train_counts(self) -> jnp.ndarray:
+        return jnp.full((self.num_clients,), self.per_client, jnp.int32)
+
+    def _shard(self, key, rows: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        ky, kn = jax.random.split(key)
+        labels = jax.random.randint(ky, (rows,), 0, self.num_classes)
+        imgs = (self.protos[labels]
+                + self.noise * jax.random.normal(
+                    kn, (rows,) + self.protos.shape[1:]))
+        return imgs, labels
+
+    def cohort_train(self, idx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        base = jax.random.fold_in(self.key, TRAIN_STREAM)
+        return jax.vmap(
+            lambda i: self._shard(jax.random.fold_in(base, i),
+                                  self.per_client))(idx)
+
+    def tester_batches(self, tester_ids, eval_batch: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        base = jax.random.fold_in(self.key, TEST_STREAM)
+        return jax.vmap(
+            lambda i: self._shard(jax.random.fold_in(base, i),
+                                  eval_batch))(tester_ids)
+
+    def server_batch(self, eval_batch: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.server_x[:eval_batch], self.server_y[:eval_batch]
+
+
+def make_synthetic_population(num_clients: int, *, per_client: int = 16,
+                              image_size: int = 28, channels: int = 1,
+                              num_classes: int = 10, noise: float = 0.45,
+                              global_test: int = 256, server: int = 128,
+                              seed: int = 0) -> SyntheticPopulation:
+    """Build a :class:`SyntheticPopulation` of ``num_clients`` clients.
+
+    Only the prototypes and the small global/server eval sets are
+    materialised — construction cost is independent of ``num_clients``.
+    """
+    key = jax.random.PRNGKey(seed)
+    k_proto, k_data = jax.random.split(key)
+    protos = jax.random.normal(
+        k_proto, (num_classes, image_size, image_size, channels))
+    pop = SyntheticPopulation(
+        key=k_data, protos=protos,
+        global_x=jnp.zeros((0,)), global_y=jnp.zeros((0,)),
+        server_x=jnp.zeros((0,)), server_y=jnp.zeros((0,)),
+        num_clients=num_clients, per_client=per_client, noise=noise)
+    gbase = jax.random.fold_in(k_data, GLOBAL_STREAM)
+    gx, gy = pop._shard(jax.random.fold_in(gbase, 0), global_test)
+    sx, sy = pop._shard(jax.random.fold_in(gbase, 1), server)
+    return dataclasses.replace(pop, global_x=gx, global_y=gy,
+                               server_x=sx, server_y=sy)

@@ -45,6 +45,23 @@ _FED_CLI_DEFAULTS = dict(
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--population", type=int, default=None,
+                    help="run the population tier (DESIGN.md §11): N "
+                         "simulated clients, per-round compute on the "
+                         "sampled cohort only, the [C] cohort axis "
+                         "GSPMD-sharded across the --clients devices")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="cohort slot capacity C for --population; must "
+                         "divide evenly across --clients devices. The "
+                         "Bernoulli sampling rate is refit to C/N. "
+                         "Errors loudly when C > N")
+    ap.add_argument("--testers-from-cohort", action="store_true",
+                    help="population tier: recruit the round's testing "
+                         "committee from the sampled cohort instead of "
+                         "the whole population (at C << N a "
+                         "population-wide tester almost never "
+                         "participates, so every report row is masked "
+                         "and scoring degenerates; DESIGN.md §11)")
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=8)
@@ -148,6 +165,10 @@ def main():
         raise SystemExit(f"need {N} devices, have {len(jax.devices())}; "
                          "set XLA_FLAGS before running")
     mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+
+    if args.population is not None:
+        _run_population(args, mesh)
+        return
 
     arch = ("fedtest-cnn-mnist" if args.dataset == "mnist_like"
             else "fedtest-cnn")
@@ -254,6 +275,114 @@ def main():
                 f"malicious_weight={final:.4f} did not drop below "
                 f"{args.assert_malicious_below} after {args.rounds} "
                 "rounds")
+        print(f"assert ok: malicious_weight={final:.4f} < "
+              f"{args.assert_malicious_below}")
+
+
+def _run_population(args, mesh):
+    """--population path: cohort engine, [C] axis sharded over the mesh.
+
+    The pod path pins one client per device; the population tier
+    instead shards the *cohort* stack across the same ``clients`` mesh
+    axis via GSPMD (DESIGN.md §11), so N is decoupled from the device
+    count. Cross-device reductions are not bitwise-stable, so this path
+    is gated on adversary suppression (``--assert-malicious-below``),
+    not bit-parity — the unsharded parity matrix lives in
+    ``tests/test_population.py``.
+    """
+    import dataclasses as dc
+    import jax
+
+    from repro.config import FedConfig, TrainConfig
+    from repro.configs import get_config, scenario_for_population
+    from repro.core.engine import PopulationTrainer
+    from repro.data import CIFAR_LIKE, MNIST_LIKE
+    from repro.data.population import make_synthetic_population
+
+    if args.cohort is None:
+        raise SystemExit("--population requires --cohort")
+    if args.cohort % args.clients != 0:
+        raise SystemExit(
+            f"--cohort {args.cohort} must divide evenly across "
+            f"--clients {args.clients} devices for the cohort-axis "
+            "sharding")
+
+    passed = dict(num_testers=args.testers, num_malicious=args.malicious,
+                  local_steps=args.local_steps,
+                  aggregator=args.aggregator,
+                  attack=args.attack, attack_kwargs=args.attack_kwargs,
+                  attack_scale=args.attack_scale,
+                  selector=args.selector,
+                  coalition=args.coalition,
+                  coalition_size=args.coalition_size,
+                  coalition_kwargs=args.coalition_kwargs,
+                  fault=args.fault, fault_kwargs=args.fault_kwargs,
+                  fault_rate=args.fault_rate,
+                  crosstest_impl=args.crosstest_impl,
+                  rounds=args.rounds, seed=args.seed)
+    passed = {f: v for f, v in passed.items() if v is not None}
+    if args.scenario:
+        # errors loudly on C > N; coalition membership refits inside
+        # the population, so a preset's static member set can never
+        # fall outside it
+        fed = scenario_for_population(args.scenario, args.population,
+                                      args.cohort)
+        fed = dc.replace(fed, **passed)
+    else:
+        base = dict(_FED_CLI_DEFAULTS, num_testers=min(8, args.cohort))
+        base.update(passed)
+        base.update(num_users=args.population, cohort=args.cohort,
+                    participation=(args.cohort / args.population
+                                   if args.cohort < args.population
+                                   else base.get("participation", 1.0)))
+        fed = FedConfig(**base)
+
+    spec = MNIST_LIKE if args.dataset == "mnist_like" else CIFAR_LIKE
+    arch = ("fedtest-cnn-mnist" if args.dataset == "mnist_like"
+            else "fedtest-cnn")
+    cfg = get_config(arch).replace(cnn_channels=(8, 16, 16), cnn_hidden=32)
+    from repro.models import build_model
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="sgd", lr=args.lr, schedule="constant",
+                     batch_size=args.batch, grad_clip=0.0, remat=False)
+    # derive-on-gather population data: construction cost independent
+    # of N, only the cohort's shards ever exist on device
+    data = make_synthetic_population(
+        args.population, per_client=max(args.batch * 4, 64),
+        image_size=spec.image_size, channels=spec.channels,
+        num_classes=spec.num_classes, noise=spec.noise, seed=args.seed)
+
+    trainer = PopulationTrainer(
+        model, fed, tc, mesh=mesh, eval_batch=64,
+        testers_from_cohort=args.testers_from_cohort)
+    t0 = time.time()
+    state, history = trainer.run(jax.random.PRNGKey(args.seed), data,
+                                 verbose=True)
+    history["wall_s"] = time.time() - t0
+    history["config"] = {"population": args.population,
+                         "cohort": args.cohort,
+                         "devices": args.clients,
+                         "aggregator": fed.aggregator,
+                         "attack": fed.attack,
+                         "malicious": fed.num_malicious,
+                         "attack_scale": fed.attack_scale,
+                         "participation": fed.participation,
+                         "coalition": fed.coalition,
+                         "coalition_size": fed.coalition_size,
+                         "scenario": args.scenario}
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out,
+                           f"{args.dataset}__population.json"), "w") as f:
+        json.dump(history, f, indent=1)
+
+    if args.assert_malicious_below is not None:
+        final = history["malicious_weight"][-1]
+        if not final < args.assert_malicious_below:
+            raise SystemExit(
+                f"malicious_weight={final:.4f} did not drop below "
+                f"{args.assert_malicious_below} after "
+                f"{int(state.round_idx)} rounds")
         print(f"assert ok: malicious_weight={final:.4f} < "
               f"{args.assert_malicious_below}")
 

@@ -36,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FedConfig, TrainConfig, reduce_for_smoke
-from repro.configs import get_config, get_scenario, list_scenarios
-from repro.core import FederatedTrainer
+from repro.configs import (
+    get_config, get_scenario, list_scenarios, scenario_for_population)
+from repro.core import FederatedTrainer, PopulationTrainer
+from repro.data.population import DensePopulationData
 from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, FAULTS, \
     SELECTORS
 from repro.checkpoint import CheckpointManager
@@ -111,6 +113,23 @@ def main():
     ap.add_argument("--agg-kwargs", default=None, type=json.loads,
                     help="JSON kwargs for the aggregator ctor")
     ap.add_argument("--users", type=int, default=None)
+    ap.add_argument("--population", type=int, default=None,
+                    help="run the population tier (DESIGN.md §11) over "
+                         "this many clients: per-round compute touches "
+                         "only the sampled cohort (--cohort), scores "
+                         "stay dense [N]. Scenario presets are refit "
+                         "via scenario_for_population")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="cohort slot capacity C for --population "
+                         "(default: the whole population); the "
+                         "Bernoulli sampling rate is refit to C/N. "
+                         "Errors loudly when C > N")
+    ap.add_argument("--testers-from-cohort", action="store_true",
+                    help="population tier: recruit the round's testing "
+                         "committee from the sampled cohort (at C << N "
+                         "a population-wide tester almost never "
+                         "participates and scoring degenerates; "
+                         "DESIGN.md §11)")
     ap.add_argument("--testers", type=int, default=None)
     ap.add_argument("--malicious", type=int, default=None)
     ap.add_argument("--attack", default=None,
@@ -210,7 +229,33 @@ def main():
                   crosstest_impl=args.crosstest_impl,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
-    if args.scenario:
+    if args.cohort is not None and args.population is None:
+        raise SystemExit("--cohort requires --population")
+    if args.population is not None:
+        # population tier (DESIGN.md §11): N comes from --population,
+        # the sampling rate from the cohort budget
+        if args.users is not None:
+            raise SystemExit("--population replaces --users; pass one")
+        if args.eval_resample_every:
+            raise SystemExit("--eval-resample-every is a dense-driver "
+                             "feature; the population tier gathers "
+                             "tester rows directly")
+        cohort = args.cohort or args.population
+        if args.scenario:
+            # scenario_for_population errors loudly on C > N and refits
+            # coalition membership inside the population
+            fed = scenario_for_population(args.scenario, args.population,
+                                          cohort)
+            fed = dataclasses.replace(
+                fed, **{f: v for f, v in passed.items()
+                        if f != "num_users"})
+        else:
+            base = {**_FED_CLI_DEFAULTS, **passed,
+                    "num_users": args.population, "cohort": cohort}
+            if cohort < args.population:
+                base["participation"] = cohort / args.population
+            fed = FedConfig(**base)
+    elif args.scenario:
         # preset first; every explicitly-passed flag overrides it
         fed = dataclasses.replace(get_scenario(args.scenario), **passed)
     else:
@@ -228,9 +273,15 @@ def main():
                                             num_samples=args.samples,
                                             seed=fed.seed)
 
-    trainer = FederatedTrainer(model, fed, tc,
-                               rounds_per_call=args.rounds_per_call,
-                               eval_resample_every=args.eval_resample_every)
+    if args.population is not None:
+        data = DensePopulationData(data)
+        trainer = PopulationTrainer(
+            model, fed, tc, rounds_per_call=args.rounds_per_call,
+            testers_from_cohort=args.testers_from_cohort)
+    else:
+        trainer = FederatedTrainer(
+            model, fed, tc, rounds_per_call=args.rounds_per_call,
+            eval_resample_every=args.eval_resample_every)
 
     mgr = None
     if args.ckpt_dir:
@@ -278,6 +329,7 @@ def main():
                          "scenario": args.scenario,
                          "users": fed.num_users, "testers": fed.num_testers,
                          "malicious": fed.num_malicious,
+                         "cohort": fed.cohort,
                          "resumed": bool(args.resume)}
 
     os.makedirs(args.out, exist_ok=True)

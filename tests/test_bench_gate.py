@@ -135,6 +135,49 @@ def test_crosstest_rows_are_gated(tmp_path):
                              "--baseline-dir", str(baseline)]) == 1
 
 
+def test_population_first_landing_then_gated(tmp_path):
+    """BENCH_population.json lands with no committed baseline: a suite
+    absent from the baseline ref must be treated as new-and-passing
+    (``git show`` returns nothing -> the suite is skipped, not failed),
+    and its gated ``cohort_aggregate`` row must start regressing the
+    moment a baseline exists."""
+    repo = tmp_path / "repo"
+    repo.mkdir()
+    _git(repo, "init", "-q")
+    (repo / "BENCH_kernels.json").write_text(json.dumps([row("k/a", 0.9)]))
+    _git(repo, "add", "-A")
+    _git(repo, "commit", "-qm", "base without the population suite")
+    # absent at the baseline ref -> None -> main() takes the
+    # first-emission skip instead of a dropped-series failure
+    assert check_bench.baseline_from_git("BENCH_population.json", "HEAD",
+                                         cwd=repo) is None
+
+    pop = [row("population/stream_ref_C16_M1048576", 1.0),
+           row("population/cohort_aggregate_C64", 0.95),
+           row("population/pop_N100000_C64", clients=100_000, cohort=64)]
+    baseline = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    baseline.mkdir()
+    fresh.mkdir()
+    (baseline / "BENCH_kernels.json").write_text(
+        json.dumps([row("k/a", 0.9)]))
+    (fresh / "BENCH_kernels.json").write_text(json.dumps([row("k/a", 0.9)]))
+    (fresh / "BENCH_population.json").write_text(json.dumps(pop))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 0
+
+    # once committed, the baseline gates: a >15% aggregate-bandwidth
+    # regression fails while the fraction-less wall-time rows ride along
+    (baseline / "BENCH_population.json").write_text(json.dumps(pop))
+    regressed = [row("population/stream_ref_C16_M1048576", 1.0),
+                 row("population/cohort_aggregate_C64", 0.60),
+                 row("population/pop_N100000_C64", clients=100_000,
+                     cohort=64)]
+    (fresh / "BENCH_population.json").write_text(json.dumps(regressed))
+    assert check_bench.main(["--fresh-dir", str(fresh),
+                             "--baseline-dir", str(baseline)]) == 1
+
+
 def _git(repo, *args):
     import subprocess
     subprocess.run(["git", *args], cwd=repo, check=True,
