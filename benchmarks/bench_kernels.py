@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import FAST, emit, timeit
 from repro.kernels.decode_attention.ops import _decode_xla
+from repro.kernels.dequant_aggregate.ops import dequant_aggregate
 from repro.kernels.flash_attention.ops import attention_xla
 from repro.kernels.robust_combine.ops import robust_combine
 from repro.kernels.ssd_scan.ops import _ssd_xla
@@ -90,6 +91,26 @@ def main(fast: bool = FAST):
     emit(f"ssd_scan/xla_S{S2}", us,
          f"heads={H} state={N} io_GBps={gbps:.2f}",
          gbps=round(gbps, 2), roofline_frac=frac(gbps))
+
+    # --- dequant + aggregate (fused int8 server step, DESIGN.md §12):
+    # reads C int8 payload rows + the [C, M/chunk] f32 scale grid and
+    # writes one f32 row — a quarter of weighted_aggregate's traffic
+    # for the same reduction, so its *bandwidth* roofline fraction is
+    # what the gate tracks (Pallas path validated in interpret mode by
+    # tests/test_compressors.py; this measures the XLA route)
+    chunk = 256
+    q8 = jax.random.randint(jax.random.PRNGKey(5), (C, M), -127, 128,
+                            jnp.int8)
+    sc = jax.random.uniform(jax.random.PRNGKey(6), (C, M // chunk),
+                            jnp.float32, 1e-4, 1e-2)
+    fn = jax.jit(lambda w, s, q: dequant_aggregate(w, s, q, chunk=chunk,
+                                                   impl="auto"))
+    us = timeit(fn, ww, sc, q8)
+    io_bytes = C * M + C * (M // chunk) * 4 + M * 4    # q8 + scales + out
+    gbps = io_bytes / (us / 1e6) / 1e9
+    emit(f"kernels/dequant_aggregate_C{C}_M{M}", us,
+         f"read_GBps={gbps:.2f}", gbps=round(gbps, 2),
+         roofline_frac=frac(gbps))
 
     # --- robust combine (per-coordinate trimmed mean via sorting network
     # vs the jnp.sort oracle; the Pallas kernel targets TPU, validated by

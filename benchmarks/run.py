@@ -30,7 +30,8 @@ SUITES = [
     ("convergence", "benchmarks.bench_convergence"),  # Figs. 4-5
 ]
 
-JSON_SUITES = {"aggregation", "kernels", "crosstest", "population"}
+JSON_SUITES = {"aggregation", "kernels", "crosstest", "population",
+               "comm"}
 
 
 def main() -> int:

@@ -253,6 +253,8 @@ class FedConfig:
     server_test_fraction: float = 0.1  # accuracy_based baseline's server test set
     participation: float = 1.0     # R/N; paper sets R = N
     crosstest_impl: str = "batched"  # cross-testing dispatch (DESIGN.md §10)
+    compressor: str = "identity"   # repro.strategies.COMPRESSORS name (§12)
+    compressor_kwargs: Any = ()    # e.g. k=0.05 (topk), chunk=256 (int8)
     # population tier (DESIGN.md §11): per-round cohort slot capacity.
     # 0 = dense (every backend materialises all N models); C > 0 runs
     # the round on the C sampled clients' gathered models only.
@@ -281,18 +283,20 @@ class FedConfig:
                  f"crosstest_impl must be 'batched'|'reference', "
                  f"got {self.crosstest_impl!r}")
         for f in ("aggregator_kwargs", "attack_kwargs", "selector_kwargs",
-                  "coalition_kwargs", "fault_kwargs"):
+                  "coalition_kwargs", "fault_kwargs", "compressor_kwargs"):
             object.__setattr__(self, f, _freeze_kwargs(getattr(self, f)))
         # Validate names against the registries (KeyError lists the
         # registered names). Lazy import: repro.strategies never imports
         # repro.config, so this cannot cycle.
         from repro.strategies import (
-            AGGREGATORS, ATTACKS, COALITIONS, FAULTS, SELECTORS)
+            AGGREGATORS, ATTACKS, COALITIONS, COMPRESSORS, FAULTS,
+            SELECTORS)
         AGGREGATORS.get(self.aggregator)
         ATTACKS.get(self.attack)
         SELECTORS.get(self.selector)
         COALITIONS.get(self.coalition)
         FAULTS.get(self.fault)
+        COMPRESSORS.get(self.compressor)
         # a named coalition with no members — or members with no named
         # coalition — would silently deactivate: runs (and CI
         # suppression gates) would measure no adversary. Membership may

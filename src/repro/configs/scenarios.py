@@ -99,6 +99,30 @@ SCENARIOS: Dict[str, FedConfig] = {
         aggregator_kwargs={"use_trust": True, "trust_decay": 0.3,
                            "report_clip": 0.2},
         rounds=60),
+    # --- compressed exchange variants (DESIGN.md §12) -----------------
+    # the equivalence-matrix configuration over a quantised wire: does
+    # the defence survive when every exchanged update round-trips
+    # through int8 per-chunk quantisation with error feedback?
+    "int8_sign_flip_partial_participation": FedConfig(
+        num_users=20, num_testers=5, num_malicious=1, attack="sign_flip",
+        participation=0.75, compressor="int8", rounds=60),
+    # top-k sparsification (5% of coordinates per round) against the
+    # lying-tester coalition — the sparsest wire the suppression claims
+    # are committed for
+    "topk_mutual_boost_vs_fedtest": FedConfig(
+        num_users=20, num_testers=5, num_malicious=4,
+        attack="random_weights", coalition="mutual_boost",
+        coalition_size=4, compressor="topk",
+        compressor_kwargs={"k": 0.05},
+        aggregator_kwargs={"use_trust": True, "trust_decay": 0.3,
+                           "report_clip": 0.2},
+        rounds=60),
+    # rank-4 delta factorisation under the adaptive attacker
+    "lowrank_adaptive_scale": FedConfig(
+        num_users=20, num_testers=5, num_malicious=3,
+        attack="adaptive_scale", attack_scale=4.0,
+        attack_kwargs={"weight_threshold": 0.5},
+        compressor="lowrank", compressor_kwargs={"rank": 4}, rounds=60),
 }
 
 

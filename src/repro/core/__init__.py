@@ -24,7 +24,8 @@ from repro.core.cross_testing import (
     sampled_eval_batches)
 from repro.core.selection import select_testers, rb_schedule
 from repro.core.engine import (
-    FederatedTrainer, PopulationTrainer, RoundState, resolve_strategies)
+    FederatedTrainer, PopulationTrainer, RoundState, flat_update_dim,
+    init_comp_state, resolve_compressor, resolve_strategies)
 
 __all__ = [
     "ScoreState", "init_scores", "update_scores", "score_weights",
@@ -34,5 +35,6 @@ __all__ = [
     "cross_test_tiled", "eval_batch_indices", "kernel_route_model",
     "make_eval_fn", "sampled_eval_batches",
     "select_testers", "rb_schedule", "FederatedTrainer",
-    "PopulationTrainer", "RoundState", "resolve_strategies",
+    "PopulationTrainer", "RoundState", "flat_update_dim",
+    "init_comp_state", "resolve_compressor", "resolve_strategies",
 ]

@@ -33,7 +33,8 @@ from repro.core.engine.population import (
     CohortModels, PopulationBackend, PopulationTrainer, cohort_from_mask)
 from repro.core.engine.program import (
     RoundKeys, RoundProgram, aggregator_defaults, compose_fault_mask,
-    participation_mask, renormalize_over_subset, resolve_coalition,
+    flat_update_dim, init_comp_state, participation_mask,
+    renormalize_over_subset, resolve_coalition, resolve_compressor,
     resolve_fault, resolve_strategies, round_keys)
 
 __all__ = [
@@ -41,8 +42,9 @@ __all__ = [
     "FederatedTrainer", "LocalBackend", "PodBackend",
     "PopulationBackend", "PopulationTrainer", "RingBackend", "RoundKeys",
     "RoundProgram", "RoundState", "aggregator_defaults",
-    "cohort_from_mask", "compose_fault_mask", "make_allgather_round",
-    "make_distributed_round", "make_pod_round", "participation_mask",
-    "renormalize_over_subset", "resolve_coalition", "resolve_fault",
+    "cohort_from_mask", "compose_fault_mask", "flat_update_dim",
+    "init_comp_state", "make_allgather_round", "make_distributed_round",
+    "make_pod_round", "participation_mask", "renormalize_over_subset",
+    "resolve_coalition", "resolve_compressor", "resolve_fault",
     "resolve_strategies", "ring_cross_test", "round_keys",
 ]

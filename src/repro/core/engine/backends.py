@@ -37,6 +37,7 @@ from repro.config import FedConfig, TrainConfig
 from repro.core.cross_testing import CROSSTEST_IMPLS, cross_test_accuracies
 from repro.core.engine.program import RoundProgram, round_keys
 from repro.kernels.weighted_aggregate import aggregate_pytree
+from repro.utils.pytree import tree_add_vector
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -101,6 +102,25 @@ class ExchangeBackend:
         """Step 7 weights path: sum_c w_c * model_c -> new global."""
         raise NotImplementedError
 
+    def compress_exchange(self, compressor, models, global_params,
+                          comp_state, part_mask):
+        """Step 3c (DESIGN.md §12): encode each participating client's
+        flat update with error feedback, reconstruct the models every
+        consumer sees from the decoded payloads. Returns
+        ``(models, payloads, decoded, new_comp_state)`` — payloads /
+        decoded in the backend's client layout (stacked ``[N, ...]``
+        locally, this device's row on the pod), ``new_comp_state``
+        replicated ``[N, D]``."""
+        raise NotImplementedError
+
+    def compressed_sum(self, compressor, payloads, decoded, weights,
+                       models, impl):
+        """Step 7 compressed weights path: ``sum_c w_c * decoded_c``
+        in update space -> flat ``[D]`` f32 aggregated update.
+        ``models`` rides along for backends whose client layout needs
+        remapping the replicated [N] weights (the population cohort)."""
+        raise NotImplementedError
+
 
 class LocalBackend(ExchangeBackend):
     """Single-host vmap backend: clients stacked on a leading [N] axis."""
@@ -146,6 +166,27 @@ class LocalBackend(ExchangeBackend):
 
     def weighted_sum(self, models, weights, global_params, impl):
         return aggregate_pytree(models, weights, impl=impl)
+
+    def compress_exchange(self, compressor, models, global_params,
+                          comp_state, part_mask):
+        updates = _flatten_updates(models, global_params)       # [N, D]
+        payloads, new_state = jax.vmap(compressor.encode)(comp_state,
+                                                          updates)
+        decoded = jax.vmap(compressor.decode)(payloads)         # [N, D]
+        if part_mask is not None:
+            # a masked client transmitted nothing: its error buffer
+            # must not be flushed and its decoded update is exactly 0,
+            # so the reconstructed slot is bitwise the stale global
+            keep = (part_mask > 0)[:, None]
+            new_state = jnp.where(keep, new_state, comp_state)
+            decoded = jnp.where(keep, decoded, 0.0)
+        models = jax.vmap(
+            lambda v: tree_add_vector(global_params, v))(decoded)
+        return models, payloads, decoded, new_state
+
+    def compressed_sum(self, compressor, payloads, decoded, weights,
+                       models, impl):
+        return compressor.aggregate(payloads, decoded, weights, impl)
 
 
 def ring_cross_test(eval_fn, my_params, tx, ty, axis: str, num_clients: int,
@@ -249,6 +290,32 @@ class PodBackend(ExchangeBackend):
                 (x.astype(jnp.float32) * my_w), self.axis).astype(x.dtype),
             models)
 
+    def compress_exchange(self, compressor, models, global_params,
+                          comp_state, part_mask):
+        my_idx = jax.lax.axis_index(self.axis)
+        update = jnp.concatenate([
+            (p.astype(jnp.float32) - g.astype(jnp.float32)).ravel()
+            for p, g in zip(jax.tree_util.tree_leaves(models),
+                            jax.tree_util.tree_leaves(global_params))])
+        payload, new_row = compressor.encode(comp_state[my_idx], update)
+        decoded = compressor.decode(payload)
+        if part_mask is not None:
+            keep = part_mask[my_idx] > 0
+            new_row = jnp.where(keep, new_row, comp_state[my_idx])
+            decoded = jnp.where(keep, decoded, 0.0)
+        # replicate the new buffer: each device contributes exactly its
+        # own row (everything else is zero), so the psum writes every
+        # row exactly once — x + 0 is bitwise x, no f32 drift
+        contrib = jnp.zeros_like(comp_state).at[my_idx].set(new_row)
+        new_state = jax.lax.psum(contrib, self.axis)
+        models = tree_add_vector(global_params, decoded)
+        return models, payload, decoded, new_state
+
+    def compressed_sum(self, compressor, payloads, decoded, weights,
+                       models, impl):
+        my_w = weights[jax.lax.axis_index(self.axis)]
+        return jax.lax.psum(decoded * my_w, self.axis)
+
 
 class RingBackend(PodBackend):
     """Ring exchange: ``ppermute`` hops, peak memory own + visiting."""
@@ -297,6 +364,15 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
       round_fn(global_params, scores, bx, by, tx, ty, key, round_idx)
         -> (new_global (replicated), new_scores, metrics)
 
+    With a compressed exchange configured (``fed.compressor`` other
+    than ``'identity'``, DESIGN.md §12) the signature grows the
+    replicated ``[N, D]`` error-feedback buffer — a static build-time
+    decision, so uncompressed callers are untouched:
+
+      round_fn(global_params, scores, comp, bx, by, tx, ty, key,
+               round_idx)
+        -> (new_global, new_scores, new_comp (replicated), metrics)
+
     ``key`` is the round's base key (``fold_in(run_key, round)``; the
     program derives the :class:`RoundKeys` bundle, the tester set and
     the participation mask from it exactly like the local driver does),
@@ -337,6 +413,29 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
               (jnp.asarray(server_data[0]), jnp.asarray(server_data[1])))
     backend_cls = RingBackend if exchange == "ring" else AllgatherBackend
 
+    if program.use_compression:
+        @functools.partial(
+            _shard_map, mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis), P(axis), P(axis), P(axis),
+                      P(), P()),
+            out_specs=(P(), P(), P(), P()))
+        def round_fn(global_params, scores, comp, bx, by, tx, ty, key,
+                     round_idx):
+            bx, by = bx[0], by[0]
+            tx, ty = tx[0], ty[0]
+            backend = backend_cls(axis, num_clients, crosstest_impl)
+            keys = round_keys(key)
+            tester_ids, part_mask = program.select_round(
+                keys, round_idx, scores=scores.scores)
+            return program.run(backend, global_params, scores, bx=bx,
+                               by=by, tx=tx, ty=ty,
+                               tester_ids=tester_ids,
+                               part_mask=part_mask, keys=keys,
+                               round_idx=round_idx, counts=counts_arr,
+                               server_data=server, comp_state=comp)
+
+        return round_fn
+
     @functools.partial(
         _shard_map, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis), P(axis), P(axis), P(), P()),
@@ -349,11 +448,11 @@ def make_pod_round(model, fed: FedConfig, train_cfg: TrainConfig, mesh,
         keys = round_keys(key)
         tester_ids, part_mask = program.select_round(keys, round_idx,
                                                      scores=scores.scores)
-        return program.run(backend, global_params, scores, bx=bx, by=by,
-                           tx=tx, ty=ty, tester_ids=tester_ids,
-                           part_mask=part_mask, keys=keys,
-                           round_idx=round_idx, counts=counts_arr,
-                           server_data=server)
+        new_global, new_scores, _, metrics = program.run(
+            backend, global_params, scores, bx=bx, by=by, tx=tx, ty=ty,
+            tester_ids=tester_ids, part_mask=part_mask, keys=keys,
+            round_idx=round_idx, counts=counts_arr, server_data=server)
+        return new_global, new_scores, metrics
 
     return round_fn
 

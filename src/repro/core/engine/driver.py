@@ -39,6 +39,11 @@ class RoundState(NamedTuple):
     scores: ScoreState
     round_idx: jnp.ndarray
     key: jnp.ndarray
+    # per-client [N, D] error-feedback buffer of the compressed
+    # exchange (DESIGN.md §12); None — an empty pytree node that
+    # threads through scan/checkpoint for free — when uncompressed.
+    # Defaulted so uncompressed constructions stay source-compatible.
+    comp_state: Any = None
 
 
 @dataclasses.dataclass
@@ -88,10 +93,12 @@ class FederatedTrainer:
     def init(self, key) -> RoundState:
         pk, rk = jax.random.split(key)
         params = self.model.init(pk)
+        comp = (self.program.compressor.init_state(self.fed.num_users)
+                if self.program.use_compression else None)
         return RoundState(global_params=params,
                           scores=init_scores(self.fed.num_users),
                           round_idx=jnp.zeros((), jnp.int32),
-                          key=rk)
+                          key=rk, comp_state=comp)
 
     # -------------------------------------------------------- durability
     def manifest(self):
@@ -127,7 +134,10 @@ class FederatedTrainer:
                     f"{t.shape} — state from a different run?")
             return leaf.astype(t.dtype)
 
-        loaded = RoundState(**{k: state_dict[k] for k in tmpl._fields})
+        # comp_state is absent from pre-§12 state dicts; its default
+        # (None) is only valid when this trainer runs uncompressed
+        loaded = RoundState(**{k: state_dict[k] for k in tmpl._fields
+                               if k in state_dict})
         return jax.tree_util.tree_map(cast, tmpl, loaded)
 
     def save_checkpoint(self, mgr, state: RoundState,
@@ -166,16 +176,17 @@ class FederatedTrainer:
         else:
             tx = data.test.xs[:, :self.eval_batch]
             ty = data.test.ys[:, :self.eval_batch]
-        new_global, new_scores, metrics = self.program.run(
+        new_global, new_scores, new_comp, metrics = self.program.run(
             self.backend, state.global_params, state.scores,
             bx=bx, by=by, tx=tx, ty=ty,
             tester_ids=tester_ids, part_mask=part_mask, keys=keys,
             round_idx=state.round_idx, counts=data.train.counts,
             server_data=(data.server_x[:self.eval_batch],
-                         data.server_y[:self.eval_batch]))
+                         data.server_y[:self.eval_batch]),
+            comp_state=state.comp_state)
         new_state = RoundState(global_params=new_global, scores=new_scores,
                                round_idx=state.round_idx + 1,
-                               key=state.key)
+                               key=state.key, comp_state=new_comp)
         return new_state, metrics
 
     def _multi_round(self, state: RoundState, data: FederatedDataset):

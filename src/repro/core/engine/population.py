@@ -53,10 +53,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cross_testing import CROSSTEST_IMPLS, cross_test_tiled
-from repro.core.engine.backends import ExchangeBackend
+from repro.core.engine.backends import ExchangeBackend, _flatten_updates
 from repro.core.engine.driver import FederatedTrainer, RoundState
 from repro.core.engine.program import round_keys
 from repro.kernels.weighted_aggregate import aggregate_pytree
+from repro.utils.pytree import tree_add_vector
 
 
 def cohort_from_mask(part_mask: jnp.ndarray, capacity: int
@@ -228,6 +229,40 @@ class PopulationBackend(ExchangeBackend):
         w = weights[self._safe_idx(models)] * models.valid
         return aggregate_pytree(models.stack, w, impl=impl)
 
+    def compress_exchange(self, compressor, models, global_params,
+                          comp_state, part_mask):
+        # the error-feedback buffer stays population-dense [N, D] (it
+        # is per-client *state*, like scores — only the cohort's rows
+        # are gathered, encoded and scattered back each round;
+        # DESIGN.md §12 documents the memory trade)
+        safe = self._safe_idx(models)
+        updates = _flatten_updates(models.stack, global_params)  # [C, D]
+        state_rows = comp_state[safe]                            # [C, D]
+        payloads, new_rows = jax.vmap(compressor.encode)(state_rows,
+                                                         updates)
+        decoded = jax.vmap(compressor.decode)(payloads)          # [C, D]
+        eff = models.valid * (part_mask[safe]
+                              if part_mask is not None else 1.0)
+        keep = (eff > 0)[:, None]
+        # masked / sentinel slots transmitted nothing: buffer rows stay
+        # (scattering the gathered row back is a bitwise no-op) and the
+        # decoded update is exactly zero
+        new_rows = jnp.where(keep, new_rows, state_rows)
+        decoded = jnp.where(keep, decoded, 0.0)
+        new_state = comp_state.at[models.idx].set(new_rows, mode="drop")
+        stack = jax.vmap(
+            lambda v: tree_add_vector(global_params, v))(decoded)
+        return (models._replace(stack=self._constrain(stack)),
+                payloads, decoded, new_state)
+
+    def compressed_sum(self, compressor, payloads, decoded, weights,
+                       models, impl):
+        # same zero-outside-cohort argument as weighted_sum: the [N]
+        # simplex gathered to the cohort rows loses only exact-zero
+        # summands
+        w = weights[self._safe_idx(models)] * models.valid
+        return compressor.aggregate(payloads, decoded, w, impl)
+
 
 @dataclasses.dataclass
 class PopulationTrainer(FederatedTrainer):
@@ -321,13 +356,14 @@ class PopulationTrainer(FederatedTrainer):
         bx = jax.vmap(lambda x, i: x[i])(cx, bidx)
         by = jax.vmap(lambda y, i: y[i])(cy, bidx)
         tx, ty = data.tester_batches(tester_ids, self.eval_batch)
-        new_global, new_scores, metrics = self.program.run(
+        new_global, new_scores, new_comp, metrics = self.program.run(
             self.backend, state.global_params, state.scores,
             bx=(idx, valid, bx), by=by, tx=tx, ty=ty,
             tester_ids=tester_ids, part_mask=eff_mask, keys=keys,
             round_idx=state.round_idx, counts=counts,
-            server_data=data.server_batch(self.eval_batch))
+            server_data=data.server_batch(self.eval_batch),
+            comp_state=state.comp_state)
         new_state = RoundState(global_params=new_global, scores=new_scores,
                                round_idx=state.round_idx + 1,
-                               key=state.key)
+                               key=state.key, comp_state=new_comp)
         return new_state, metrics

@@ -214,6 +214,43 @@ def resolve_coalition(fed: FedConfig):
                                  scale=fed.attack_scale))
 
 
+def flat_update_dim(model) -> int:
+    """Static width D of the flattened update vector.
+
+    Matches ``_flatten_updates``'s layout (leaf order, full ravel) by
+    construction — both walk the same param pytree — and is derived
+    abstractly (``eval_shape``), so no model is ever materialised at
+    build time.
+    """
+    import math
+    shapes = jax.eval_shape(model.init,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(leaf.shape) or 1
+               for leaf in jax.tree_util.tree_leaves(shapes))
+
+
+def resolve_compressor(fed: FedConfig, model):
+    """Name -> object resolution for ``fed.compressor`` (DESIGN.md §12).
+
+    The engine injects the static flat update width ``dim`` so payload
+    shapes (top-k count, chunk grid, factor ranks) are fixed at build
+    time and the traced round stays retrace-free.
+    """
+    from repro.strategies import COMPRESSORS
+    return COMPRESSORS.build(fed.compressor,
+                             fed.strategy_kwargs("compressor"),
+                             dict(dim=flat_update_dim(model)))
+
+
+def init_comp_state(fed: FedConfig, model):
+    """Initial ``[N, D]`` error-feedback buffer; ``None`` when the
+    exchange is uncompressed (the seam is statically disabled, so the
+    state is an empty pytree that costs nothing to thread)."""
+    if fed.compressor == "identity":
+        return None
+    return resolve_compressor(fed, model).init_state(fed.num_users)
+
+
 class RoundProgram:
     """Steps 1-7 of the FedTest round, once, for every exchange backend.
 
@@ -266,6 +303,13 @@ class RoundProgram:
         # strategy; the static flag keeps honest rounds branch-free.
         self.fault = resolve_fault(fed)
         self.use_faults = fed.fault != "none"
+        # compressed exchange (DESIGN.md §12): 'identity' statically
+        # disables the seam — the default round is byte-identical to the
+        # uncompressed engine, not merely equivalent (reconstructing
+        # g + (m - g) in f32 would not be bitwise m).
+        self.use_compression = fed.compressor != "identity"
+        self.compressor = (resolve_compressor(fed, model)
+                           if self.use_compression else None)
 
     # ---------------------------------------------------------- local phase
     def batchify(self, bx, by) -> Dict[str, jnp.ndarray]:
@@ -327,15 +371,18 @@ class RoundProgram:
     # ------------------------------------------------------------ the round
     def run(self, backend, global_params, scores, *, bx, by, tx, ty,
             tester_ids, part_mask, keys: RoundKeys, round_idx, counts,
-            server_data=None):
+            server_data=None, comp_state=None):
         """One FedTest round on ``backend``; steps 1-7, owned here.
 
         ``bx, by`` are the round's training batches and ``tx, ty`` the
         local test shards, in the backend's client layout (stacked
         ``[N, ...]`` locally, per-device slices under ``shard_map``).
         ``tester_ids`` / ``part_mask`` come from :meth:`select_round`,
-        ``keys`` from :func:`round_keys`. Returns
-        ``(new_global, new_scores, metrics)`` — all replicated.
+        ``keys`` from :func:`round_keys`. ``comp_state`` is the
+        replicated ``[N, D]`` error-feedback buffer when the exchange is
+        compressed (DESIGN.md §12), ``None`` otherwise. Returns
+        ``(new_global, new_scores, new_comp_state, metrics)`` — all
+        replicated (``new_comp_state`` is ``None`` when uncompressed).
         """
         fed = self.fed
         pmask = part_mask if self.use_participation else None
@@ -373,6 +420,22 @@ class RoundProgram:
         # not, an unsampled client's model never leaves the device.
         if pmask is not None:
             models = backend.mask_models(models, global_params, pmask)
+
+        # 3c. compressed exchange (DESIGN.md §12): each participating
+        # client encodes its flat update (with error feedback banked in
+        # comp_state) and every consumer from here on — cross-testing,
+        # scoring, aggregation — sees only the decoded reconstruction,
+        # so all backends stay bit-identical by construction. A masked
+        # client transmits nothing: its buffer is untouched and its
+        # decoded update is exactly zero (slot == stale global, the 3b
+        # semantics).
+        new_comp_state = comp_state
+        comp_payloads = comp_decoded = None
+        if self.use_compression:
+            models, comp_payloads, comp_decoded, new_comp_state = (
+                backend.compress_exchange(self.compressor, models,
+                                          global_params, comp_state,
+                                          pmask))
 
         # 4. the round's testers measure accuracies on their own data.
         # The backend returns the replicated [K, N] matrix A[k, c] (and
@@ -435,6 +498,18 @@ class RoundProgram:
         if self.uses_combine:
             new_global = tree_add_vector(
                 global_params, self.aggregator.combine(ctx, updates))
+        elif self.use_compression:
+            # compressed weights path: aggregate in *update space* from
+            # the wire representation (the fused dequant_aggregate
+            # kernel for int8 — the f32 [C, D] stack never hits HBM),
+            # then one tree_add_vector back into model space. Same
+            # formula on every backend (local kernel == pod psum, the
+            # §3 replication contract).
+            new_global = tree_add_vector(
+                global_params,
+                backend.compressed_sum(self.compressor, comp_payloads,
+                                       comp_decoded, weights, models,
+                                       self.agg_impl))
         else:
             new_global = backend.weighted_sum(models, weights,
                                               global_params, self.agg_impl)
@@ -461,4 +536,4 @@ class RoundProgram:
             # (0 under fault='none'; DESIGN.md §9)
             "dropped_fraction": dropped_fraction,
         }
-        return new_global, new_scores, metrics
+        return new_global, new_scores, new_comp_state, metrics

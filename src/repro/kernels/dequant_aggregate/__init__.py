@@ -1,0 +1,3 @@
+from repro.kernels.dequant_aggregate.ops import dequant_aggregate
+
+__all__ = ["dequant_aggregate"]

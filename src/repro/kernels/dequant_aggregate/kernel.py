@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused int8 dequantise + score-weighted reduction.
+
+The server holds C compressed client payloads — ``q [C, M]`` int8 codes
+and ``scales [C, M / chunk]`` f32 per-chunk absmax scales — and needs
+``sum_c w_c * dequant(q_c)``. Doing that in two XLA ops would round-trip
+the dequantised f32 ``[C, M]`` stack through HBM (4x the int8 bytes);
+this kernel fuses both in one VMEM pass so the reduction streams the
+*compressed* representation, staying bandwidth-bound like
+``weighted_aggregate`` but at the int8 byte count (DESIGN.md §12).
+
+Grid is 1-D over ``M // block_m``; each step streams a ``[C, block_m]``
+int8 tile plus its ``[C, block_m / chunk]`` scale columns through VMEM,
+dequantises on the VPU, and reduces with fp32 accumulation. The
+dequantisation is bitwise-identical to ``Int8.decode`` (same reshape,
+same multiply), so the pallas and naive paths agree exactly wherever
+the platform's f32 arithmetic does.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dqagg_kernel(w_ref, s_ref, q_ref, o_ref, *, chunk: int):
+    q = q_ref[...].astype(jnp.float32)            # [C, block_m]
+    s = s_ref[...].astype(jnp.float32)            # [C, block_m / chunk]
+    c, bm = q.shape
+    dec = (q.reshape(c, bm // chunk, chunk)
+           * s[:, :, None]).reshape(c, bm)
+    w = w_ref[...].astype(jnp.float32)            # [C, 1]
+    o_ref[...] = jnp.sum(dec * w, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_m", "interpret"))
+def dequant_aggregate_pallas(w: jnp.ndarray, scales: jnp.ndarray,
+                             q: jnp.ndarray, *, chunk: int,
+                             block_m: int = 4096,
+                             interpret: bool = False) -> jnp.ndarray:
+    """w [C]; scales [C, M/chunk]; q [C, M] int8 -> [M] f32.
+
+    ``M % block_m == 0`` and ``block_m % chunk == 0`` so every grid step
+    sees whole chunks (the ops wrapper pads).
+    """
+    C, M = q.shape
+    block_m = min(block_m, M)
+    assert M % block_m == 0, (M, block_m)
+    assert block_m % chunk == 0, (block_m, chunk)
+    out = pl.pallas_call(
+        functools.partial(_dqagg_kernel, chunk=chunk),
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((C, 1), lambda mi: (0, 0)),
+            pl.BlockSpec((C, block_m // chunk), lambda mi: (0, mi)),
+            pl.BlockSpec((C, block_m), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((1, M), jnp.float32),
+        interpret=interpret,
+    )(w.reshape(C, 1), scales, q)
+    return out[0]

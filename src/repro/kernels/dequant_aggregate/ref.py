@@ -1,0 +1,19 @@
+"""Oracle for the fused dequantise-aggregate: sum_c w_c * dequant(q_c).
+
+The dequantisation mirrors ``Int8.decode`` op-for-op (reshape to chunks,
+multiply by the per-chunk scale) and the reduction mirrors
+``weighted_aggregate_ref`` (f32 einsum), so routing int8 aggregation
+through this ref is bitwise-identical to decode-then-weighted-sum.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_aggregate_ref(w: jnp.ndarray, scales: jnp.ndarray,
+                          q: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """w [C]; scales [C, M/chunk]; q [C, M] int8 -> [M] f32."""
+    C, M = q.shape
+    dec = (q.astype(jnp.float32).reshape(C, M // chunk, chunk)
+           * scales.astype(jnp.float32)[:, :, None]).reshape(C, M)
+    return jnp.einsum("c,cm->m", w.astype(jnp.float32), dec)

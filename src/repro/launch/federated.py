@@ -116,6 +116,16 @@ def main():
     ap.add_argument("--fault-kwargs", default=None, type=json.loads,
                     help="JSON kwargs for the fault ctor, e.g. "
                          '\'{"deadline": 2.0}\'')
+    ap.add_argument("--compressor", default=None,
+                    help="repro.strategies.COMPRESSORS name "
+                         "(DESIGN.md §12): clients transmit encoded "
+                         "deltas with per-client error feedback instead "
+                         "of dense models; the round carries a "
+                         "replicated [N, D] feedback buffer")
+    ap.add_argument("--compressor-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the compressor ctor, e.g. "
+                         '\'{"k": 0.05}\' (topk) or \'{"chunk": 256}\' '
+                         "(int8)")
     ap.add_argument("--assert-malicious-below", type=float, default=None,
                     help="exit non-zero unless the final round's "
                          "malicious_weight is below this bar (the CI "
@@ -153,7 +163,8 @@ def main():
     from repro.config import FedConfig, TrainConfig
     from repro.configs import get_config, scenario_for_pod
     from repro.core.engine import (
-        make_allgather_round, make_distributed_round, round_keys)
+        init_comp_state, make_allgather_round, make_distributed_round,
+        round_keys)
     from repro.core.scoring import init_scores
     from repro.data import (CIFAR_LIKE, MNIST_LIKE,
                             make_federated_image_dataset,
@@ -187,6 +198,8 @@ def main():
                   coalition_kwargs=args.coalition_kwargs,
                   fault=args.fault, fault_kwargs=args.fault_kwargs,
                   fault_rate=args.fault_rate,
+                  compressor=args.compressor,
+                  compressor_kwargs=args.compressor_kwargs,
                   crosstest_impl=args.crosstest_impl,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
@@ -216,6 +229,10 @@ def main():
 
     params = model.init(jax.random.PRNGKey(args.seed))
     scores = init_scores(N)
+    # compressed exchange (DESIGN.md §12): the round carries the
+    # replicated [N, D] error-feedback buffer through the grown
+    # round_fn signature; None (and the 8-arg form) when uncompressed
+    comp = init_comp_state(fed, model)
     tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
     run_key = jax.random.PRNGKey(args.seed + 1)
 
@@ -230,8 +247,14 @@ def main():
         key = jax.random.fold_in(run_key, r)
         bx, by = sample_client_batches(round_keys(key).batch, data.train,
                                        fed.local_steps, tc.batch_size)
-        params, scores, metrics = round_fn(params, scores, bx, by, tx, ty,
-                                           key, jnp.asarray(r, jnp.int32))
+        if comp is not None:
+            params, scores, comp, metrics = round_fn(
+                params, scores, comp, bx, by, tx, ty, key,
+                jnp.asarray(r, jnp.int32))
+        else:
+            params, scores, metrics = round_fn(
+                params, scores, bx, by, tx, ty, key,
+                jnp.asarray(r, jnp.int32))
         logits, _ = model.forward_train(params,
                                         {"images": data.global_x[:400]})
         acc = float((jnp.argmax(logits, -1) == data.global_y[:400]).mean())
@@ -259,6 +282,7 @@ def main():
                          "coalition": fed.coalition,
                          "coalition_size": fed.coalition_size,
                          "fault": fed.fault, "fault_rate": fed.fault_rate,
+                         "compressor": fed.compressor,
                          "scenario": args.scenario,
                          "exchange": args.exchange}
 
@@ -318,6 +342,8 @@ def _run_population(args, mesh):
                   coalition_kwargs=args.coalition_kwargs,
                   fault=args.fault, fault_kwargs=args.fault_kwargs,
                   fault_rate=args.fault_rate,
+                  compressor=args.compressor,
+                  compressor_kwargs=args.compressor_kwargs,
                   crosstest_impl=args.crosstest_impl,
                   rounds=args.rounds, seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
@@ -369,6 +395,7 @@ def _run_population(args, mesh):
                          "participation": fed.participation,
                          "coalition": fed.coalition,
                          "coalition_size": fed.coalition_size,
+                         "compressor": fed.compressor,
                          "scenario": args.scenario}
 
     os.makedirs(args.out, exist_ok=True)

@@ -40,8 +40,8 @@ from repro.configs import (
     get_config, get_scenario, list_scenarios, scenario_for_population)
 from repro.core import FederatedTrainer, PopulationTrainer
 from repro.data.population import DensePopulationData
-from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, FAULTS, \
-    SELECTORS
+from repro.strategies import AGGREGATORS, ATTACKS, COALITIONS, \
+    COMPRESSORS, FAULTS, SELECTORS
 from repro.checkpoint import CheckpointManager
 from repro.data import (
     CIFAR_LIKE, MNIST_LIKE, make_federated_image_dataset, make_token_stream)
@@ -95,7 +95,8 @@ _FED_CLI_DEFAULTS = dict(
     attack="random_weights", attack_kwargs={}, attack_scale=1.0,
     selector="rotating", selector_kwargs={},
     coalition="none", coalition_kwargs={}, coalition_size=0,
-    fault="none", fault_kwargs={}, fault_rate=0.1, seed=0)
+    fault="none", fault_kwargs={}, fault_rate=0.1,
+    compressor="identity", compressor_kwargs={}, seed=0)
 
 
 def main():
@@ -177,6 +178,17 @@ def main():
     ap.add_argument("--fault-kwargs", default=None, type=json.loads,
                     help="JSON kwargs for the fault ctor, e.g. "
                          '\'{"placement": "first", "size": 2}\'')
+    ap.add_argument("--compressor", default=None,
+                    choices=list(COMPRESSORS.names()),
+                    help="compressed update exchange "
+                         "(repro.strategies.COMPRESSORS; DESIGN.md §12):"
+                         " clients transmit encoded deltas with "
+                         "per-client error feedback instead of dense "
+                         "models")
+    ap.add_argument("--compressor-kwargs", default=None, type=json.loads,
+                    help="JSON kwargs for the compressor ctor, e.g. "
+                         '\'{"k": 0.05}\' (topk) or \'{"chunk": 256}\' '
+                         "(int8)")
     ap.add_argument("--assert-malicious-below", type=float, default=None,
                     help="exit non-zero unless the final round's "
                          "malicious_weight is below this bar (the CI "
@@ -226,6 +238,8 @@ def main():
                   coalition_kwargs=args.coalition_kwargs,
                   fault=args.fault, fault_kwargs=args.fault_kwargs,
                   fault_rate=args.fault_rate,
+                  compressor=args.compressor,
+                  compressor_kwargs=args.compressor_kwargs,
                   crosstest_impl=args.crosstest_impl,
                   seed=args.seed)
     passed = {f: v for f, v in passed.items() if v is not None}
@@ -326,6 +340,7 @@ def main():
                          "coalition": fed.coalition,
                          "coalition_size": fed.coalition_size,
                          "fault": fed.fault, "fault_rate": fed.fault_rate,
+                         "compressor": fed.compressor,
                          "scenario": args.scenario,
                          "users": fed.num_users, "testers": fed.num_testers,
                          "malicious": fed.num_malicious,

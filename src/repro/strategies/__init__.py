@@ -27,6 +27,11 @@ and resolved to plain Python objects before jit tracing:
   participation mask after selection so dropped clients inherit the
   non-sampled semantics — zero weight, frozen score, masked tester row
   (DESIGN.md §9).
+* :data:`COMPRESSORS` — the exchange wire format (``identity``,
+  ``topk``, ``int8``, ``lowrank``): a :class:`Compressor` encodes each
+  participating client's flat update (with a persistent per-client
+  error-feedback buffer in ``RoundState.comp_state``) and every
+  backend consumes only the decoded reconstruction (DESIGN.md §12).
 
 Adding a strategy is one file anywhere that runs::
 
@@ -49,10 +54,11 @@ from repro.strategies import attacks as _attacks          # noqa: F401
 from repro.strategies import faults as _faults            # noqa: F401
 from repro.strategies import selectors as _selectors      # noqa: F401
 from repro.strategies.coalition import Coalition, CoalitionAttack
+from repro.strategies.compressors import COMPRESSORS, Compressor
 
 __all__ = [
-    "AGGREGATORS", "ATTACKS", "COALITIONS", "FAULTS", "SELECTORS",
-    "Aggregator", "Attack", "AttackContext", "Coalition",
-    "CoalitionAttack", "Fault", "Selector", "Registry", "RoundContext",
-    "register", "resolve_placement", "uses_combine",
+    "AGGREGATORS", "ATTACKS", "COALITIONS", "COMPRESSORS", "FAULTS",
+    "SELECTORS", "Aggregator", "Attack", "AttackContext", "Coalition",
+    "CoalitionAttack", "Compressor", "Fault", "Selector", "Registry",
+    "RoundContext", "register", "resolve_placement", "uses_combine",
 ]

@@ -1,0 +1,254 @@
+"""Pluggable update compressors: the wire format of the exchange.
+
+Federated rounds ship client *updates* (``model - global``) instead of
+full models once a compressor other than ``identity`` is configured
+(``FedConfig.compressor``). The engine threads one seam through
+:class:`repro.core.engine.RoundProgram` between the attack step and the
+exchange (DESIGN.md §12): each participating client flattens its update
+to the ``[D]`` f32 vector of ``_flatten_updates``, encodes it, and every
+downstream consumer — cross-testing, scoring, aggregation — sees only
+the *decoded* reconstruction, so all backends stay bit-identical to
+each other by construction.
+
+Every compressor exposes::
+
+    payload, new_state = comp.encode(state_row, update)   # [D] f32 in
+    update_hat         = comp.decode(payload)             # [D] f32 out
+
+``state_row`` is the client's persistent error-feedback buffer (``[D]``
+f32, all-zero at init): ``encode`` compresses the *compensated* update
+``update + state`` and banks the residual, so the sum of decoded
+payloads telescopes to the sum of raw updates over rounds
+(``tests/test_compressors.py`` pins the invariant). The stacked
+``[N, D]`` buffer lives in ``RoundState.comp_state`` — checkpointed,
+manifest-guarded, and restored bit-identically (DESIGN.md §9).
+
+All compressors are deterministic, key-free functions of their inputs
+(FL001: no PRNG streams are consumed), built through the same
+:class:`~repro.strategies.base.Registry` protocol as every other
+strategy; the engine injects ``dim`` (the flat update width) as a
+build default.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.strategies.base import Registry, register
+
+COMPRESSORS = Registry("compressor")
+
+
+def _as_f32_vector(update):
+    update = jnp.asarray(update)
+    if update.ndim != 1:
+        raise ValueError(
+            f"compressors operate on flat [D] update vectors, got "
+            f"shape {update.shape}")
+    return update.astype(jnp.float32)
+
+
+class Compressor:
+    """Encode/decode one client's flat ``[D]`` f32 update.
+
+    Subclasses implement :meth:`_compress` (lossy projection to a
+    payload pytree) and :meth:`decode`; the error-feedback banking in
+    :meth:`encode` is shared. ``dim`` is the static flat width — the
+    engine injects it at build time so payload shapes are trace-static.
+    """
+
+    name = "base"
+    #: identity ships the exact update — no error ever accumulates
+    lossless = False
+
+    def __init__(self, dim: int):
+        self.dim = int(dim)
+        if self.dim <= 0:
+            raise ValueError(f"dim must be positive, got {dim}")
+
+    # ----------------------------------------------------------- state
+    def init_state(self, num_users: int) -> jnp.ndarray:
+        """All-zero ``[N, D]`` f32 error-feedback buffer."""
+        return jnp.zeros((int(num_users), self.dim), jnp.float32)
+
+    # ------------------------------------------------------ wire format
+    def _compress(self, compensated: jnp.ndarray):
+        """Lossy projection of one compensated ``[D]`` update."""
+        raise NotImplementedError
+
+    def encode(self, state_row, update):
+        """``(payload, new_state_row)`` with error feedback banked."""
+        compensated = _as_f32_vector(update) + _as_f32_vector(state_row)
+        payload = self._compress(compensated)
+        new_state = compensated - self.decode(payload)
+        return payload, new_state
+
+    def decode(self, payload) -> jnp.ndarray:
+        """Reconstruct the ``[D]`` f32 update from a payload."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------ aggregation
+    def aggregate(self, payloads, decoded, weights, impl: str = "auto"):
+        """Weighted sum of decoded updates: ``[C, D] x [C] -> [D]``.
+
+        The default routes through the ``weighted_aggregate`` kernel
+        ops; ``int8`` overrides it with the fused ``dequant_aggregate``
+        kernel that never materialises the dequantised ``[C, D]`` stack
+        (DESIGN.md §12).
+        """
+        from repro.kernels.weighted_aggregate import weighted_aggregate
+        return weighted_aggregate(decoded, weights, impl=impl)
+
+    # ---------------------------------------------------------- costing
+    def payload_bytes(self, payload) -> int:
+        """Measured wire bytes of one client's concrete payload."""
+        return int(sum(int(leaf.nbytes)
+                       for leaf in jax.tree_util.tree_leaves(payload)))
+
+    def __repr__(self) -> str:
+        return f"<compressor {self.name} dim={self.dim}>"
+
+
+@register(COMPRESSORS, "identity")
+class Identity(Compressor):
+    """Dense f32 exchange — the uncompressed baseline.
+
+    ``identity`` exists so the property suite can pin the seam's
+    algebra (zero residual, exact round-trip); the engine never threads
+    it — ``compressor='identity'`` statically disables the seam so the
+    default path stays byte-identical to the pre-compression engine.
+    """
+
+    lossless = True
+
+    def _compress(self, compensated):
+        return {"dense": compensated}
+
+    def decode(self, payload):
+        return jnp.asarray(payload["dense"], jnp.float32)
+
+
+@register(COMPRESSORS, "topk")
+class TopK(Compressor):
+    """Top-k magnitude sparsification with error feedback.
+
+    Ships the ``k`` largest-|value| coordinates of the compensated
+    update as ``(values f32, indices i32)``; everything else stays in
+    the error buffer and re-competes next round. ``k`` may be a
+    fraction (``0.05`` -> 5% of ``dim``) or an absolute count.
+    """
+
+    def __init__(self, dim: int, k: float = 0.05):
+        super().__init__(dim)
+        k = float(k)
+        if k <= 0:
+            raise ValueError(f"k must be positive, got {k}")
+        self.k = max(1, int(round(k * self.dim))) if k < 1.0 else int(k)
+        self.k = min(self.k, self.dim)
+
+    def _compress(self, compensated):
+        _, idx = jax.lax.top_k(jnp.abs(compensated), self.k)
+        idx = idx.astype(jnp.int32)
+        return {"values": compensated[idx], "indices": idx}
+
+    def decode(self, payload):
+        return (jnp.zeros((self.dim,), jnp.float32)
+                .at[payload["indices"]].set(
+                    jnp.asarray(payload["values"], jnp.float32)))
+
+
+@register(COMPRESSORS, "int8")
+class Int8(Compressor):
+    """Per-chunk absmax-scaled int8 quantisation with error feedback.
+
+    The compensated update is padded to a multiple of ``chunk`` and
+    quantised per chunk: ``scale = max|chunk| / 127`` (floored away
+    from zero so all-zero chunks stay exact), ``q = round(x / scale)``
+    clipped to ``[-127, 127]``. The payload is ``(q int8 [D_pad],
+    scales f32 [D_pad / chunk])`` — ~3.9x smaller than dense f32 at
+    the default chunk. Aggregation routes through the fused
+    ``dequant_aggregate`` Pallas kernel so the f32 ``[C, D]`` stack is
+    never materialised in HBM (DESIGN.md §12).
+    """
+
+    def __init__(self, dim: int, chunk: int = 256):
+        super().__init__(dim)
+        self.chunk = int(chunk)
+        if self.chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        self.padded_dim = ((self.dim + self.chunk - 1)
+                          // self.chunk) * self.chunk
+        self.num_chunks = self.padded_dim // self.chunk
+
+    def _compress(self, compensated):
+        x = jnp.pad(compensated, (0, self.padded_dim - self.dim))
+        chunks = x.reshape(self.num_chunks, self.chunk)
+        absmax = jnp.max(jnp.abs(chunks), axis=1)
+        scales = jnp.maximum(absmax / 127.0, 1e-12).astype(jnp.float32)
+        q = jnp.clip(jnp.round(chunks / scales[:, None]), -127, 127)
+        return {"q": q.astype(jnp.int8).reshape(-1), "scales": scales}
+
+    def decode(self, payload):
+        q = jnp.asarray(payload["q"], jnp.float32)
+        scales = jnp.asarray(payload["scales"], jnp.float32)
+        dec = (q.reshape(self.num_chunks, self.chunk)
+               * scales[:, None]).reshape(-1)
+        return dec[:self.dim]
+
+    def aggregate(self, payloads, decoded, weights, impl: str = "auto"):
+        from repro.kernels.dequant_aggregate import dequant_aggregate
+        out = dequant_aggregate(weights, payloads["scales"],
+                                payloads["q"], chunk=self.chunk,
+                                impl=impl)
+        return out[:self.dim]
+
+
+@register(COMPRESSORS, "lowrank")
+class LowRank(Compressor):
+    """Rank-r delta factorisation (LoRA-style wire format).
+
+    The compensated ``[D]`` update is reshaped to a near-square
+    ``[a, b]`` matrix and projected onto its top-``rank`` subspace by
+    ``iters`` rounds of QR subspace iteration from a *deterministic*
+    cosine-ramp start (no PRNG stream — FL001-clean). The payload is
+    ``(U [a, rank] f32, V [b, rank] f32)``; ``decode`` returns
+    ``(U @ V^T).ravel()``. Residual mass stays in the error buffer, so
+    directions the subspace misses are retried in later rounds.
+    """
+
+    def __init__(self, dim: int, rank: int = 4, iters: int = 2):
+        super().__init__(dim)
+        self.rank = int(rank)
+        self.iters = int(iters)
+        if self.rank <= 0:
+            raise ValueError(f"rank must be positive, got {rank}")
+        if self.iters < 1:
+            raise ValueError(f"iters must be >= 1, got {iters}")
+        a = max(1, int(math.sqrt(self.dim)))
+        self.rows = a
+        self.cols = (self.dim + a - 1) // a
+        self.rank = min(self.rank, self.rows, self.cols)
+
+    def _seed_basis(self) -> jnp.ndarray:
+        """Deterministic full-column-rank ``[cols, rank]`` start."""
+        i = jnp.arange(self.cols, dtype=jnp.float32)[:, None]
+        j = jnp.arange(self.rank, dtype=jnp.float32)[None, :]
+        return jnp.cos(0.5 + i * (j + 1.0) * 0.618)
+
+    def _compress(self, compensated):
+        pad = self.rows * self.cols - self.dim
+        mat = jnp.pad(compensated, (0, pad)).reshape(self.rows,
+                                                     self.cols)
+        v, _ = jnp.linalg.qr(self._seed_basis())
+        for _ in range(self.iters):
+            u, _ = jnp.linalg.qr(mat @ v)
+            v, _ = jnp.linalg.qr(mat.T @ u)
+        return {"u": (mat @ v).astype(jnp.float32),
+                "v": v.astype(jnp.float32)}
+
+    def decode(self, payload):
+        u = jnp.asarray(payload["u"], jnp.float32)
+        v = jnp.asarray(payload["v"], jnp.float32)
+        return (u @ v.T).reshape(-1)[:self.dim]

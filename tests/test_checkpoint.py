@@ -156,3 +156,17 @@ def test_manifest_roundtrip_and_refuse(tmp_path):
                          tc, use_trust=True)
     with pytest.raises(ValueError, match="fed.attack"):
         check_manifest(mgr.read_manifest(), other)
+    # a mismatched compressed-exchange config must refuse too: resuming
+    # an int8 run with a dense trainer (or vice versa) would silently
+    # drop / fabricate the error-feedback buffer (DESIGN.md §12)
+    compressed = run_manifest(
+        cfg, dataclasses.replace(fed, compressor="int8"), tc,
+        use_trust=True)
+    with pytest.raises(ValueError, match="fed.compressor"):
+        check_manifest(mgr.read_manifest(), compressed)
+    rechunked = run_manifest(
+        cfg, dataclasses.replace(fed, compressor="int8",
+                                 compressor_kwargs={"chunk": 64}),
+        tc, use_trust=True)
+    with pytest.raises(ValueError, match="fed.compressor_kwargs"):
+        check_manifest(compressed, rechunked)

@@ -246,3 +246,144 @@ def test_three_backend_equivalence_matrix():
                               results[f"{key}|reference"])
         for backend in ("local", "ring", "allgather"):
             assert batched[backend] == reference[backend], (key, backend)
+
+
+# --- compressed-exchange rows (DESIGN.md §12) --------------------------
+# {int8, topk} x {sign_flip, mutual_boost} at participation 0.75, plus
+# the identity reference per scenario: the three backends must stay
+# bit-identical to *each other* on the compressed wire (weights, scores
+# and malicious-weight trajectories, the same contract as the dense
+# matrix), and the defence must survive compression — the compressed
+# final-round malicious_weight stays within 2x of the uncompressed
+# row's, so "FedTest still suppresses over a quantised/sparsified
+# exchange" is a committed test, not a claim.
+COMPRESSED_CASES = [
+    (comp, ckw, attack, coalition)
+    for comp, ckw in [("identity", {}), ("int8", {}),
+                      ("topk", {"k": 0.05})]
+    for attack, coalition in [("sign_flip", "none"),
+                              ("none", "mutual_boost")]]
+
+COMPRESSED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.config import FedConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import FederatedTrainer
+from repro.core.engine import (
+    init_comp_state, make_allgather_round, make_distributed_round,
+    round_keys)
+from repro.core.scoring import init_scores
+from repro.data import MNIST_LIKE, make_federated_image_dataset, \
+    sample_client_batches
+from repro.models import build_model
+
+N = 4
+ROUNDS = %(rounds)d
+CASES = %(cases)r
+cfg = get_config("fedtest-cnn-mnist").replace(cnn_channels=(4, 8, 8),
+                                              cnn_hidden=16)
+model = build_model(cfg)
+tc = TrainConfig(optimizer="sgd", lr=0.1, schedule="constant",
+                 batch_size=8, grad_clip=0.0, remat=False)
+data = make_federated_image_dataset(MNIST_LIKE, N, num_samples=1600,
+                                    global_test=256, seed=0,
+                                    partition_kwargs={"min_classes": 8,
+                                                      "max_classes": 10})
+mesh = Mesh(np.asarray(jax.devices()[:N]), ("clients",))
+tx, ty = data.test.xs[:, :64], data.test.ys[:, :64]
+
+results = {}
+for comp_name, comp_kwargs, attack, coalition in CASES:
+    fed = FedConfig(num_users=N, num_testers=N,
+                    num_malicious=0 if attack == "none" else 1,
+                    attack=attack, attack_scale=4.0,
+                    coalition=coalition,
+                    coalition_size=0 if coalition == "none" else 2,
+                    participation=0.75, local_steps=6,
+                    compressor=comp_name,
+                    compressor_kwargs=comp_kwargs, seed=0)
+
+    trainer = FederatedTrainer(model, fed, tc, eval_batch=64)
+    state = trainer.init(jax.random.PRNGKey(0))
+    run_key = state.key
+    traj = {b: {"w": [], "s": [], "mal_w": []}
+            for b in ("local", "ring", "allgather")}
+    for r in range(ROUNDS):
+        state, m = trainer.run_round(state, data)
+        traj["local"]["w"].append(np.asarray(m["weights"]).tolist())
+        traj["local"]["s"].append(np.asarray(m["scores"]).tolist())
+        traj["local"]["mal_w"].append(float(m["malicious_weight"]))
+    assert trainer.num_traces == 1, trainer.num_traces
+
+    pk, _ = jax.random.split(jax.random.PRNGKey(0))
+    for exchange, make in [("ring", make_distributed_round),
+                           ("allgather", make_allgather_round)]:
+        round_fn = jax.jit(make(model, fed, tc, mesh,
+                                counts=data.train.counts))
+        g = model.init(pk)
+        s = init_scores(N)
+        comp = init_comp_state(fed, model)   # None when identity
+        for r in range(ROUNDS):
+            key = jax.random.fold_in(run_key, r)
+            bx, by = sample_client_batches(round_keys(key).batch,
+                                           data.train, fed.local_steps,
+                                           tc.batch_size)
+            if comp is not None:
+                g, s, comp, m = round_fn(g, s, comp, bx, by, tx, ty,
+                                         key, jnp.asarray(r, jnp.int32))
+            else:
+                g, s, m = round_fn(g, s, bx, by, tx, ty, key,
+                                   jnp.asarray(r, jnp.int32))
+            traj[exchange]["w"].append(np.asarray(m["weights"]).tolist())
+            traj[exchange]["s"].append(np.asarray(m["scores"]).tolist())
+            traj[exchange]["mal_w"].append(float(m["malicious_weight"]))
+    results["|".join(map(str, (comp_name, attack, coalition)))] = traj
+
+print(json.dumps(results))
+""" % {"rounds": ROUNDS, "cases": COMPRESSED_CASES}
+
+
+@pytest.mark.slow
+def test_compressed_backend_equivalence_and_suppression():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", COMPRESSED_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    results = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    for comp_name, _ckw, attack, coalition in COMPRESSED_CASES:
+        traj = results["|".join(map(str, (comp_name, attack, coalition)))]
+        ref = traj["local"]
+        for backend in ("ring", "allgather"):
+            other = traj[backend]
+            tag = (comp_name, attack, coalition, backend)
+            for r in range(ROUNDS):
+                np.testing.assert_array_equal(
+                    np.asarray(ref["s"][r]), np.asarray(other["s"][r]),
+                    err_msg=f"scores diverged {tag} round {r}")
+                np.testing.assert_array_equal(
+                    np.asarray(ref["w"][r]), np.asarray(other["w"][r]),
+                    err_msg=f"weights diverged {tag} round {r}")
+                assert ref["mal_w"][r] == other["mal_w"][r], (tag, r)
+
+    # suppression survives the lossy wire: the compressed final-round
+    # malicious weight stays within 2x of the identity row's (floored
+    # at 0.05 absolute so a fully-suppressed baseline cannot demand
+    # the impossible of a quantised run)
+    for attack, coalition in [("sign_flip", "none"),
+                              ("none", "mutual_boost")]:
+        base = results[f"identity|{attack}|{coalition}"]["local"]
+        bar = 2.0 * max(base["mal_w"][-1], 0.05)
+        for comp_name in ("int8", "topk"):
+            row = results[f"{comp_name}|{attack}|{coalition}"]["local"]
+            assert row["mal_w"][-1] <= bar, (
+                comp_name, attack, coalition, row["mal_w"][-1], bar)
